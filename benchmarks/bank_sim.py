@@ -1,0 +1,102 @@
+"""Fig. 7a reproduction: cycle-accurate bank-conflict model of MSGS.
+
+TPU VMEM has no software-visible banks, so the paper's inter-level-parallel
+claim (3.06x MSGS throughput over intra-level) cannot be measured on-chip;
+we reproduce it STRUCTURALLY with an address-replay simulator of the DEFA
+memory system: 16 single-port SRAM banks, 4 bilinear samples (16 pixel
+reads) issued per cycle.
+
+  * intra-level (Fig. 5a): 4 sampling points from the SAME level; pixels of
+    the level interleave across all 16 banks by flat address. Reads to the
+    same bank in one group serialize -> stall cycles.
+  * inter-level (Fig. 5b, DEFA): 4 points from 4 DIFFERENT levels; each
+    level owns 4 banks and the 2x2 "Neighbor Window" maps a bilinear quad's
+    corners to the 4 distinct banks: bank = 4*level + (y&1)*2 + (x&1).
+    The four corners of any bilinear sample are {x0,x0+1}x{y0,y0+1} — one
+    even/odd pair each way — so the quad ALWAYS hits 4 distinct banks and
+    the level separation makes the 4 quads disjoint: zero conflicts by
+    construction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+N_BANKS = 16
+POINTS_PER_CYCLE = 4
+
+
+def _sample_points(rng, n_queries: int, level_shapes, n_points: int,
+                   concentration: float = 2.0):
+    """Synthesize sampling coordinates: reference points uniform over the
+    image, offsets Laplace-ish concentrated near the reference (trained
+    MSDeformAttn offsets are small — concentration mimics that)."""
+    pts = []
+    for li, (h, w) in enumerate(level_shapes):
+        ref = rng.uniform(0, 1, (n_queries, 2))
+        off = rng.laplace(0, concentration, (n_queries, n_points, 2))
+        x = np.clip(ref[:, None, 0] * w + off[..., 0], 0, w - 1.001)
+        y = np.clip(ref[:, None, 1] * h + off[..., 1], 0, h - 1.001)
+        pts.append(np.stack([x, y], -1))                   # (Q, P, 2)
+    return pts                                             # list per level
+
+
+def _corners(x, y):
+    x0 = np.floor(x).astype(np.int64)
+    y0 = np.floor(y).astype(np.int64)
+    return [(x0, y0), (x0 + 1, y0), (x0, y0 + 1), (x0 + 1, y0 + 1)]
+
+
+def simulate(n_queries: int = 512, level_shapes=((100, 167), (50, 84),
+                                                 (25, 42), (13, 21)),
+             n_points: int = 4, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    pts = _sample_points(rng, n_queries, level_shapes, n_points)
+
+    # ---- intra-level: 4 points of one level per cycle-group ---------------
+    intra_cycles = 0
+    intra_groups = 0
+    for li, (h, w) in enumerate(level_shapes):
+        p = pts[li].reshape(-1, 2)                         # (Q*P, 2)
+        for g in range(0, len(p) - POINTS_PER_CYCLE + 1, POINTS_PER_CYCLE):
+            banks = []
+            for x, y in zip(p[g:g + 4, 0], p[g:g + 4, 1]):
+                for cx, cy in _corners(np.asarray(x), np.asarray(y)):
+                    cx = int(np.clip(cx, 0, w - 1))
+                    cy = int(np.clip(cy, 0, h - 1))
+                    banks.append((cy * w + cx) % N_BANKS)
+            counts = np.bincount(banks, minlength=N_BANKS)
+            intra_cycles += int(counts.max())              # serialized conflicts
+            intra_groups += 1
+
+    # ---- inter-level (DEFA): one point from each of 4 levels per cycle ----
+    inter_cycles = 0
+    inter_groups = 0
+    n_groups = min(p.reshape(-1, 2).shape[0] for p in
+                   [pts[li].reshape(-1, 2) for li in range(4)])
+    flat = [pts[li].reshape(-1, 2) for li in range(4)]
+    for g in range(n_groups):
+        banks = []
+        for li, (h, w) in enumerate(level_shapes):
+            x, y = flat[li][g]
+            for cx, cy in _corners(np.asarray(x), np.asarray(y)):
+                cx = int(np.clip(cx, 0, w - 1))
+                cy = int(np.clip(cy, 0, h - 1))
+                banks.append(4 * li + (cy & 1) * 2 + (cx & 1))
+        counts = np.bincount(banks, minlength=N_BANKS)
+        inter_cycles += int(counts.max())
+        inter_groups += 1
+
+    intra_tp = intra_groups * POINTS_PER_CYCLE / max(intra_cycles, 1)
+    inter_tp = inter_groups * POINTS_PER_CYCLE / max(inter_cycles, 1)
+    return {
+        "intra_cycles_per_group": intra_cycles / max(intra_groups, 1),
+        "inter_cycles_per_group": inter_cycles / max(inter_groups, 1),
+        "throughput_ratio": inter_tp / intra_tp,
+        "inter_conflict_free": inter_cycles == inter_groups,
+        "paper_claim": 3.06,
+    }
+
+
+if __name__ == "__main__":
+    r = simulate()
+    print(r)

@@ -1,0 +1,82 @@
+"""Shared toy-detector training for the accuracy benchmarks (Fig. 6a/6b).
+
+COCO is unavailable offline; the paper's accuracy-vs-pruning experiments are
+reproduced on the synthetic rectangle-detection task at reduced scale. The
+trained checkpoint is cached under results/ so fig6 benchmarks and examples
+share it."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.detector import (
+    DetectorConfig, detection_loss, detector_apply, init_detector)
+from repro.core.encoder import EncoderConfig
+from repro.core.msdeform_attn import MSDeformAttnConfig
+from repro.data.detection import eval_detection_ap, synth_detection_batch
+from repro.optim.adamw import OptConfig, adamw_init, adamw_update
+
+CKPT = "results/toy_detector.pkl"
+
+
+def toy_config(**attn_kw) -> DetectorConfig:
+    attn = MSDeformAttnConfig(d_model=64, n_heads=4, n_levels=4, n_points=4,
+                              **attn_kw)
+    return DetectorConfig(
+        encoder=EncoderConfig(attn=attn, n_blocks=2, d_ffn=128),
+        img_size=64, n_classes=4, backbone_width=24)
+
+
+def train_toy_detector(steps: int = 80, batch: int = 8, seed: int = 0,
+                       log=print, force: bool = False):
+    cfg = toy_config()
+    if os.path.exists(CKPT) and not force:
+        with open(CKPT, "rb") as f:
+            return cfg, pickle.load(f)
+    key = jax.random.PRNGKey(seed)
+    params = init_detector(key, cfg)
+    opt = adamw_init(params)
+    opt_cfg = OptConfig(lr=2e-3, warmup_steps=10, total_steps=steps,
+                        weight_decay=0.0)
+
+    @jax.jit
+    def step_fn(params, opt, img, tc, tb):
+        (loss, extras), grads = jax.value_and_grad(
+            detection_loss, has_aux=True)(params, cfg, img, tc, tb)
+        params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, loss
+
+    for i in range(steps):
+        img, tc, tb, _ = synth_detection_batch(
+            jax.random.fold_in(key, i), batch, cfg.img_size, cfg.level_shapes)
+        params, opt, loss = step_fn(params, opt, img, tc, tb)
+        if i % 20 == 0:
+            log(f"[toy-detr] step {i} loss {float(loss):.4f}")
+    os.makedirs("results", exist_ok=True)
+    host = jax.tree.map(np.asarray, params)
+    with open(CKPT, "wb") as f:
+        pickle.dump(host, f)
+    return cfg, host
+
+
+def eval_ap(cfg: DetectorConfig, params, n_batches: int = 4, batch: int = 8,
+            seed: int = 100) -> float:
+    aps = []
+    for i in range(n_batches):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        img, _, _, gt = synth_detection_batch(key, batch, cfg.img_size,
+                                              cfg.level_shapes)
+        cl, bx, _ = detector_apply(params, cfg, img)
+        aps.append(eval_detection_ap(cl, bx, gt, n_classes=cfg.n_classes))
+    return float(np.mean(aps))
+
+
+def with_attn(cfg: DetectorConfig, **attn_kw) -> DetectorConfig:
+    attn = dataclasses.replace(cfg.encoder.attn, **attn_kw)
+    enc = dataclasses.replace(cfg.encoder, attn=attn)
+    return dataclasses.replace(cfg, encoder=enc)

@@ -1,0 +1,64 @@
+"""CPU micro-benchmarks: wall-time per call for the kernel paths (interpret
+mode — structural, NOT TPU performance) and the toy LM substrate. These
+exist to track relative regressions and to populate the us_per_call CSV;
+TPU performance claims live in the roofline analysis instead."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)                                   # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run(log=print) -> list[tuple[str, float, str]]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    b, nq, h, k, dh, n_pix = 1, 512, 8, 16, 32, 1000
+    v = jax.random.normal(key, (b, n_pix, h, dh))
+    lvl = jax.random.randint(key, (b, nq, h, k), 0, 4)
+    wl = jnp.take(jnp.asarray([25, 15, 10, 5]), lvl).astype(jnp.int32)
+    hl = jnp.take(jnp.asarray([20, 10, 8, 4]), lvl).astype(jnp.int32)
+    st = jnp.take(jnp.asarray([0, 500, 650, 730]), lvl).astype(jnp.int32)
+    x = jax.random.uniform(key, (b, nq, h, k), minval=0, maxval=20.0)
+    y = jax.random.uniform(jax.random.fold_in(key, 1), (b, nq, h, k),
+                           minval=0, maxval=16.0)
+    p = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 2),
+                                         (b, nq, h, k)), axis=-1)
+
+    t_fused = _time(lambda: ops.msgs_fused(v, x, y, st, wl, hl, p, block_q=128))
+    rows.append(("msgs_fused_pallas_interp", t_fused, "structural"))
+    jref = jax.jit(ref.msgs_fused_ref)
+    t_ref = _time(lambda: jref(v, x, y, st, wl, hl, p))
+    rows.append(("msgs_ref_jnp", t_ref, "oracle"))
+    juf = jax.jit(ref.msgs_unfused_ref)
+    t_uf = _time(lambda: juf(v, x, y, st, wl, hl, p))
+    rows.append(("msgs_unfused_jnp", t_uf, "materializing baseline"))
+
+    xm = jax.random.normal(key, (256, 256))
+    wm = jax.random.normal(jax.random.fold_in(key, 3), (256, 256))
+    rows.append(("matmul_pallas_interp",
+                 _time(lambda: ops.matmul(xm, wm, bm=128, bn=128, bk=128)),
+                 "structural"))
+
+    qd = jax.random.normal(key, (2, 8, 64))
+    kd = jax.random.normal(jax.random.fold_in(key, 4), (2, 1024, 2, 64))
+    vd = jax.random.normal(jax.random.fold_in(key, 5), (2, 1024, 2, 64))
+    ok = jnp.ones((2, 1024), bool)
+    rows.append(("flash_decode_pallas_interp",
+                 _time(lambda: ops.flash_decode(qd, kd, vd, ok, chunk=256)),
+                 "structural"))
+
+    for name, t, d in rows:
+        log(f"[micro] {name}: {t:.1f} us ({d})")
+    return rows

@@ -1,0 +1,101 @@
+"""Aggregate results/dryrun/*.json into the §Roofline table (markdown).
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_all(out_dir: str = "results/dryrun") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        tag = os.path.basename(path)[:-5]
+        arch, shape, mesh = tag.split("__")
+        rf = r["roofline"]
+        ma = r["memory"]
+        rows.append({
+            "arch": arch, "shape": shape, "mesh": mesh,
+            "t_compute_ms": rf["t_compute_s"] * 1e3,
+            "t_memory_ms": rf["t_memory_s"] * 1e3,
+            "t_collective_ms": rf["t_collective_s"] * 1e3,
+            "dominant": rf["dominant"],
+            "useful": rf.get("useful_flops_ratio", 0.0),
+            "mfu": rf.get("model_flops_util", 0.0),
+            "peak_gib": ma["peak_bytes_per_chip"] / 2**30,
+            "step_ms": rf["roofline_step_s"] * 1e3,
+        })
+    return rows
+
+
+def _mitigation(r: dict) -> str:
+    """One sentence: what would move the dominant term down (per spec)."""
+    dom, arch, shape = r["dominant"], r["arch"], r["shape"]
+    decode = "decode" in shape or "long" in shape
+    if dom == "memory":
+        if decode:
+            return ("KV/state-cache traffic dominates: quantize the cache "
+                    "to int8 (2x) and/or shard it over more chips")
+        return ("activation residency: raise grad-accum / tighten the remat "
+                "policy to cut temp traffic")
+    if dom == "collective":
+        if r["useful"] < 0.3:
+            return ("sharding still wastes compute or reshards: next lever "
+                    "is bf16 collectives + comm/compute overlap (XLA "
+                    "latency-hiding over the layer scan)")
+        if decode:
+            return ("per-token TP all-reduces: batch more requests per step "
+                    "or switch decode to data-parallel replicas")
+        return ("TP activation all-reduces are floor-level: overlap them "
+                "with the next layer's matmuls (latency-hiding scheduler) "
+                "and compress cross-pod grads (optim/compress.py)")
+    return ("compute-bound at high useful ratio: only kernel-level wins "
+            "remain (fused attention kernel, MXU-aligned tiles)") \
+        if r["useful"] > 0.5 else \
+        ("compute-bound but wasteful: remove replicated compute "
+         "(head padding / seq-parallel attention)")
+
+
+def markdown_table(rows: list[dict], mesh: str | None = None,
+                   mitigations: bool = True) -> str:
+    sel = [r for r in rows if mesh is None or r["mesh"] == mesh]
+    sel.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    hdr = ("| arch | shape | mesh | compute ms | memory ms | collective ms | "
+           "dominant | useful | MFU | peak GiB/chip | next lever |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in sel:
+        mit = _mitigation(r) if mitigations else ""
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_ms']:.2f} | {r['t_memory_ms']:.2f} "
+            f"| {r['t_collective_ms']:.2f} | **{r['dominant']}** "
+            f"| {r['useful']:.2f} | {r['mfu']:.3f} | {r['peak_gib']:.2f} "
+            f"| {mit} |")
+    return hdr + "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = load_all()
+    md = markdown_table(rows, args.mesh)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md + "\n")
+    print(md)
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print(f"\ncells: {len(rows)}; dominant-term histogram: {doms}")
+
+
+if __name__ == "__main__":
+    main()

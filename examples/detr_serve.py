@@ -1,0 +1,66 @@
+"""End-to-end driver: batched DETR-encoder serving with DEFA (the paper's
+deployment scenario — MSDeformAttn inference acceleration).
+
+Streams batches of synthetic images through the conv backbone + deformable
+encoder + detection head, with the DEFA stack enabled, and reports
+throughput and the realized pruning ratios per batch.
+
+  PYTHONPATH=src python examples/detr_serve.py --batches 4 --batch 8
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.detr_toy import toy_config, train_toy_detector, with_attn
+from repro.core.detector import detector_apply
+from repro.data.detection import eval_detection_ap, synth_detection_batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg, params = train_toy_detector()
+    serve_cfg = with_attn(cfg, pap_mode="topk", pap_keep=6,
+                          fwp_mode="compact", fwp_k=1.0, fwp_capacity=0.6,
+                          range_narrow=(8.0, 6.0, 4.0, 3.0),
+                          act_bits=12, weight_bits=12)
+
+    fwd = jax.jit(lambda p, img: detector_apply(p, serve_cfg, img,
+                                                collect_stats=True))
+    key = jax.random.PRNGKey(42)
+    img, _, _, gt = synth_detection_batch(key, args.batch, cfg.img_size,
+                                          cfg.level_shapes)
+    jax.block_until_ready(fwd(params, img))          # warm compile
+
+    total = 0
+    t0 = time.time()
+    aps = []
+    for i in range(args.batches):
+        img, _, _, gt = synth_detection_batch(
+            jax.random.fold_in(key, i), args.batch, cfg.img_size,
+            cfg.level_shapes)
+        cls, box, aux = fwd(params, img)
+        jax.block_until_ready(cls)
+        total += args.batch
+        aps.append(eval_detection_ap(cls, box, gt))
+        keep = [float(b["pap_keep_frac"]) for b in aux["blocks"]]
+        fwp = [float(b["fwp_keep_frac"]) for b in aux["blocks"][:-1]]
+        print(f"batch {i}: PAP kept {np.mean(keep):.1%} of sampling points, "
+              f"FWP kept {np.mean(fwp):.1%} of pixels, AP={aps[-1]:.3f}")
+    dt = time.time() - t0
+    print(f"\n[serve] {total} images in {dt:.2f}s = {total/dt:.2f} img/s "
+          f"(CPU; TPU projection comes from the dry-run roofline), "
+          f"mean AP {np.mean(aps):.3f}")
+
+
+if __name__ == "__main__":
+    main()

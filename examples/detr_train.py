@@ -1,0 +1,38 @@
+"""End-to-end driver: train the toy deformable detector (conv backbone +
+MSDeformAttn encoder + detection head) on synthetic rectangle detection,
+then compare AP of the exact model vs the DEFA-pruned model.
+
+  PYTHONPATH=src python examples/detr_train.py --steps 80
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.detr_toy import (
+    eval_ap, toy_config, train_toy_detector, with_attn)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    ap.add_argument("--force", action="store_true", help="retrain")
+    args = ap.parse_args()
+
+    cfg, params = train_toy_detector(steps=args.steps, force=args.force)
+    ap_base = eval_ap(cfg, params)
+    print(f"\nAP (exact MSDeformAttn):      {ap_base:.4f}")
+
+    defa = with_attn(cfg, pap_mode="threshold", pap_threshold=0.02,
+                     fwp_mode="compact", fwp_k=1.0, fwp_capacity=0.6,
+                     range_narrow=(8.0, 6.0, 4.0, 3.0),
+                     act_bits=12, weight_bits=12)
+    ap_defa = eval_ap(defa, params)
+    print(f"AP (DEFA: FWP+PAP+RN+INT12):  {ap_defa:.4f}  "
+          f"(delta {ap_defa - ap_base:+.4f}; paper's COCO deltas sum to ~-1.4 "
+          f"AP before finetuning recovery)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Fault-tolerant LM training demo: checkpoint/restart across an injected
+node failure, with bitwise-identical convergence to an uninterrupted run.
+
+  PYTHONPATH=src python examples/fault_tolerant_train.py
+"""
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data.tokens import TokenDataConfig, synth_token_batch
+from repro.optim.adamw import OptConfig
+from repro.train.loop import (
+    FailureInjector, SimulatedNodeFailure, TrainLoopConfig, train_loop)
+from repro.train.step import build_train_step, make_train_state
+
+
+def main():
+    cfg = get_smoke_config("deepseek-7b")
+    data = TokenDataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                           global_batch=8, seed=1)
+    opt = OptConfig(lr=3e-3, warmup_steps=3, total_steps=24)
+    loop_cfg = TrainLoopConfig(total_steps=24, ckpt_every=8, log_every=4)
+    step_fn = jax.jit(build_train_step(cfg, opt))
+    batch_fn = lambda s: synth_token_batch(data, s)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="ft_demo_")
+    try:
+        print("=== run A: crash injected at step 13 ===")
+        state = make_train_state(jax.random.PRNGKey(0), cfg)
+        try:
+            train_loop(state, step_fn, batch_fn, loop_cfg, ckpt_dir=ckpt_dir,
+                       injector=FailureInjector(fail_at_step=13))
+        except SimulatedNodeFailure as e:
+            print(f"!! {e} — node lost, restarting from checkpoint")
+
+        print("=== run A': restart (fresh process state + checkpoint) ===")
+        state2 = make_train_state(jax.random.PRNGKey(0), cfg)
+        state2, stats2 = train_loop(state2, step_fn, batch_fn, loop_cfg,
+                                    ckpt_dir=ckpt_dir)
+
+        print("=== run B: uninterrupted reference ===")
+        ref = make_train_state(jax.random.PRNGKey(0), cfg)
+        ref, stats_ref = train_loop(ref, step_fn, batch_fn, loop_cfg,
+                                    ckpt_dir=None)
+
+        deltas = [float(np.abs(np.asarray(a, np.float32)
+                               - np.asarray(b, np.float32)).max())
+                  for a, b in zip(jax.tree.leaves(state2.params),
+                                  jax.tree.leaves(ref.params))]
+        print(f"\nmax param delta (restarted vs uninterrupted): {max(deltas):.2e}")
+        assert max(deltas) < 1e-5, "restart must be deterministic!"
+        print("crash -> restart -> IDENTICAL final params  [OK]")
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

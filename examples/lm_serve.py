@@ -1,0 +1,53 @@
+"""Continuous-batching LM serving demo (vLLM-style slots over ring caches).
+
+Serves a smoke-scale arch from the assigned pool with mixed prompt lengths;
+shows requests entering/leaving slots while decode proceeds.
+
+  PYTHONPATH=src python examples/lm_serve.py --arch granite-20b
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.registry import get_api
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-20b")
+    ap.add_argument("--requests", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, params, ServeConfig(max_batch=4, cache_len=96))
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 32))
+        engine.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                                         plen),
+                              max_new_tokens=int(rng.integers(8, 24))))
+    t0 = time.time()
+    steps = 0
+    while engine.queue or engine.active.any() or steps == 0:
+        n_active = engine.step()
+        steps += 1
+        if steps % 8 == 0:
+            print(f"step {steps}: {n_active} active slots, "
+                  f"{len(engine.queue)} queued, {len(engine.finished)} done")
+        if steps > 500:
+            break
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in engine.finished)
+    print(f"\n[lm-serve] {len(engine.finished)}/{args.requests} requests, "
+          f"{toks} tokens, {steps} engine steps, {toks/dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: MSDeformAttn + the DEFA optimization stack in 60 lines.
+
+Builds the paper's operator, runs the exact oracle and the DEFA-optimized
+path (PAP top-k + FWP compaction + range-narrowing + INT12), validates the
+fused Pallas kernel against both, and prints the measured sparsity.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.msdeform_attn import (
+    MSDeformAttnConfig, init_msdeform_attn, msdeform_attn_apply,
+    msdeform_attn_ref)
+
+LEVELS = ((32, 40), (16, 20), (8, 10), (4, 5))
+N_IN = sum(h * w for h, w in LEVELS)
+B, NQ, D = 2, 256, 128
+
+key = jax.random.PRNGKey(0)
+cfg = MSDeformAttnConfig(d_model=D, n_heads=8)
+params = init_msdeform_attn(key, cfg)
+k1, k2, k3 = jax.random.split(key, 3)
+query = jax.random.normal(k1, (B, NQ, D))
+fmaps = jax.random.normal(k2, (B, N_IN, D))
+refs = jax.random.uniform(k3, (B, NQ, 2))
+
+# 1. exact oracle --------------------------------------------------------
+out_exact = msdeform_attn_ref(params, cfg, query, refs, fmaps, LEVELS)
+print(f"exact MSDeformAttn: out {out_exact.shape}")
+
+# 2. DEFA stack (jnp execution) -----------------------------------------
+defa = MSDeformAttnConfig(
+    d_model=D, n_heads=8,
+    pap_mode="topk", pap_keep=6,               # keep 6 of 16 points
+    fwp_mode="compact", fwp_k=1.0, fwp_capacity=0.6,
+    range_narrow=(16.0, 12.0, 8.0, 4.0),
+    act_bits=12, weight_bits=12)
+# block k produces the fmap mask for block k+1: chain two calls
+_, aux = msdeform_attn_apply(params, defa, query, refs, fmaps, LEVELS,
+                             collect_stats=True)
+out_defa, aux2 = msdeform_attn_apply(params, defa, query, refs, fmaps, LEVELS,
+                                     fwp_state=aux["fwp_state"],
+                                     collect_stats=True)
+err = float(jnp.mean(jnp.abs(out_defa - out_exact)))
+print(f"DEFA (PAP 6/16 + FWP 60% + RN + INT12): mean |delta| = {err:.4f}")
+print(f"  points kept: {float(aux2['pap_keep_frac']):.2%}  "
+      f"pixels kept: {float(aux2['fwp_keep_frac']):.2%}")
+
+# 3. fused Pallas kernel (interpret mode on CPU) -------------------------
+defa_pallas = MSDeformAttnConfig(
+    d_model=D, n_heads=8, pap_mode="topk", pap_keep=6,
+    fwp_mode="compact", fwp_k=1.0, fwp_capacity=0.6,
+    range_narrow=(16.0, 12.0, 8.0, 4.0), act_bits=12, weight_bits=12,
+    impl="pallas")
+out_kernel, _ = msdeform_attn_apply(params, defa_pallas, query, refs, fmaps,
+                                    LEVELS, fwp_state=aux["fwp_state"])
+np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_defa),
+                           rtol=1e-4, atol=1e-4)
+print("fused MSGS+aggregation Pallas kernel == jnp path  [OK]")

@@ -1,0 +1,17 @@
+"""repro — DEFA (MSDeformAttn acceleration) reproduced as a multi-pod JAX framework.
+
+Layers:
+  core/         the paper's contribution: MSDeformAttn + FWP/PAP/range-narrowing/quant
+  kernels/      Pallas TPU kernels (fused MSGS+aggregation, windowed reuse, matmul)
+  models/       LM model zoo substrate (dense GQA, MoE, SSD, hybrid, enc-dec, VLM)
+  configs/      assigned architectures + paper's DETR-family configs
+  data/         deterministic synthetic data pipelines
+  optim/        AdamW, ZeRO sharding, grad compression
+  train/        train-step builder (scan, remat, grad accumulation)
+  serve/        KV/SSM caches, prefill/decode, continuous batcher
+  checkpoint/   atomic sharded checkpoints, elastic re-sharding
+  distributed/  mesh + logical sharding rules
+  launch/       mesh.py, dryrun.py, train.py, serve.py
+"""
+
+__version__ = "1.0.0"

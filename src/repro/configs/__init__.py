@@ -1,0 +1,35 @@
+"""Architecture registry: the 10 assigned archs + the paper's DETR family."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.common import ModelConfig
+
+_ARCH_MODULES = {
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "granite-20b": "repro.configs.granite_20b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+}
+
+ARCH_IDS = list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_ARCH_MODULES[arch]).SMOKE
+
+
+def get_detr_config(name: str):
+    from repro.configs.detr_family import CONFIGS
+    return CONFIGS[name]

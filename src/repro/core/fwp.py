@@ -1,0 +1,122 @@
+"""Frequency-Weighted fmap Pruning (FWP) — paper §3.1 (contribution C1).
+
+Block *k* of the encoder counts, for every pixel of the multi-scale fmaps,
+how many times bilinear interpolation touched it (each of the 4 neighbours
+of a surviving sampling point counts 1). Pixels whose frequency falls below
+``T_l = k_h · mean_l(F)`` (per level, Eq. 2) are pruned *in the next block*:
+their value projection and their memory traffic are eliminated.
+
+Two executions of the same algorithm:
+
+  * ``mask`` mode — paper-faithful semantics: pruned pixels contribute zero;
+    implemented as a multiplicative mask on the value projection input.
+    (On the ASIC the mask gates SRAM fetches; on TPU a mask alone saves no
+    work — kept for accuracy studies and as the semantics oracle.)
+  * ``compact`` mode — the TPU-native realization: a *static-capacity*
+    keep-list per level (top-``cap_l`` pixels by frequency). The value
+    projection runs only on survivors (``cap × D`` matmul: real FLOP and
+    HBM-byte reduction), and grid-sampling indexes the compacted buffer
+    through a pixel→slot indirection with a zero sentinel row.
+
+``compact`` == ``mask`` == exact-pruning whenever the capacity covers every
+above-threshold pixel (property-tested).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class FWPState(NamedTuple):
+    """Mask/keep-list produced by block k, consumed by block k+1."""
+    keep_mask: jnp.ndarray          # (B, N_in) bool  — mask mode semantics
+    keep_idx: Optional[jnp.ndarray]   # (B, cap) int32 — compact mode
+    pix2slot: Optional[jnp.ndarray]   # (B, N_in) int32; pruned -> cap (sentinel)
+    freq: jnp.ndarray               # (B, N_in) float32 raw counts
+
+
+def level_starts(level_shapes: Sequence[Tuple[int, int]]) -> Tuple[np.ndarray, int]:
+    sizes = [h * w for h, w in level_shapes]
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int32)
+    return starts, int(sum(sizes))
+
+
+def level_capacities(level_shapes, capacity: float) -> list[int]:
+    return [max(1, int(round(capacity * h * w))) for h, w in level_shapes]
+
+
+def count_frequency(
+    corner_idx: jnp.ndarray,     # (B, M) int32 flat pixel indices (clamped)
+    corner_valid: jnp.ndarray,   # (B, M) float/bool — in-bounds & point kept
+    n_in: int,
+) -> jnp.ndarray:
+    """Scatter-add the sampled-times counter F (paper Fig. 2 right)."""
+    b = corner_idx.shape[0]
+    freq = jnp.zeros((b, n_in), dtype=jnp.float32)
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], corner_idx.shape)
+    return freq.at[bidx, corner_idx].add(corner_valid.astype(jnp.float32))
+
+
+def _per_level_threshold(freq: jnp.ndarray, level_shapes, k: float) -> jnp.ndarray:
+    """T_l = k * mean_l(F), broadcast back to (B, N_in) (Eq. 2)."""
+    starts, _ = level_starts(level_shapes)
+    pieces = []
+    for (h, w), s in zip(level_shapes, starts):
+        f_l = jax.lax.dynamic_slice_in_dim(freq, int(s), h * w, axis=1)
+        t_l = k * jnp.mean(f_l, axis=1, keepdims=True)
+        pieces.append(jnp.broadcast_to(t_l, f_l.shape))
+    return jnp.concatenate(pieces, axis=1)
+
+
+def build_fwp_state(
+    freq: jnp.ndarray,                  # (B, N_in)
+    level_shapes: Sequence[Tuple[int, int]],
+    *,
+    k: float,
+    mode: str,                           # "mask" | "compact"
+    capacity: float = 0.6,
+) -> FWPState:
+    thresholds = _per_level_threshold(freq, level_shapes, k)
+    keep_mask = freq >= thresholds
+    if mode == "mask":
+        return FWPState(keep_mask=keep_mask, keep_idx=None, pix2slot=None, freq=freq)
+
+    if mode != "compact":
+        raise ValueError(f"unknown FWP mode {mode!r}")
+    starts, n_in = level_starts(level_shapes)
+    caps = level_capacities(level_shapes, capacity)
+    cap_total = sum(caps)
+    b = freq.shape[0]
+
+    keep_parts, slot_parts = [], []
+    slot_off = 0
+    # Rank pixels by (above-threshold, frequency): capacity fills with the
+    # most frequently sampled surviving pixels first. Below-threshold pixels
+    # may pad the capacity (static shapes) but are NEVER routed to — the
+    # threshold mask is strictly honoured, so compact == mask whenever the
+    # capacity covers every survivor (property-tested).
+    score = freq + keep_mask.astype(jnp.float32) * (jnp.max(freq) + 1.0)
+    for li, ((h, w), s, c) in enumerate(zip(level_shapes, starts, caps)):
+        score_l = jax.lax.dynamic_slice_in_dim(score, int(s), h * w, axis=1)
+        _, idx_l = jax.lax.top_k(score_l, c)                      # (B, c)
+        keep_parts.append(idx_l.astype(jnp.int32) + int(s))
+        slot_parts.append(slot_off + jnp.arange(c, dtype=jnp.int32))
+        slot_off += c
+    keep_idx = jnp.concatenate(keep_parts, axis=1)                # (B, cap_total)
+    slots = jnp.concatenate(slot_parts)                           # (cap_total,)
+
+    pix2slot = jnp.full((b, n_in), cap_total, dtype=jnp.int32)    # sentinel
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], keep_idx.shape)
+    surviving = jnp.take_along_axis(keep_mask, keep_idx, axis=1)  # (B, cap_total)
+    slot_or_sentinel = jnp.where(
+        surviving, jnp.broadcast_to(slots, keep_idx.shape), cap_total)
+    pix2slot = pix2slot.at[bidx, keep_idx].set(slot_or_sentinel)
+    return FWPState(keep_mask=keep_mask, keep_idx=keep_idx, pix2slot=pix2slot, freq=freq)
+
+
+def fwp_sparsity(state: FWPState) -> jnp.ndarray:
+    """Fraction of pixels pruned (paper reports ≈43%)."""
+    return 1.0 - jnp.mean(state.keep_mask.astype(jnp.float32))

@@ -1,0 +1,332 @@
+"""Multi-Scale Deformable Attention with the DEFA optimization stack.
+
+Implements Eq. 1 of the paper:
+
+    MSDeformAttn(Q, P, X) = Concat(H_0 .. H_{Nh-1}) W^O
+    H_ij = softmax(Q_i W^A_j) · V_j(P_i + ΔP_ij),  V = X W^V,  ΔP = Q W^S
+
+plus the DEFA dataflow (paper §4.1): PAP on the attention probabilities,
+FWP on the value projection (mask from the *previous* block), level-wise
+range-narrowing of the offsets, INT12 fake-quantization, and the fused
+MSGS+aggregation execution (jnp flat-gather or the Pallas kernel).
+
+Conventions (match the official Deformable-DETR):
+  * reference points normalized to [0,1]² and shared across levels;
+  * sampling_location_l = ref + ΔP_l / (W_l, H_l)  (offsets in pixel units);
+  * grid_sample semantics align_corners=False, zero padding:
+    pixel-space x = loc_x · W_l − 0.5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fwp as fwp_lib
+from repro.core import pap as pap_lib
+from repro.core.quant import maybe_fake_quant
+
+
+# --------------------------------------------------------------------------
+# Config / params
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MSDeformAttnConfig:
+    d_model: int = 256
+    n_heads: int = 8
+    n_levels: int = 4
+    n_points: int = 4
+    # --- DEFA algorithm knobs ---------------------------------------------
+    pap_mode: str = "off"                # off | threshold | topk
+    pap_threshold: float = 0.02
+    pap_keep: int = 4                    # topk mode: points kept of n_levels*n_points
+    fwp_mode: str = "off"                # off | mask | compact
+    fwp_k: float = 1.0                   # Eq. 2 hyper-parameter
+    fwp_capacity: float = 0.6            # compact mode keep fraction
+    range_narrow: Optional[Tuple[float, ...]] = None   # per-level |offset| bound (px)
+    act_bits: Optional[int] = None       # 12 => INT12 fake-quant (paper default)
+    weight_bits: Optional[int] = None
+    impl: str = "jnp"                    # jnp | pallas
+    dtype: Any = jnp.float32
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_lp(self) -> int:
+        return self.n_levels * self.n_points
+
+
+def init_msdeform_attn(key: jax.Array, cfg: MSDeformAttnConfig) -> dict:
+    d, h, lp = cfg.d_model, cfg.n_heads, cfg.n_lp
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = 1.0 / np.sqrt(d)
+    # Offset bias: the Deformable-DETR grid init — points start on a ring
+    # around the reference, scaled by point index.
+    thetas = np.arange(h) * (2.0 * np.pi / h)
+    grid = np.stack([np.cos(thetas), np.sin(thetas)], -1)          # (H, 2)
+    grid = grid / np.abs(grid).max(-1, keepdims=True)
+    grid = np.tile(grid[:, None, None, :], (1, cfg.n_levels, cfg.n_points, 1))
+    grid = grid * (np.arange(cfg.n_points) + 1.0)[None, None, :, None]
+    offs_b = grid.reshape(h, lp * 2).astype(np.float32)            # (H, LP*2)
+    return {
+        "attn_w": (jax.random.normal(k1, (d, h, lp)) * scale).astype(cfg.dtype),
+        "attn_b": jnp.zeros((h, lp), cfg.dtype),
+        "offs_w": jnp.zeros((d, h, lp * 2), cfg.dtype),            # zero-init (paper)
+        "offs_b": jnp.asarray(offs_b, cfg.dtype),
+        "value_w": (jax.random.normal(k2, (d, h, cfg.head_dim)) * scale).astype(cfg.dtype),
+        "value_b": jnp.zeros((h, cfg.head_dim), cfg.dtype),
+        "out_w": (jax.random.normal(k3, (h, cfg.head_dim, d)) * scale).astype(cfg.dtype),
+        "out_b": jnp.zeros((d,), cfg.dtype),
+    }
+
+
+def logical_axes(cfg: MSDeformAttnConfig) -> dict:
+    """Logical sharding axes per parameter (see distributed/sharding.py)."""
+    return {
+        "attn_w": ("embed", "heads", None),
+        "attn_b": ("heads", None),
+        "offs_w": ("embed", "heads", None),
+        "offs_b": ("heads", None),
+        "value_w": ("embed", "heads", None),
+        "value_b": ("heads", None),
+        "out_w": ("heads", None, "embed"),
+        "out_b": (None,),
+    }
+
+
+def level_meta(level_shapes: Sequence[Tuple[int, int]]):
+    """Static per-level arrays: flat starts, widths, heights; total N_in."""
+    starts, n_in = fwp_lib.level_starts(level_shapes)
+    ws = np.asarray([w for _, w in level_shapes], np.int32)
+    hs = np.asarray([h for h, _ in level_shapes], np.int32)
+    return jnp.asarray(starts), jnp.asarray(ws), jnp.asarray(hs), n_in
+
+
+# --------------------------------------------------------------------------
+# Reference oracle — independent per-level implementation (no flat tricks)
+# --------------------------------------------------------------------------
+
+def _bilinear_sample_level(v: jnp.ndarray, loc: jnp.ndarray) -> jnp.ndarray:
+    """v: (B, Hl, Wl, nH, Dh); loc: (B, Nq, nH, P, 2) normalized [0,1].
+
+    Returns (B, Nq, nH, P, Dh). align_corners=False, zero padding."""
+    b, hl, wl, nh, dh = v.shape
+    x = loc[..., 0] * wl - 0.5
+    y = loc[..., 1] * hl - 0.5
+    x0 = jnp.floor(x)
+    y0 = jnp.floor(y)
+    t1 = x - x0            # frac along x
+    t0 = y - y0            # frac along y
+
+    def gather(ix, iy):
+        valid = ((ix >= 0) & (ix < wl) & (iy >= 0) & (iy < hl))
+        ixc = jnp.clip(ix, 0, wl - 1).astype(jnp.int32)
+        iyc = jnp.clip(iy, 0, hl - 1).astype(jnp.int32)
+        flat = iyc * wl + ixc                                     # (B,Nq,nH,P)
+        vflat = v.reshape(b, hl * wl, nh, dh)
+        # fold head into batch for take_along_axis
+        vv = vflat.transpose(0, 2, 1, 3).reshape(b * nh, hl * wl, dh)
+        ii = flat.transpose(0, 2, 1, 3).reshape(b * nh, -1)
+        g = jnp.take_along_axis(vv, ii[..., None], axis=1)
+        g = g.reshape(b, nh, flat.shape[1], flat.shape[3], dh).transpose(0, 2, 1, 3, 4)
+        return g * valid[..., None]
+
+    n00 = gather(x0, y0)
+    n10 = gather(x0 + 1, y0)
+    n01 = gather(x0, y0 + 1)
+    n11 = gather(x0 + 1, y0 + 1)
+    w00 = ((1 - t1) * (1 - t0))[..., None]
+    w10 = (t1 * (1 - t0))[..., None]
+    w01 = ((1 - t1) * t0)[..., None]
+    w11 = (t1 * t0)[..., None]
+    return n00 * w00 + n10 * w10 + n01 * w01 + n11 * w11
+
+
+def msdeform_attn_ref(params: dict, cfg: MSDeformAttnConfig,
+                      query: jnp.ndarray, ref_points: jnp.ndarray,
+                      x_flat: jnp.ndarray,
+                      level_shapes: Sequence[Tuple[int, int]]) -> jnp.ndarray:
+    """Pure per-level oracle, no pruning/quant/kernel. (B,Nq,D) out."""
+    b, nq, d = query.shape
+    h, lp, l, p = cfg.n_heads, cfg.n_lp, cfg.n_levels, cfg.n_points
+    logits = jnp.einsum("bnd,dhk->bnhk", query, params["attn_w"]) + params["attn_b"]
+    probs = jax.nn.softmax(logits, axis=-1)                        # (B,Nq,H,LP)
+    offs = jnp.einsum("bnd,dhk->bnhk", query, params["offs_w"]) + params["offs_b"]
+    offs = offs.reshape(b, nq, h, l, p, 2)
+    if cfg.range_narrow is not None:
+        bounds = jnp.asarray(cfg.range_narrow, query.dtype).reshape(1, 1, 1, l, 1, 1)
+        offs = jnp.clip(offs, -bounds, bounds)
+    v = jnp.einsum("bnd,dhk->bnhk", x_flat, params["value_w"]) + params["value_b"]
+
+    starts, _ = fwp_lib.level_starts(level_shapes)
+    out = jnp.zeros((b, nq, h, cfg.head_dim), query.dtype)
+    probs_l = probs.reshape(b, nq, h, l, p)
+    for li, (hl, wl) in enumerate(level_shapes):
+        v_l = jax.lax.dynamic_slice_in_dim(v, int(starts[li]), hl * wl, axis=1)
+        v_l = v_l.reshape(b, hl, wl, h, cfg.head_dim)
+        norm = jnp.asarray([wl, hl], query.dtype)
+        loc = ref_points[:, :, None, None, :] + offs[:, :, :, li] / norm
+        sampled = _bilinear_sample_level(v_l, loc)                 # (B,Nq,H,P,Dh)
+        out = out + jnp.sum(sampled * probs_l[:, :, :, li, :, None], axis=3)
+    out = jnp.einsum("bnhk,hkd->bnd", out, params["out_w"]) + params["out_b"]
+    return out
+
+
+# --------------------------------------------------------------------------
+# DEFA dataflow — flat-gather execution with PAP/FWP/quant + Pallas option
+# --------------------------------------------------------------------------
+
+def _corner_data(x_px, y_px, wl, hl, start):
+    """Per-point corner indices/weights/validity in the flat fmap.
+
+    x_px,y_px,wl,hl,start: (...,) arrays (wl/hl/start already per-point).
+    Returns idx (..., 4) int32, wgt (..., 4), valid (..., 4)."""
+    x0 = jnp.floor(x_px)
+    y0 = jnp.floor(y_px)
+    t1 = x_px - x0
+    t0 = y_px - y0
+    corners = []
+    for dy in (0, 1):
+        for dx in (0, 1):
+            cx = x0 + dx
+            cy = y0 + dy
+            valid = ((cx >= 0) & (cx < wl) & (cy >= 0) & (cy < hl))
+            cxc = jnp.clip(cx, 0, wl - 1).astype(jnp.int32)
+            cyc = jnp.clip(cy, 0, hl - 1).astype(jnp.int32)
+            idx = start + cyc * wl + cxc
+            w = (t1 if dx else (1 - t1)) * (t0 if dy else (1 - t0))
+            corners.append((idx, w, valid))
+    idx = jnp.stack([c[0] for c in corners], axis=-1)
+    wgt = jnp.stack([c[1] for c in corners], axis=-1)
+    valid = jnp.stack([c[2] for c in corners], axis=-1)
+    return idx, wgt, valid
+
+
+def _flat_gather_heads(v: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """v: (B, N, H, Dh); idx: (B, Nq, H, M) -> (B, Nq, H, M, Dh)."""
+    b, n, h, dh = v.shape
+    _, nq, _, m = idx.shape
+    vv = v.transpose(0, 2, 1, 3).reshape(b * h, n, dh)
+    ii = idx.transpose(0, 2, 1, 3).reshape(b * h, nq * m)
+    g = jnp.take_along_axis(vv, ii[..., None], axis=1)
+    return g.reshape(b, h, nq, m, dh).transpose(0, 2, 1, 3, 4)
+
+
+def msdeform_attn_apply(
+    params: dict,
+    cfg: MSDeformAttnConfig,
+    query: jnp.ndarray,                 # (B, Nq, D)
+    ref_points: jnp.ndarray,            # (B, Nq, 2) normalized
+    x_flat: jnp.ndarray,                # (B, N_in, D) raw fmap features
+    level_shapes: Sequence[Tuple[int, int]],
+    fwp_state: Optional[fwp_lib.FWPState] = None,
+    *,
+    collect_stats: bool = False,
+):
+    """DEFA-optimized MSDeformAttn. Returns (out (B,Nq,D), aux dict).
+
+    aux: {"fwp_state": FWPState|None (for the NEXT block),
+          "pap_keep_frac", "fwp_keep_frac", "sampled_frac"} when
+    collect_stats or fwp enabled.
+    """
+    b, nq, d = query.shape
+    h, l, p, lp, dh = cfg.n_heads, cfg.n_levels, cfg.n_points, cfg.n_lp, cfg.head_dim
+    starts, ws, hs, n_in = level_meta(level_shapes)
+    assert x_flat.shape[1] == n_in, (x_flat.shape, n_in)
+    aux: dict = {}
+
+    wq = lambda w: maybe_fake_quant(w, cfg.weight_bits)
+
+    # ---- 1. attention probabilities + PAP (paper dataflow step 1) --------
+    logits = jnp.einsum("bnd,dhk->bnhk", query, wq(params["attn_w"])) + params["attn_b"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = maybe_fake_quant(probs, cfg.act_bits)
+    sel = pap_lib.pap_select(probs, cfg.pap_mode,
+                             threshold=cfg.pap_threshold, k=cfg.pap_keep)
+    k_pts = sel.point_idx.shape[-1]
+
+    # ---- 2. masked sampling-point generation (ΔP) ------------------------
+    offs = jnp.einsum("bnd,dhk->bnhk", query, wq(params["offs_w"])) + params["offs_b"]
+    offs = offs.reshape(b, nq, h, lp, 2)
+    # gather only surviving points' offsets
+    offs_k = jnp.take_along_axis(
+        offs, sel.point_idx[..., None].astype(jnp.int32), axis=3)  # (B,Nq,H,K,2)
+    lvl_of_pt = (sel.point_idx // p).astype(jnp.int32)              # (B,Nq,H,K)
+    wl = jnp.take(ws, lvl_of_pt)
+    hl = jnp.take(hs, lvl_of_pt)
+    st = jnp.take(starts, lvl_of_pt)
+    if cfg.range_narrow is not None:
+        bounds = jnp.take(jnp.asarray(cfg.range_narrow, query.dtype), lvl_of_pt)
+        offs_k = jnp.clip(offs_k, -bounds[..., None], bounds[..., None])
+    offs_k = maybe_fake_quant(offs_k, cfg.act_bits)     # INT12 BI datapath input
+
+    wl_f = wl.astype(query.dtype)
+    hl_f = hl.astype(query.dtype)
+    x_px = ref_points[:, :, None, None, 0] * wl_f + offs_k[..., 0] - 0.5
+    y_px = ref_points[:, :, None, None, 1] * hl_f + offs_k[..., 1] - 0.5
+
+    # ---- 3. FWP-pruned value projection ----------------------------------
+    if fwp_state is not None and cfg.fwp_mode == "compact":
+        cap = fwp_state.keep_idx.shape[1]
+        x_kept = jnp.take_along_axis(x_flat, fwp_state.keep_idx[..., None], axis=1)
+        v = jnp.einsum("bnd,dhk->bnhk", x_kept, wq(params["value_w"])) + params["value_b"]
+        v = jnp.concatenate([v, jnp.zeros((b, 1, h, dh), v.dtype)], axis=1)
+        pix2slot = fwp_state.pix2slot                               # (B, N_in)
+        n_rows = cap + 1
+    elif fwp_state is not None and cfg.fwp_mode == "mask":
+        xm = x_flat * fwp_state.keep_mask[..., None].astype(x_flat.dtype)
+        v = jnp.einsum("bnd,dhk->bnhk", xm, wq(params["value_w"])) + params["value_b"]
+        # masked pixels must contribute EXACT zero (bias would leak):
+        v = v * fwp_state.keep_mask[..., None, None].astype(v.dtype)
+        pix2slot = None
+        n_rows = n_in
+    else:
+        v = jnp.einsum("bnd,dhk->bnhk", x_flat, wq(params["value_w"])) + params["value_b"]
+        pix2slot = None
+        n_rows = n_in
+    v = maybe_fake_quant(v, cfg.act_bits)
+
+    # ---- 4. fused MSGS + aggregation -------------------------------------
+    if cfg.impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+        out_h = kernel_ops.msgs_fused(
+            v, x_px, y_px, st, wl, hl, sel.probs, remap=pix2slot)   # (B,Nq,H,Dh)
+    else:
+        idx, wgt, valid = _corner_data(x_px, y_px, wl, hl, st)      # (B,Nq,H,K,4)
+        if pix2slot is not None:
+            bidx = jnp.arange(b).reshape(b, 1, 1, 1, 1)
+            idx = pix2slot[bidx, idx]                               # pruned -> sentinel
+        eff_w = wgt * valid.astype(wgt.dtype) * sel.probs[..., None]
+        g = _flat_gather_heads(v, idx.reshape(b, nq, h, k_pts * 4))
+        out_h = jnp.sum(g * eff_w.reshape(b, nq, h, k_pts * 4)[..., None], axis=3)
+
+    out = jnp.einsum("bnhk,hkd->bnd", out_h, wq(params["out_w"])) + params["out_b"]
+
+    # ---- 5. FWP frequency counting for the NEXT block --------------------
+    need_freq = cfg.fwp_mode != "off"
+    if need_freq or collect_stats:
+        pt_alive = (sel.probs > 0).astype(jnp.float32)              # pruned pts don't count
+        # frequency is counted in ORIGINAL pixel space (pre-compaction)
+        idx_orig, _, valid_orig = _corner_data(x_px, y_px, wl, hl, st)
+        counted = valid_orig.astype(jnp.float32) * pt_alive[..., None]
+        freq = fwp_lib.count_frequency(
+            idx_orig.reshape(b, -1), counted.reshape(b, -1), n_in)
+        if need_freq:
+            aux["fwp_state"] = fwp_lib.build_fwp_state(
+                freq, level_shapes, k=cfg.fwp_k,
+                mode=cfg.fwp_mode, capacity=cfg.fwp_capacity)
+        if collect_stats:
+            aux["freq"] = freq
+            aux["pap_keep_frac"] = sel.keep_frac
+            aux["point_alive_frac"] = jnp.mean(pt_alive)
+            if "fwp_state" in aux:
+                aux["fwp_keep_frac"] = 1.0 - fwp_lib.fwp_sparsity(aux["fwp_state"])
+            aux["value_rows"] = n_rows
+    return out, aux

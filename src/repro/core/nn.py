@@ -1,0 +1,61 @@
+"""Tiny NN primitives for the DETR-family models (pure jnp, no flax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def linear_init(key, d_in, d_out, dtype=jnp.float32):
+    w = jax.random.normal(key, (d_in, d_out)) * (1.0 / np.sqrt(d_in))
+    return {"w": w.astype(dtype), "b": jnp.zeros((d_out,), dtype)}
+
+
+def linear(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def layer_norm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def conv_init(key, k, c_in, c_out, dtype=jnp.float32):
+    w = jax.random.normal(key, (c_out, c_in, k, k)) * (1.0 / np.sqrt(c_in * k * k))
+    return {"w": w.astype(dtype), "b": jnp.zeros((c_out,), dtype)}
+
+
+def conv2d(p, x, stride=1, padding="SAME"):
+    """x: (B, C, H, W) NCHW."""
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return y + p["b"][None, :, None, None]
+
+
+def sine_pos_embed_2d(h: int, w: int, d: int, temperature: float = 10000.0):
+    """(H*W, D) 2-D sine position embedding (DETR-style)."""
+    assert d % 4 == 0
+    d4 = d // 4
+    ys, xs = np.meshgrid(np.arange(h), np.arange(w), indexing="ij")
+    omega = 1.0 / (temperature ** (np.arange(d4) / d4))
+    out = []
+    for coord in (ys, xs):
+        ang = coord.reshape(-1, 1) * omega[None, :]
+        out.extend([np.sin(ang), np.cos(ang)])
+    return jnp.asarray(np.concatenate(out, axis=1), jnp.float32)
+
+
+def reference_points_for_levels(level_shapes):
+    """Normalized pixel-centre reference points, concatenated: (N_in, 2)."""
+    pts = []
+    for (h, w) in level_shapes:
+        ys, xs = np.meshgrid((np.arange(h) + 0.5) / h, (np.arange(w) + 0.5) / w,
+                             indexing="ij")
+        pts.append(np.stack([xs.reshape(-1), ys.reshape(-1)], axis=1))
+    return jnp.asarray(np.concatenate(pts, axis=0), jnp.float32)

@@ -1,0 +1,2 @@
+from repro.data.detection import synth_detection_batch, eval_detection_ap  # noqa: F401
+from repro.data.tokens import synth_token_batch, TokenDataConfig, token_stream  # noqa: F401

@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    FSDP_RULES,
+    logical_to_spec,
+    specs_for_tree,
+    named_sharding_tree,
+    batch_spec,
+    MeshAxes,
+)

@@ -1,0 +1,138 @@
+"""Activation-sharding constraints (§Perf optimization O1).
+
+The baseline relies on XLA sharding propagation from parameter shardings
+alone; the dry-run HLO showed propagation REPLICATING activations over the
+data axis for several archs (full-global-batch [256,4096,*] tensors inside
+per-layer all-reduces — granite train's collective term was 74.6 s/step).
+The standard fix (MaxText-style) is to pin the batch dim of activations at
+layer boundaries with with_sharding_constraint.
+
+Models are mesh-agnostic, so the policy rides a context variable set by the
+launch layer; when unset every constrain_* call is a no-op (tests and
+single-device runs are unaffected)."""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_POLICY: contextvars.ContextVar = contextvars.ContextVar(
+    "act_sharding_policy", default=None)
+
+
+@contextlib.contextmanager
+def activation_policy(mesh: Mesh, batch_axes, model_axis: Optional[str] = "model",
+                      seq_shard: bool = False):
+    """Enable activation constraints: batch dims -> `batch_axes`.
+
+    seq_shard=True (pure-DP strategy): the model axis carries SEQUENCE
+    parallelism — (B,S,...) streams pin dim 1 to the model axis and weights
+    stay replicated (no per-layer TP all-reduces)."""
+    token = _POLICY.set({"mesh": mesh, "batch": batch_axes,
+                         "model": model_axis if (model_axis in mesh.axis_names)
+                         else None,
+                         "seq": seq_shard})
+    try:
+        yield
+    finally:
+        _POLICY.reset(token)
+
+
+def policy_active() -> bool:
+    return _POLICY.get() is not None
+
+
+def model_axis_size() -> int:
+    """TP degree under the active policy (0 = no policy / no model axis)."""
+    pol = _POLICY.get()
+    if pol is None or pol["model"] is None:
+        return 0
+    return pol["mesh"].shape[pol["model"]]
+
+
+def _constrain(x, spec: P):
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    # drop axes the tensor dims can't honour (divisibility)
+    mesh = pol["mesh"]
+    fixed = []
+    for i, s in enumerate(spec):
+        if s is None:
+            fixed.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        fixed.append(s if x.shape[i] % n == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def constrain_batch(x, n_extra_dims: Optional[int] = None):
+    """Pin dim 0 to the batch axes, rest unsharded. x: (B, ...)."""
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    extra = x.ndim - 1 if n_extra_dims is None else n_extra_dims
+    return _constrain(x, P(pol["batch"], *([None] * extra)))
+
+
+def constrain_stream(x):
+    """Pin a (B, S, ...) residual-stream tensor: batch on dim 0, and — in
+    seq_shard mode — the sequence dim 1 on the model axis."""
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    if pol.get("seq") and pol["model"] is not None and x.ndim >= 3:
+        spec = [None] * x.ndim
+        spec[0] = pol["batch"]
+        spec[1] = pol["model"]
+        return _constrain(x, P(*spec))
+    return constrain_batch(x)
+
+
+def constrain_batch_model(x, model_dim: int):
+    """Pin dim 0 to batch axes and `model_dim` to the model axis (in
+    seq_shard mode the model axis holds the SEQUENCE dim instead)."""
+    pol = _POLICY.get()
+    if pol is None or pol["model"] is None:
+        return constrain_batch(x)
+    if pol.get("seq"):
+        return constrain_stream(x)
+    spec = [None] * x.ndim
+    spec[0] = pol["batch"]
+    spec[model_dim] = pol["model"]
+    return _constrain(x, P(*spec))
+
+
+def constrain_batch_seq(x, seq_dim: int = 1):
+    """Sequence parallelism: pin dim 0 to batch axes and `seq_dim` to the
+    model axis. Used when attention heads don't divide the model axis —
+    every rank computes ALL heads for 1/TP of the queries instead of
+    replicating the whole attention block (O2)."""
+    pol = _POLICY.get()
+    if pol is None or pol["model"] is None:
+        return constrain_batch(x)
+    spec = [None] * x.ndim
+    spec[0] = pol["batch"]
+    spec[seq_dim] = pol["model"]
+    return _constrain(x, P(*spec))
+
+
+def constrain_expert(x, expert_dim: int = 1):
+    """Pin a (B, E, C, D) MoE dispatch buffer: batch on dim 0 AND expert dim
+    on the model axis. (None dims in with_sharding_constraint mean REPLICATE
+    — omitting the batch pin would broadcast every row to every expert rank,
+    which is exactly the 16x blow-up this constraint exists to prevent.)"""
+    pol = _POLICY.get()
+    if pol is None or pol["model"] is None:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = pol["batch"]
+    spec[expert_dim] = pol["model"]
+    return _constrain(x, P(*spec))

@@ -1,0 +1,135 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Every parameter leaf in the model zoo carries a tuple of *logical* axis
+names (one per tensor dim, ``None`` for unsharded dims). A rule table maps
+logical axes onto physical mesh axes ``("pod", "data", "model")``. Two rule
+tables ship by default:
+
+  * DEFAULT_RULES — tensor parallelism only (params replicated over data);
+  * FSDP_RULES    — additionally shards the *fsdp-tagged* dim over "data"
+                    (+"pod" when present), for models that don't fit
+                    replicated (grok-314b, llava-34b, granite-20b).
+
+Logical axes used across the zoo:
+  embed        d_model dim                     -> unsharded (or fsdp)
+  heads        attention-head dim              -> model
+  kv_heads     kv-head dim                     -> model when divisible
+  mlp          ffn hidden dim                  -> model
+  expert       MoE expert dim                  -> model (when E % model == 0)
+  expert_mlp   per-expert ffn dim              -> model (when experts aren't)
+  vocab        vocabulary dim                  -> model
+  conv / state SSM internals                   -> unsharded
+  fsdp         the dim chosen for ZeRO-3       -> ("data",) / ("pod","data")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class MeshAxes:
+    POD = "pod"
+    DATA = "data"
+    MODEL = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping logical axis name -> physical mesh axis (str, tuple or None)."""
+    rules: Mapping[str, Any]
+
+    def physical(self, logical: Optional[str]) -> Any:
+        if logical is None:
+            return None
+        if logical not in self.rules:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        return self.rules[logical]
+
+
+_BASE = {
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert": "model",
+    "expert_mlp": "model",
+    "vocab": "model",
+    "conv": None,
+    "state": None,
+    "fsdp": None,           # DEFAULT: no FSDP
+    "q_per_kv": None,
+    "head_dim": None,
+}
+
+DEFAULT_RULES = AxisRules(dict(_BASE))
+FSDP_RULES = AxisRules({**_BASE, "fsdp": "data"})
+
+
+def fsdp_rules_for_mesh(mesh: Mesh) -> AxisRules:
+    """FSDP over ("pod","data") when the mesh has a pod axis, else ("data",)."""
+    if "pod" in mesh.axis_names:
+        return AxisRules({**_BASE, "fsdp": ("pod", "data")})
+    return FSDP_RULES
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: AxisRules) -> P:
+    """Tuple of logical axis names (len == ndim) -> PartitionSpec."""
+    return P(*[rules.physical(a) for a in axes])
+
+
+def specs_for_tree(logical_tree: Any, rules: AxisRules) -> Any:
+    """Map a pytree of logical-axes tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: logical_to_spec(axes, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide (replicate them).
+
+    Centralized divisibility guard: odd dims (SSD in_proj=3352, 25 heads,
+    vocab=32001, ...) fall back to replication instead of erroring."""
+    new = []
+    for i, s in enumerate(spec):
+        if s is None:
+            new.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        new.append(s if (i < len(shape) and shape[i] % n == 0) else None)
+    return P(*new)
+
+
+def sanitize_specs_tree(spec_tree: Any, shape_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda sp, sh: sanitize_spec(sp, sh.shape, mesh),
+        spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def named_sharding_tree(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_spec(mesh: Mesh, *, replicate: bool = False) -> P:
+    """PartitionSpec for the leading batch dim: shard over (pod, data)."""
+    if replicate:
+        return P(None)
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return P(tuple(axes) if len(axes) > 1 else axes[0])
+
+
+def seq_spec(mesh: Mesh) -> Any:
+    """Axis to shard a sequence dim over (sequence parallelism for batch=1)."""
+    return "data" if "data" in mesh.axis_names else None

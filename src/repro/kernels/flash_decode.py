@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: GQA flash-decode (one query token vs a long KV cache).
+
+The LM-side serving hot-spot: decode_32k/long_500k cells are memory-bound on
+cache reads (EXPERIMENTS.md §Roofline), so the kernel's job is to stream
+K/V through VMEM exactly once at full HBM bandwidth with the softmax fused
+(online max/sum — no score round-trip). Grid: (batch, kv-chunks); the chunk
+axis is SEQUENTIAL and accumulates the online-softmax state in VMEM scratch.
+
+Layout notes for TPU: per (batch, chunk) step the kernel touches
+(C, Hkv·Dh) K/V tiles — C is the sublane dim (multiple of 8), Hkv·Dh the
+lane dim (multiple of 128 for GQA configs with Dh=128). Per-position
+validity (ring-buffer slots, sliding windows) rides a precomputed mask so
+the kernel is oblivious to cache policy."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, m_ref, o_ref, acc_ref, mx_ref, den_ref,
+            *, scale: float, n_rep: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        mx_ref[...] = jnp.full_like(mx_ref, -1e30)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    q = q_ref[0, :, :]                       # (Hq, Dh)
+    k = k_ref[0, :, :, :]                    # (C, Hkv, Dh)
+    v = v_ref[0, :, :, :]
+    valid = m_ref[0, :]                      # (C,)
+
+    hq = q.shape[0]
+    c_len, hkv, dh = k.shape
+    # GQA: repeat kv heads to q heads (broadcast-reshape — a gather with a
+    # captured index table is not allowed inside a Pallas kernel)
+    def rep(t):
+        t = jnp.broadcast_to(t[:, :, None, :], (c_len, hkv, n_rep, dh))
+        return t.reshape(c_len, hkv * n_rep, dh)[:, :hq]
+    kq = rep(k)                              # (C, Hq, Dh)
+    vq = rep(v)
+
+    s = jnp.einsum("hd,chd->hc", q, kq).astype(jnp.float32) * scale
+    s = jnp.where(valid[None, :], s, -1e30)  # (Hq, C)
+
+    m_prev = mx_ref[...]                     # (Hq, 1)
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=1))[:, None]
+    p = jnp.exp(s - m_new)                   # (Hq, C)
+    corr = jnp.exp(m_prev - m_new)           # (Hq, 1)
+    den_ref[...] = den_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr \
+        + jnp.einsum("hc,chd->hd", p, vq.astype(jnp.float32))
+    mx_ref[...] = m_new
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _done():
+        o_ref[0, :, :] = (acc_ref[...] / jnp.maximum(den_ref[...], 1e-20)
+                          ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def flash_decode_pallas(
+    q: jnp.ndarray,       # (B, Hq, Dh) — one new token per sequence
+    k: jnp.ndarray,       # (B, W, Hkv, Dh) cache
+    v: jnp.ndarray,       # (B, W, Hkv, Dh)
+    valid: jnp.ndarray,   # (B, W) bool — slot validity (causality/window)
+    *,
+    chunk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, dh = q.shape
+    _, w, hkv, _ = k.shape
+    n_rep = max(1, -(-hq // hkv))            # ceil: covers hq % hkv != 0
+    assert hkv * n_rep >= hq, (hq, hkv)
+    c = min(chunk, w)
+    pad = (-w) % c
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    wp = w + pad
+    grid = (b, wp // c)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / float(np.sqrt(dh)),
+                          n_rep=n_rep),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hq, dh), lambda bi, ci: (bi, 0, 0)),
+            pl.BlockSpec((1, c, hkv, dh), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, c, hkv, dh), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, c), lambda bi, ci: (bi, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, dh), lambda bi, ci: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((hq, dh), jnp.float32),
+                        pltpu.VMEM((hq, 1), jnp.float32),
+                        pltpu.VMEM((hq, 1), jnp.float32)],
+        interpret=interpret, name="flash_decode",
+    )(q, k, v, valid)
+    return out

@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: fused MSGS (bilinear grid-sampling) + aggregation.
+
+This is DEFA contribution C6 mapped to the TPU: one kernel computes corner
+indices, gathers the four neighbour rows from the value buffer resident in
+VMEM, evaluates the paper's 3-multiplier factorized bilinear form (Eq. 4)
+
+    S = N0 + (N2-N0)·t0 + [(N1-N0) + (N3-N2-N1+N0)·t0]·t1
+
+and immediately applies the probability-weighted aggregation — the sampled
+values never round-trip through HBM (on the ASIC: never leave the PE array).
+
+C5 (inter-level parallelism) maps to the *layout*: the K point axis is
+level-major, so the per-lane gathers of one query spread across the disjoint
+per-level segments of the flat value buffer — the VMEM analogue of "4 points
+from 4 levels hit 4 disjoint bank groups". A cycle-accurate bank model
+(benchmarks/bank_sim.py) quantifies the ASIC-side claim.
+
+Grid: (B, H, Nq/TQ). The whole value table (N_rows, Dh) for one (batch,
+head) is staged in VMEM (DETR-scale fmaps fit comfortably: the paper's
+biggest multi-scale pyramid is ~9.8 MB *before* FWP, ~55% of that after,
+per-head slices are 1/8 of it). For fmaps beyond VMEM use the windowed
+variant (msgs_windowed.py) which exploits C3 range-narrowing + C7 reuse.
+
+TPU alignment note: Dh (typically 32 in DETR-family) is below the 128-lane
+width; production tiling pads Dh→128 or packs 4 heads per lane group. The
+kernel keeps the logical layout; padding is the wrapper's job (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, v_ref, o_ref):
+    v = v_ref[0, :, 0, :]                       # (N_rows, Dh)
+    x = x_ref[0, :, 0, :]                       # (TQ, K)
+    y = y_ref[0, :, 0, :]
+    st = st_ref[0, :, 0, :]
+    wl = wl_ref[0, :, 0, :]
+    hl = hl_ref[0, :, 0, :]
+    probs = p_ref[0, :, 0, :]
+
+    x0 = jnp.floor(x)
+    y0 = jnp.floor(y)
+    t1 = (x - x0)[..., None]                    # frac along x
+    t0 = (y - y0)[..., None]                    # frac along y
+    x0i = x0.astype(jnp.int32)
+    y0i = y0.astype(jnp.int32)
+
+    def corner(dx, dy):
+        cx = x0i + dx
+        cy = y0i + dy
+        valid = (cx >= 0) & (cx < wl) & (cy >= 0) & (cy < hl)
+        idx = st + jnp.clip(cy, 0, hl - 1) * wl + jnp.clip(cx, 0, wl - 1)
+        g = jnp.take(v, idx.reshape(-1), axis=0).reshape(idx.shape + (v.shape[-1],))
+        return g * valid[..., None]
+
+    n0 = corner(0, 0)
+    n1 = corner(1, 0)
+    n2 = corner(0, 1)
+    n3 = corner(1, 1)
+    # Eq. 4 — exactly three multiplies by the fractional coordinates:
+    s = n0 + (n2 - n0) * t0 + ((n1 - n0) + (n3 - n2 - n1 + n0) * t0) * t1
+    o_ref[0, :, 0, :] = jnp.sum(s * probs[..., None], axis=1)
+
+
+def _kernel_remap(x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, r_ref, v_ref, o_ref):
+    """FWP-compact variant: corner pixel -> compacted slot indirection."""
+    v = v_ref[0, :, 0, :]
+    remap = r_ref[0, :]
+    x = x_ref[0, :, 0, :]
+    y = y_ref[0, :, 0, :]
+    st = st_ref[0, :, 0, :]
+    wl = wl_ref[0, :, 0, :]
+    hl = hl_ref[0, :, 0, :]
+    probs = p_ref[0, :, 0, :]
+
+    x0 = jnp.floor(x)
+    y0 = jnp.floor(y)
+    t1 = (x - x0)[..., None]
+    t0 = (y - y0)[..., None]
+    x0i = x0.astype(jnp.int32)
+    y0i = y0.astype(jnp.int32)
+
+    def corner(dx, dy):
+        cx = x0i + dx
+        cy = y0i + dy
+        valid = (cx >= 0) & (cx < wl) & (cy >= 0) & (cy < hl)
+        pix = st + jnp.clip(cy, 0, hl - 1) * wl + jnp.clip(cx, 0, wl - 1)
+        slot = jnp.take(remap, pix.reshape(-1)).reshape(pix.shape)
+        g = jnp.take(v, slot.reshape(-1), axis=0).reshape(pix.shape + (v.shape[-1],))
+        return g * valid[..., None]
+
+    n0 = corner(0, 0)
+    n1 = corner(1, 0)
+    n2 = corner(0, 1)
+    n3 = corner(1, 1)
+    s = n0 + (n2 - n0) * t0 + ((n1 - n0) + (n3 - n2 - n1 + n0) * t0) * t1
+    o_ref[0, :, 0, :] = jnp.sum(s * probs[..., None], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def msgs_fused_pallas(
+    v: jnp.ndarray,                      # (B, N_rows, H, Dh)
+    x_px: jnp.ndarray,                   # (B, Nq, H, K)
+    y_px: jnp.ndarray,
+    start: jnp.ndarray,                  # int32
+    wl: jnp.ndarray,                     # int32
+    hl: jnp.ndarray,                     # int32
+    probs: jnp.ndarray,
+    remap: Optional[jnp.ndarray] = None,  # (B, N_pix) int32
+    *,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, n_rows, h, dh = v.shape
+    _, nq, _, k = x_px.shape
+    tq = min(block_q, nq)
+    pad = (-nq) % tq
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        x_px, y_px, probs = zf(x_px), zf(y_px), zf(probs)
+        start = zf(start)
+        wl = jnp.pad(wl, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1)
+        hl = jnp.pad(hl, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1)
+    nq_p = nq + pad
+    grid = (b, h, nq_p // tq)
+
+    pt_spec = pl.BlockSpec((1, tq, 1, k), lambda bi, hi, qi: (bi, qi, hi, 0))
+    v_spec = pl.BlockSpec((1, n_rows, 1, dh), lambda bi, hi, qi: (bi, 0, hi, 0))
+    out_spec = pl.BlockSpec((1, tq, 1, dh), lambda bi, hi, qi: (bi, qi, hi, 0))
+    out_shape = jax.ShapeDtypeStruct((b, nq_p, h, dh), v.dtype)
+
+    if remap is None:
+        out = pl.pallas_call(
+            _kernel, grid=grid,
+            in_specs=[pt_spec, pt_spec, pt_spec, pt_spec, pt_spec, pt_spec, v_spec],
+            out_specs=out_spec, out_shape=out_shape,
+            interpret=interpret, name="msgs_fused",
+        )(x_px, y_px, start, wl, hl, probs, v)
+    else:
+        r_spec = pl.BlockSpec((1, remap.shape[1]), lambda bi, hi, qi: (bi, 0))
+        out = pl.pallas_call(
+            _kernel_remap, grid=grid,
+            in_specs=[pt_spec, pt_spec, pt_spec, pt_spec, pt_spec, pt_spec,
+                      r_spec, v_spec],
+            out_specs=out_spec, out_shape=out_shape,
+            interpret=interpret, name="msgs_fused_remap",
+        )(x_px, y_px, start, wl, hl, probs, remap, v)
+    return out[:, :nq] if pad else out

@@ -1,0 +1,58 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs as traced Python); on TPU the same calls compile natively.
+``REPRO_FORCE_INTERPRET=0`` forces native mode (for real TPU runs)."""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.msgs_fused import msgs_fused_pallas
+from repro.kernels.msgs_windowed import msgs_windowed_pallas
+from repro.kernels.matmul import matmul_pallas
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_FORCE_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "cpu"
+
+
+def msgs_fused(v, x_px, y_px, start, wl, hl, probs,
+               remap: Optional[jnp.ndarray] = None, *,
+               block_q: int = 128, interpret: Optional[bool] = None):
+    """Fused grid-sample + aggregation. See kernels/msgs_fused.py."""
+    interp = _interpret_default() if interpret is None else interpret
+    return msgs_fused_pallas(v, x_px, y_px, start.astype(jnp.int32),
+                             wl.astype(jnp.int32), hl.astype(jnp.int32),
+                             probs, remap, block_q=block_q, interpret=interp)
+
+
+def msgs_windowed(v2d, x_px, y_px, probs, *, query_level_width: int,
+                  halo: int, block_q: int = 128,
+                  interpret: Optional[bool] = None):
+    """Windowed (range-narrowed, fmap-reusing) grid-sample + aggregation."""
+    interp = _interpret_default() if interpret is None else interpret
+    return msgs_windowed_pallas(v2d, x_px, y_px, probs,
+                                query_level_width=query_level_width,
+                                halo=halo, block_q=block_q, interpret=interp)
+
+
+def matmul(x, w, w_scale=None, *, bm: int = 128, bn: int = 128, bk: int = 128,
+           interpret: Optional[bool] = None):
+    """Tiled MXU matmul; int8-weight variant dequantizes in-kernel."""
+    interp = _interpret_default() if interpret is None else interpret
+    return matmul_pallas(x, w, w_scale, bm=bm, bn=bn, bk=bk, interpret=interp)
+
+
+def flash_decode(q, k, v, valid, *, chunk: int = 512,
+                 interpret: Optional[bool] = None):
+    """Fused one-token GQA decode attention over a (masked) KV cache."""
+    from repro.kernels.flash_decode import flash_decode_pallas
+    interp = _interpret_default() if interpret is None else interpret
+    return flash_decode_pallas(q, k, v, valid, chunk=chunk, interpret=interp)

@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contract: tests sweep shapes/dtypes and
+``assert_allclose`` kernel outputs (interpret=True on CPU) against these."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def msgs_fused_ref(
+    v: jnp.ndarray,        # (B, N_rows, H, Dh)
+    x_px: jnp.ndarray,     # (B, Nq, H, K) absolute pixel x
+    y_px: jnp.ndarray,     # (B, Nq, H, K)
+    start: jnp.ndarray,    # (B, Nq, H, K) int32 flat level start
+    wl: jnp.ndarray,       # (B, Nq, H, K) int32 level width
+    hl: jnp.ndarray,       # (B, Nq, H, K) int32 level height
+    probs: jnp.ndarray,    # (B, Nq, H, K) attention probabilities
+    remap: Optional[jnp.ndarray] = None,   # (B, N_pix) int32 pixel->row
+) -> jnp.ndarray:
+    """Bilinear grid-sample + probability-weighted aggregation. (B,Nq,H,Dh)."""
+    b, n_rows, h, dh = v.shape
+    x0 = jnp.floor(x_px)
+    y0 = jnp.floor(y_px)
+    t1 = x_px - x0
+    t0 = y_px - y0
+
+    def corner(dx, dy):
+        cx = x0 + dx
+        cy = y0 + dy
+        valid = (cx >= 0) & (cx < wl) & (cy >= 0) & (cy < hl)
+        idx = start + jnp.clip(cy, 0, hl - 1).astype(jnp.int32) * wl \
+            + jnp.clip(cx, 0, wl - 1).astype(jnp.int32)
+        if remap is not None:
+            bidx = jnp.arange(b).reshape(b, 1, 1, 1)
+            idx = remap[bidx, idx]
+        # gather rows of v per (b, h)
+        vv = v.transpose(0, 2, 1, 3).reshape(b * h, n_rows, dh)
+        ii = idx.transpose(0, 2, 1, 3).reshape(b * h, -1)
+        g = jnp.take_along_axis(vv, ii[..., None], axis=1)
+        g = g.reshape(b, h, idx.shape[1], idx.shape[3], dh).transpose(0, 2, 1, 3, 4)
+        return g * valid[..., None]
+
+    n00 = corner(0, 0)
+    n10 = corner(1, 0)
+    n01 = corner(0, 1)
+    n11 = corner(1, 1)
+    w00 = ((1 - t1) * (1 - t0))[..., None]
+    w10 = (t1 * (1 - t0))[..., None]
+    w01 = ((1 - t1) * t0)[..., None]
+    w11 = (t1 * t0)[..., None]
+    s = n00 * w00 + n10 * w10 + n01 * w01 + n11 * w11      # (B,Nq,H,K,Dh)
+    return jnp.sum(s * probs[..., None], axis=3)
+
+
+def msgs_unfused_ref(v, x_px, y_px, start, wl, hl, probs, remap=None):
+    """Identical math, but 'materializes' sampled values as a separate stage
+    (the baseline the paper fuses away; benchmarks count its extra bytes)."""
+    b, _, h, dh = v.shape
+    x0 = jnp.floor(x_px)
+    y0 = jnp.floor(y_px)
+    t1 = x_px - x0
+    t0 = y_px - y0
+
+    def corner(dx, dy):
+        cx = x0 + dx
+        cy = y0 + dy
+        valid = (cx >= 0) & (cx < wl) & (cy >= 0) & (cy < hl)
+        idx = start + jnp.clip(cy, 0, hl - 1).astype(jnp.int32) * wl \
+            + jnp.clip(cx, 0, wl - 1).astype(jnp.int32)
+        if remap is not None:
+            bidx = jnp.arange(b).reshape(b, 1, 1, 1)
+            idx = remap[bidx, idx]
+        vv = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], dh)
+        ii = idx.transpose(0, 2, 1, 3).reshape(b * h, -1)
+        g = jnp.take_along_axis(vv, ii[..., None], axis=1)
+        g = g.reshape(b, h, idx.shape[1], idx.shape[3], dh).transpose(0, 2, 1, 3, 4)
+        return g * valid[..., None]
+
+    sampled = (corner(0, 0) * ((1 - t1) * (1 - t0))[..., None]
+               + corner(1, 0) * (t1 * (1 - t0))[..., None]
+               + corner(0, 1) * ((1 - t1) * t0)[..., None]
+               + corner(1, 1) * (t1 * t0)[..., None])
+    sampled = jax.lax.optimization_barrier(sampled)     # forced materialization
+    return jnp.sum(sampled * probs[..., None], axis=3)
+
+
+def msgs_windowed_ref(v2d, x_px, y_px, probs):
+    """Single-level windowed oracle.
+
+    v2d: (Hl, Wl, Dh); x/y: (Nq, K) absolute px; probs: (Nq, K) -> (Nq, Dh)."""
+    hl, wl, dh = v2d.shape
+    ones = jnp.ones_like(x_px, dtype=jnp.int32)
+    out = msgs_fused_ref(
+        v2d.reshape(1, hl * wl, 1, dh),
+        x_px[None, :, None, :], y_px[None, :, None, :],
+        jnp.zeros_like(ones)[None, :, None, :],
+        (ones * wl)[None, :, None, :], (ones * hl)[None, :, None, :],
+        probs[None, :, None, :])
+    return out[0, :, 0, :]
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
+               w_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x (M,K) @ w (K,N); if w is int8, dequantize with per-column w_scale."""
+    if w.dtype == jnp.int8:
+        w = w.astype(jnp.float32) * w_scale
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_decode_ref(q, k, v, valid):
+    """Decode attention oracle. q (B,Hq,Dh); k/v (B,W,Hkv,Dh); valid (B,W)."""
+    b, hq, dh = q.shape
+    hkv = k.shape[2]
+    n_rep = max(1, hq // hkv)
+    import numpy as _np
+    hmap = _np.minimum(_np.arange(hq) // n_rep, hkv - 1)
+    kq = k[:, :, hmap, :]
+    vq = v[:, :, hmap, :]
+    s = jnp.einsum("bhd,bwhd->bhw", q, kq).astype(jnp.float32) / (dh ** 0.5)
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhw,bwhd->bhd", p, vq.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,173 @@
+"""Dry-run cells for the paper's own workload: DETR-family encoders built on
+MSDeformAttn (baseline and DEFA-optimized variants).
+
+serve: batched encoder inference (the paper's Fig. 9 comparison workload);
+train: encoder fwd+bwd+AdamW with a denoising proxy objective (exercises the
+same sharding/collective structure as full DETR training without hauling a
+conv backbone through the dry-run)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.detr_family import CONFIGS as DETR_CONFIGS
+from repro.core.encoder import (
+    encoder_apply, encoder_logical_axes, init_encoder)
+from repro.distributed.sharding import AxisRules, logical_to_spec, _BASE
+from repro.launch.input_specs import Cell, _batch_spec, _named
+from repro.optim.adamw import OptConfig, adamw_init, adamw_update
+from repro.train.step import zero_spec
+
+
+def _detr_rules(mesh: Mesh) -> AxisRules:
+    # d_model=256/8 heads: heads (8) don't divide model=16 -> replicate heads;
+    # the encoder ffn (1024) and value rows carry the model-axis sharding.
+    return AxisRules({**_BASE, "heads": None})
+
+
+def build_detr_cell(name: str, kind: str, mesh: Mesh,
+                    batch: int | None = None,
+                    query_shard: bool = False) -> Cell:
+    acfg = DETR_CONFIGS[name]
+    enc_cfg = acfg.encoder
+    level_shapes = acfg.level_shapes
+    n_in = sum(h * w for h, w in level_shapes)
+    d = enc_cfg.d_model
+    b = batch or (acfg.train_batch if kind == "train" else acfg.serve_batch)
+    dtype = enc_cfg.dtype
+
+    rules = _detr_rules(mesh)
+    axes = encoder_logical_axes(enc_cfg)
+    param_specs = jax.tree.map(
+        lambda a: logical_to_spec(a, rules), axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            y is None or isinstance(y, str) for y in x))
+    param_sh = _named(mesh, param_specs)
+    params_sds = jax.eval_shape(
+        lambda: init_encoder(jax.random.PRNGKey(0), enc_cfg))
+
+    bspec = _batch_spec(mesh, b)
+    q_ax = "model" if query_shard else None
+    x_sds = jax.ShapeDtypeStruct((b, n_in, d), dtype)
+    x_sh = NamedSharding(mesh, P(*bspec, q_ax, None))
+    pos_sds = jax.ShapeDtypeStruct((n_in, d), dtype)
+    ref_sds = jax.ShapeDtypeStruct((n_in, 2), jnp.float32)
+    rep = NamedSharding(mesh, P(None, None))
+
+    meta = {"arch": name, "shape": f"detr_{kind}_b{b}", "kind": kind,
+            "seq_len": n_in, "global_batch": b, "mesh": dict(mesh.shape),
+            "n_chips": mesh.size,
+            "params": sum(int(jnp.prod(jnp.asarray(l.shape)))
+                          for l in jax.tree.leaves(params_sds)),
+            "active_params": None}
+    meta["active_params"] = meta["params"]
+
+    if kind == "serve":
+        def serve_fn(params, x_flat, pos, refs):
+            out, _ = encoder_apply(params, enc_cfg, x_flat, pos, refs,
+                                   level_shapes)
+            return out
+
+        return Cell(name=f"{name}/serve", fn=serve_fn,
+                    in_sds=(params_sds, x_sds, pos_sds, ref_sds),
+                    in_shardings=(param_sh, x_sh, rep, rep),
+                    out_shardings=x_sh, meta=meta)
+
+    assert kind == "train"
+    opt_cfg = OptConfig()
+    opt_sds = jax.eval_shape(lambda: adamw_init(params_sds))
+    m_specs = jax.tree.map(lambda sp, p: zero_spec(sp, p.shape, mesh),
+                           param_specs, params_sds,
+                           is_leaf=lambda x: isinstance(x, P))
+    opt_sh = {"m": _named(mesh, m_specs), "v": _named(mesh, m_specs),
+              "step": NamedSharding(mesh, P())}
+
+    def train_fn(params, opt, x_flat, pos, refs):
+        def loss_fn(p):
+            out, _ = encoder_apply(p, enc_cfg, x_flat, pos, refs, level_shapes)
+            tgt = jax.lax.stop_gradient(jnp.roll(x_flat, 1, axis=1))
+            return jnp.mean(jnp.square(out - tgt).astype(jnp.float32))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        return new_params, new_opt, loss
+
+    return Cell(name=f"{name}/train", fn=train_fn,
+                in_sds=(params_sds, opt_sds, x_sds, pos_sds, ref_sds),
+                in_shardings=(param_sh, opt_sh, x_sh, rep, rep),
+                out_shardings=(param_sh, opt_sh, None), meta=meta,
+                donate=(0, 1))
+
+
+def build_banded_detr_cell(name: str, mesh: Mesh,
+                           batch: int | None = None) -> Cell:
+    """§Perf hillclimb 3 (optimized): the DEFA encoder with band-sharded
+    queries+values and range-narrowing-bounded halo exchange over the model
+    axis — distribution of the paper's own workload driven by its C3/C7
+    insight (bounded ranges -> bounded communication)."""
+    import dataclasses as dc
+
+    from repro.core.distributed_msdeform import (
+        band_layout, msdeform_attn_banded, pad_levels_to_bands)
+    from repro.core import nn as core_nn
+
+    acfg = DETR_CONFIGS[name]
+    enc_cfg = acfg.encoder
+    attn_cfg = dc.replace(enc_cfg.attn, fwp_mode="off")   # banded v1: no FWP
+    assert attn_cfg.range_narrow is not None
+    level_shapes = acfg.level_shapes
+    d = enc_cfg.d_model
+    b = batch or acfg.serve_batch
+    dtype = enc_cfg.dtype
+    n_bands = mesh.shape["model"]
+    b_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    # padded/banded geometry (static)
+    rows, _ = band_layout(level_shapes, n_bands, attn_cfg.range_narrow)
+    padded_shapes = tuple((rb * n_bands, w) for (h, w), rb in
+                          zip(level_shapes, rows))
+    n_pad = sum(hp * w for hp, w in padded_shapes)
+
+    rules = _detr_rules(mesh)
+    axes = encoder_logical_axes(enc_cfg)
+    param_specs = jax.tree.map(
+        lambda a: logical_to_spec(a, rules), axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            y is None or isinstance(y, str) for y in x))
+    param_sh = _named(mesh, param_specs)
+    params_sds = jax.eval_shape(
+        lambda: init_encoder(jax.random.PRNGKey(0), enc_cfg))
+
+    bspec = _batch_spec(mesh, b)
+    x_sh = NamedSharding(mesh, P(*bspec, "model", None))
+    x_sds = jax.ShapeDtypeStruct((b, n_pad, d), dtype)
+    pos_sds = jax.ShapeDtypeStruct((n_pad, d), dtype)
+    ref_sds = jax.ShapeDtypeStruct((b, n_pad, 2), jnp.float32)
+    pos_sh = NamedSharding(mesh, P("model", None))
+    ref_sh = NamedSharding(mesh, P(*bspec, "model", None))
+
+    meta = {"arch": name + "-banded", "shape": f"detr_serve_b{b}",
+            "kind": "serve", "seq_len": n_pad, "global_batch": b,
+            "mesh": dict(mesh.shape), "n_chips": mesh.size,
+            "params": sum(int(jnp.prod(jnp.asarray(l.shape)))
+                          for l in jax.tree.leaves(params_sds))}
+    meta["active_params"] = meta["params"]
+
+    def serve_fn(params, x_flat, pos, refs):
+        h = x_flat
+        for blk in params["blocks"]:
+            q = h + pos[None]
+            attn = msdeform_attn_banded(
+                blk["attn"], attn_cfg, q, refs, h, padded_shapes, mesh,
+                batch_axes=b_axes if bspec != P(None) else ())
+            h = core_nn.layer_norm(blk["ln1"], h + attn)
+            ff = core_nn.linear(blk["ffn2"],
+                                jax.nn.relu(core_nn.linear(blk["ffn1"], h)))
+            h = core_nn.layer_norm(blk["ln2"], h + ff)
+            h = jax.lax.with_sharding_constraint(h, x_sh)
+        return h
+
+    return Cell(name=f"{name}-banded/serve", fn=serve_fn,
+                in_sds=(params_sds, x_sds, pos_sds, ref_sds),
+                in_shardings=(param_sh, x_sh, pos_sh, ref_sh),
+                out_shardings=x_sh, meta=meta)

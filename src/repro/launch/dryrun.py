@@ -1,0 +1,258 @@
+"""Multi-pod dry-run: AOT `.lower().compile()` every (arch × shape × mesh)
+cell on placeholder host devices, prove the distribution config is coherent
+(sharding, memory, collectives), and emit the roofline inputs.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all [--mesh both] [--out results/dryrun]
+  python -m repro.launch.dryrun --all --detr          # include DETR family
+
+Each cell writes results/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis / cost_analysis / collective stats; existing results are
+skipped (incremental — rerun after fixes)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any other import — jax locks the device count on first init.
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+
+# §Perf optimized configuration (--opt): activation-sharding constraints
+# (O1/O2 via REPRO_CONSTRAIN_ACTS), save_comm remat (O6) and grad-accum
+# boosts sized so train cells fit 16 GB/chip (O5).
+OPT_ACCUM = {
+    "olmoe-1b-7b": 4, "grok-1-314b": 8, "granite-20b": 8, "minitron-8b": 4,
+    "minitron-4b": 4, "deepseek-7b": 4, "mamba2-130m": 4,
+    "llava-next-34b": 8, "whisper-tiny": 2, "hymba-1.5b": 4,
+}
+
+# O2': physical q-head padding to the next TP-divisible count (output-masked,
+# exact semantics) — removes the 16x attention replication for head counts
+# that don't divide the model axis.
+OPT_PAD_HEADS = {
+    "llava-next-34b": 64,
+}
+
+# Small archs: TP-16 all-reduce cost (∝B·S·D) dwarfs their compute
+# (∝B·S·D²/TP). Strategy switch: replicate weights, model axis carries
+# sequence parallelism, ZeRO shards optimizer state (O7).
+OPT_PURE_DP = {"minitron-4b", "mamba2-130m", "hymba-1.5b", "whisper-tiny"}
+
+
+def _opt_cfg(arch: str, cfg, kind: str = "train"):
+    """Kind-aware optimization: decode is weight-read bound — TP sharding of
+    weights is already optimal there, and pure-DP / head padding / activation
+    constraints REGRESSED decode cells (measured in §Perf). Exception: MoE
+    decode keeps the explicit-EP path (olmoe decode collective 10.8→0.13 ms)."""
+    import dataclasses as dc
+    if kind == "decode":
+        # MoE with model-axis-divisible experts: explicit EP pays off even
+        # at one token (olmoe decode collective 10.8→0.13 ms); everything
+        # else keeps the TP-sharded baseline (weight reads already optimal;
+        # grok's 8 experts don't divide 16 -> EP can't engage).
+        return cfg, (cfg.family == "moe" and cfg.n_experts % 16 == 0)
+    return dc.replace(cfg, remat_policy="save_comm",
+                      grad_accum=OPT_ACCUM.get(arch, cfg.grad_accum),
+                      pad_heads_to=OPT_PAD_HEADS.get(arch, 0),
+                      pure_dp=arch in OPT_PURE_DP), True
+from repro.configs.shapes import SHAPES, shapes_for
+from repro.launch.hlo_stats import summarize
+from repro.launch.input_specs import build_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def _compile(cell, mesh):
+    with mesh:
+        lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                          out_shardings=cell.out_shardings,
+                          donate_argnums=getattr(cell, "donate", ())
+                          ).lower(*cell.in_sds)
+        return lowered.compile()
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             force: bool = False, verbose: bool = True) -> dict:
+    """Compile one cell three ways:
+
+      A) REAL config (blockwise attention, grad accumulation, layer scan)
+         -> proves sharding coherence, gives memory_analysis (true residency).
+      B/C) COST configs (dense attention so no FLOPs hide in inner loops,
+         grad_accum=1, layer-scan unroll=1 and unroll=2). XLA's
+         cost_analysis counts a while-loop body ONCE regardless of trip
+         count, so per-layer cost = C - B and
+         corrected = B + (C - B) * (n_layers - 1).
+         The same two-point correction applies to the HLO-parsed collective
+         bytes (per-layer collectives also sit inside the scanned body)."""
+    import dataclasses as dc
+
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_kind}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if os.environ.get("REPRO_CONSTRAIN_ACTS") == "1":
+        cfg, use_policy = _opt_cfg(arch, cfg, shape.kind)
+        if not use_policy:
+            os.environ["REPRO_CONSTRAIN_ACTS"] = "0"
+            try:
+                return _run_cell_inner(arch, cfg, shape, mesh, tag, path,
+                                       verbose)
+            finally:
+                os.environ["REPRO_CONSTRAIN_ACTS"] = "1"
+    return _run_cell_inner(arch, cfg, shape, mesh, tag, path, verbose)
+
+
+def _run_cell_inner(arch, cfg, shape, mesh, tag, path, verbose) -> dict:
+    import dataclasses as dc
+
+    t0 = time.time()
+    cell_real = build_cell(arch, cfg, shape, mesh)
+    compiled_real = _compile(cell_real, mesh)
+    t_real = time.time() - t0
+    result = summarize(compiled_real, cell_real.meta)
+    result["raw_cost_uncorrected"] = dict(result["cost"])
+
+    # --- two-point scan-cost correction ---------------------------------
+    t0 = time.time()
+    cfg1 = dc.replace(cfg, attn_impl="dense", grad_accum=1, scan_unroll=1)
+    cfg2 = dc.replace(cfg, attn_impl="dense", grad_accum=1, scan_unroll=2)
+    cell1 = build_cell(arch, cfg1, shape, mesh)
+    cell2 = build_cell(arch, cfg2, shape, mesh)
+    s1 = summarize(_compile(cell1, mesh), cell1.meta)
+    s2 = summarize(_compile(cell2, mesh), cell2.meta)
+    t_cost = time.time() - t0
+
+    nl = cfg.n_layers
+    corr = {}
+    for k in ("flops", "bytes accessed", "transcendentals"):
+        per_layer = max(0.0, s2["cost"][k] - s1["cost"][k])
+        corr[k] = s1["cost"][k] + per_layer * (nl - 1)
+    coll_per_layer = max(0, s2["collectives"]["total_bytes"]
+                         - s1["collectives"]["total_bytes"])
+    corr_coll = {"total_bytes": s1["collectives"]["total_bytes"]
+                 + coll_per_layer * (nl - 1),
+                 "by_kind_1l": s1["collectives"]["by_kind"],
+                 "by_kind_2l": s2["collectives"]["by_kind"]}
+    result["cost"] = corr
+    result["collectives_corrected"] = corr_coll
+    from repro.launch.hlo_stats import roofline_terms
+    result["roofline"] = roofline_terms(corr, corr_coll, cell_real.meta,
+                                        result["memory"])
+    result["timings"] = {"real_compile_s": t_real, "cost_compiles_s": t_cost}
+
+    if verbose:
+        ma = result["memory"]
+        rf = result["roofline"]
+        print(f"[dryrun] {tag}: OK  peak={ma['peak_bytes_per_chip']/2**30:.2f}GiB/chip "
+              f"compute={rf['t_compute_s']*1e3:.2f}ms mem={rf['t_memory_s']*1e3:.2f}ms "
+              f"coll={rf['t_collective_s']*1e3:.2f}ms dom={rf['dominant']} "
+              f"useful={rf['useful_flops_ratio']:.2f} "
+              f"(compiles {t_real:.0f}+{t_cost:.0f}s)")
+        print("  memory_analysis:", {k: v for k, v in ma.items()})
+        print("  cost_analysis(corrected):", result["cost"])
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def run_detr_cell(name: str, shape_kind: str, mesh_kind: str, out_dir: str,
+                  force: bool = False) -> dict:
+    """DETR-family cells (the paper's own benchmark workload).
+
+    shape_kind "banded" = the halo-exchange band-sharded serve variant."""
+    from repro.launch.detr_cells import build_banded_detr_cell, build_detr_cell
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{name}__{shape_kind}__{mesh_kind}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    if shape_kind == "banded":
+        cell = build_banded_detr_cell(name, mesh)
+    else:
+        cell = build_detr_cell(name, shape_kind, mesh)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                          out_shardings=cell.out_shardings).lower(*cell.in_sds)
+        compiled = lowered.compile()
+    result = summarize(compiled, cell.meta)
+    result["timings"] = {"total_s": time.time() - t0}
+    rf = result["roofline"]
+    print(f"[dryrun] {tag}: OK dom={rf['dominant']} "
+          f"coll={rf['t_collective_s']*1e3:.2f}ms mem={rf['t_memory_s']*1e3:.2f}ms")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--detr", action="store_true", help="include DETR family")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="§Perf optimized config (O1-O6)")
+    args = ap.parse_args()
+    if args.opt:
+        os.environ["REPRO_CONSTRAIN_ACTS"] = "1"
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            fam = get_config(arch).family
+            cells += [(arch, s) for s in shapes_for(fam)]
+    elif args.arch:
+        shapes = [args.shape] if args.shape else shapes_for(
+            get_config(args.arch).family)
+        cells += [(args.arch, s) for s in shapes]
+
+    failures = []
+    for arch, shape in cells:
+        for mk in meshes:
+            try:
+                run_cell(arch, shape, mk, args.out, force=args.force)
+            except Exception as e:
+                failures.append((arch, shape, mk, repr(e)))
+                print(f"[dryrun] {arch}/{shape}/{mk}: FAIL {e}")
+                traceback.print_exc()
+
+    if args.detr:
+        for name in ("deformable-detr", "deformable-detr-defa", "dino"):
+            kinds = ("serve", "train", "banded") \
+                if name == "deformable-detr-defa" else ("serve", "train")
+            for kind in kinds:
+                for mk in meshes:
+                    try:
+                        run_detr_cell(name, kind, mk, args.out, force=args.force)
+                    except Exception as e:
+                        failures.append((name, kind, mk, repr(e)))
+                        print(f"[dryrun] {name}/{kind}/{mk}: FAIL {e}")
+                        traceback.print_exc()
+
+    print(f"\n[dryrun] done. {len(failures)} failures.")
+    for f in failures:
+        print("  FAIL:", f)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""Per-(arch × shape) dry-run cell builder.
+
+`build_cell` returns everything needed to AOT-lower one cell on a mesh:
+the step function, ShapeDtypeStruct inputs (no device allocation — the
+shannon/kernels pattern), and in/out shardings. Kinds:
+
+  train    -> train_step(state, batch)            (fwd+bwd+AdamW update)
+  prefill  -> prefill(params, cache, batch)       (forward + cache write)
+  decode   -> decode_step(params, cache, tok, pos) (one token vs seq_len cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models.common import ModelConfig
+from repro.models.registry import get_api
+from repro.optim.adamw import OptConfig
+from repro.train.step import (
+    build_train_step, make_train_state, train_state_shardings, rules_for)
+from repro.distributed.sharding import logical_to_spec
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Callable
+    in_sds: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    meta: dict
+    donate: Tuple[int, ...] = ()     # donated args (state / cache): in-place
+                                     # updates, as the real launchers run them
+
+
+def _batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _nshard(mesh: Mesh, axes: tuple) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _named(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_spec(mesh: Mesh, b: int) -> P:
+    axes = _batch_axes(mesh)
+    if b % _nshard(mesh, axes) == 0:
+        return P(axes if len(axes) > 1 else axes[0])
+    return P(None)
+
+
+def _batch_sds(cfg: ModelConfig, b: int, seq: int, mesh: Mesh, train: bool):
+    """ShapeDtypeStructs + shardings for one input batch."""
+    bspec = _batch_spec(mesh, b)
+    s_tok = seq + 1 if train else seq
+    sds = {"tokens": jax.ShapeDtypeStruct((b, s_tok), jnp.int32)}
+    sh = {"tokens": NamedSharding(mesh, bspec)}
+    if cfg.family == "vlm":
+        n_txt = s_tok - cfg.n_img_tokens
+        sds["tokens"] = jax.ShapeDtypeStruct((b, n_txt), jnp.int32)
+        sds["img_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_img_tokens, cfg.d_model), cfg.dtype)
+        sh["img_embeds"] = NamedSharding(mesh, P(*bspec, None, None))
+    if cfg.family == "encdec":
+        sds["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq_len, cfg.d_model), cfg.dtype)
+        sh["frames"] = NamedSharding(mesh, P(*bspec, None, None))
+    return sds, sh
+
+
+def _cache_specs(cfg: ModelConfig, mesh: Mesh, b: int,
+                 shard_len: bool) -> Callable:
+    """PartitionSpec per cache leaf, keyed by leaf name."""
+    bspec = _batch_spec(mesh, b)
+    b_axes = bspec[0] if len(bspec) else None
+    model_ok = cfg.n_kv_heads % mesh.shape.get("model", 1) == 0
+    kv_ax = "model" if model_ok and mesh.shape.get("model", 1) > 1 else None
+    len_ax = "data" if shard_len and "data" in mesh.axis_names else None
+
+    def spec_for(path: str, leaf) -> P:
+        name = path.split("/")[-1]
+        if name in ("k", "v"):
+            return P(None, b_axes, len_ax, kv_ax, None)
+        if name == "kpos":
+            return P(None, b_axes, len_ax)
+        if name in ("mem_k", "mem_v"):
+            return P(None, b_axes, None, kv_ax, None)
+        if name == "ssm":
+            return P(None, b_axes, None, None, None)
+        if name == "conv":
+            return P(None, b_axes, None, None)
+        return P(*([None] * leaf.ndim))
+    return spec_for
+
+
+def _cache_sds_and_shardings(cfg: ModelConfig, mesh: Mesh, b: int,
+                             cache_len: int, shard_len: bool):
+    api = get_api(cfg)
+    sds = jax.eval_shape(lambda: api.init_cache(cfg, b, cache_len))
+    spec_fn = _cache_specs(cfg, mesh, b, shard_len)
+    from repro.utils.tree import tree_map_with_path_str
+    specs = tree_map_with_path_str(spec_fn, sds)
+    return sds, _named(mesh, specs)
+
+
+def _maybe_policy(fn: Callable, mesh: Mesh, cfg: ModelConfig) -> Callable:
+    """O1-O4: wrap a cell fn so tracing happens under the activation-sharding
+    policy. Enabled by REPRO_CONSTRAIN_ACTS=1 (the --opt dry-run flag);
+    baseline runs stay propagation-only."""
+    import os
+    if os.environ.get("REPRO_CONSTRAIN_ACTS") != "1":
+        return fn
+    from repro.distributed.act_sharding import activation_policy
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    baxes = baxes if len(baxes) > 1 else baxes[0]
+
+    def wrapped(*args, **kw):
+        with activation_policy(mesh, baxes, seq_shard=cfg.pure_dp):
+            return fn(*args, **kw)
+    return wrapped
+
+
+def build_cell(arch: str, cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               opt_cfg: Optional[OptConfig] = None) -> Cell:
+    api = get_api(cfg)
+    b, seq = shape.global_batch, shape.seq_len
+    meta = {"arch": arch, "shape": shape.name, "kind": shape.kind,
+            "seq_len": seq, "global_batch": b,
+            "mesh": dict(mesh.shape), "n_chips": mesh.size,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count()}
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or OptConfig()
+        state_sds = jax.eval_shape(
+            lambda: make_train_state(jax.random.PRNGKey(0), cfg))
+        state_specs = train_state_shardings(cfg, mesh, state_sds)
+        state_sh = _named(mesh, state_specs)
+        batch_sds, batch_sh = _batch_sds(cfg, b, seq, mesh, train=True)
+        fn = _maybe_policy(build_train_step(cfg, opt_cfg), mesh, cfg)
+        return Cell(name=f"{arch}/{shape.name}", fn=fn,
+                    in_sds=(state_sds, batch_sds),
+                    in_shardings=(state_sh, batch_sh),
+                    out_shardings=(state_sh, None), meta=meta, donate=(0,))
+
+    # serving cells share param shardings (no optimizer)
+    from repro.distributed.sharding import sanitize_specs_tree
+    rules = rules_for(cfg, mesh)
+    param_specs = jax.tree.map(
+        lambda axes: logical_to_spec(axes, rules), api.axes(cfg),
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+    params_sds = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0), cfg))
+    param_specs = sanitize_specs_tree(param_specs, params_sds, mesh)
+    param_sh = _named(mesh, param_specs)
+
+    if shape.kind == "prefill":
+        cache_sds, cache_sh = _cache_sds_and_shardings(
+            cfg, mesh, b, cache_len=seq, shard_len=False)
+        batch_sds, batch_sh = _batch_sds(cfg, b, seq, mesh, train=False)
+
+        def prefill_fn(params, cache, batch):
+            return api.prefill(params, cfg, cache, batch)
+        prefill_fn = _maybe_policy(prefill_fn, mesh, cfg)
+
+        return Cell(name=f"{arch}/{shape.name}", fn=prefill_fn,
+                    in_sds=(params_sds, cache_sds, batch_sds),
+                    in_shardings=(param_sh, cache_sh, batch_sh),
+                    out_shardings=(None, cache_sh), meta=meta, donate=(1,))
+
+    assert shape.kind == "decode"
+    shard_len = b == 1                    # SP: long-context shards the cache
+    cache_sds, cache_sh = _cache_sds_and_shardings(
+        cfg, mesh, b, cache_len=seq, shard_len=shard_len)
+    bspec = _batch_spec(mesh, b)
+    tok_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tok_sh = NamedSharding(mesh, bspec)
+
+    def decode_fn(params, cache, tokens, pos):
+        return api.decode_step(params, cfg, cache, tokens, pos)
+    decode_fn = _maybe_policy(decode_fn, mesh, cfg)
+
+    return Cell(name=f"{arch}/{shape.name}", fn=decode_fn,
+                in_sds=(params_sds, cache_sds, tok_sds, pos_sds),
+                in_shardings=(param_sh, cache_sh, tok_sh, tok_sh),
+                out_shardings=(None, cache_sh), meta=meta, donate=(1,))

@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state. The dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE importing
+jax; ordinary runs (tests, benches, examples) see the 1 real CPU device and
+use `make_local_mesh`."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — run via "
+            "launch/dryrun.py which forces 512 host devices")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Degenerate mesh over the locally available devices (tests/examples)."""
+    import jax
+    devices = jax.devices()
+    data = len(devices) // model_axis
+    return jax.sharding.Mesh(
+        np.asarray(devices[:data * model_axis]).reshape(data, model_axis),
+        ("data", "model"))

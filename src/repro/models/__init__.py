@@ -1,0 +1,2 @@
+from repro.models.common import ModelConfig  # noqa: F401
+from repro.models.registry import get_api, rules_overrides, ModelAPI  # noqa: F401

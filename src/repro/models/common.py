@@ -1,0 +1,161 @@
+"""Shared LM substrate: config, norms, rotary, embeddings, losses.
+
+All models are pure-functional parameter pytrees (no flax in the container);
+per-layer parameters are STACKED on a leading layer axis so the decoder
+stack runs under ``jax.lax.scan`` — this keeps the HLO size independent of
+depth (essential for 512-device dry-run compiles) and is what the remat
+policy hooks into."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"        # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 512
+    vocab_size: int = 1024
+    head_dim: Optional[int] = None
+    # --- MoE ---
+    n_experts: int = 0
+    n_experts_active: int = 0
+    expert_capacity_factor: float = 1.25
+    mlp_gated: bool = True                   # SwiGLU; False = 2-matrix GELU
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    # --- hybrid / windowed attention ---
+    attn_window: int = 0                     # 0 = full attention
+    global_every: int = 0                    # hybrid: every k-th layer is global
+    global_layers: Tuple[int, ...] = ()      # explicit global layer ids
+    # O2': physical padding of q-heads to a TP-divisible count. Padded heads
+    # are output-masked (exact semantics); trades ~(pad/h) local compute for
+    # eliminating 16x attention replication when heads % TP != 0.
+    pad_heads_to: int = 0
+    # --- enc-dec (whisper) ---
+    n_enc_layers: int = 0
+    enc_seq_len: int = 1500                  # stub frontend output length
+    # --- vlm (llava) ---
+    n_img_tokens: int = 0                    # stub patch embeddings prepended
+    # --- numerics / execution ---
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    attn_chunk: int = 2048                   # blockwise attention threshold/chunk
+    attn_impl: str = "blockwise"             # blockwise | dense (dense: dry-run
+                                             # cost accounting — no inner loops)
+    scan_unroll: int = 1                     # layer-scan unroll (dry-run cost)
+    # --- distribution knobs (consumed by launch/) ---
+    pure_dp: bool = False                    # small archs: replicate weights,
+                                             # model axis carries SEQUENCE
+                                             # parallelism + ZeRO instead of TP
+    use_fsdp: bool = False
+    remat: bool = True
+    remat_policy: str = "nothing"            # nothing | save_comm (keep post-
+                                             # collective outputs: recompute
+                                             # skips per-layer all-reduces)
+    comm_barrier: bool = False               # cut fusion at residual adds so
+                                             # TP all-reduces run in bf16, not
+                                             # the f32 the norm upcast induces
+    grad_accum: int = 1
+    notes: str = ""
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def h_phys(self) -> int:
+        """Physical q-head count (>= n_heads when pad_heads_to is set)."""
+        return max(self.pad_heads_to, self.n_heads) if self.pad_heads_to \
+            else self.n_heads
+
+    @property
+    def d_inner(self) -> int:                # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding included once)."""
+        d, f, v, l = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        dh, hq, hkv = self.dh, self.n_heads, self.n_kv_heads
+        attn = d * dh * hq + 2 * d * dh * hkv + dh * hq * d
+        if self.family == "ssm":
+            attn = 0
+        nmat = 3 if self.mlp_gated else 2
+        mlp = nmat * d * f
+        if self.n_experts:
+            mlp = nmat * d * f * self.n_experts + d * self.n_experts
+        ssm = 0
+        if self.ssm_state:
+            di, n, hs = self.d_inner, self.ssm_state, self.ssm_heads
+            ssm = d * (2 * di + 2 * n + hs) + di * d + self.ssm_conv * (di + 2 * n)
+        per_layer = attn + (mlp if self.family != "ssm" else 0) + ssm + 2 * d
+        total = l * per_layer + 2 * v * d
+        if self.family == "encdec":
+            enc = self.n_enc_layers * (d * dh * hq * 2 + 2 * d * dh * hkv
+                                       + nmat * d * f + 2 * d)
+            total += enc + l * (d * dh * hq + 2 * d * dh * hkv + dh * hq * d)  # cross-attn
+        return int(total)
+
+    def active_param_count(self) -> int:
+        if not self.n_experts:
+            return self.param_count()
+        d, f, l = self.d_model, self.d_ff, self.n_layers
+        nmat = 3 if self.mlp_gated else 2
+        dense_mlp = nmat * d * f * self.n_experts
+        active_mlp = nmat * d * f * self.n_experts_active
+        return int(self.param_count() - l * (dense_mlp - active_mlp))
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = 1.0 / (theta ** (np.arange(half, dtype=np.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)               # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def init_dense(key, shape, scale_dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, shape) / np.sqrt(scale_dim)).astype(dtype)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """logits (B,S,V) f32-upcast CE; labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,306 @@
+"""Unified decoder stack for all LM-family architectures.
+
+One scan-over-layers implementation serves dense / MoE / SSM / hybrid
+families: the layer body is selected statically by ``cfg.family``, while
+per-layer *data* (sliding-window size; hybrid's periodic global layers) is
+carried as a scanned array so the stack stays scan-uniform — HLO size is
+O(1) in depth, which keeps 512-device dry-run compiles tractable and gives
+remat a single boundary per layer."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import act_sharding as acts
+from repro.models import layers as L
+from repro.models.common import ModelConfig, init_dense, rms_norm
+
+
+def _tag(x, name: str):
+    """Name a tensor for the save_comm remat policy (keep post-collective
+    outputs so backward recompute skips the per-layer all-reduces)."""
+    from jax.ad_checkpoint import checkpoint_name
+    return checkpoint_name(x, name)
+
+
+def _res_add(cfg: ModelConfig, x, y, name: str):
+    """Residual add with optional fusion barrier: keeps the TP all-reduce
+    of `y` in bf16 instead of the f32 the downstream norm upcast induces."""
+    y = _tag(y, name)
+    out = x + y
+    if cfg.comm_barrier:
+        out = jax.lax.optimization_barrier(out)
+    return out
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat_policy == "save_comm":
+        return jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "mlp_out", "moe_out", "ssd_out")
+    return jax.checkpoint_policies.nothing_saveable
+
+
+# ---------------------------------------------------------------------------
+# per-layer window schedule (0 = full attention)
+# ---------------------------------------------------------------------------
+
+def window_schedule(cfg: ModelConfig) -> np.ndarray:
+    win = np.full((cfg.n_layers,), cfg.attn_window, np.int32)
+    if cfg.attn_window and cfg.global_every:
+        win[::cfg.global_every] = 0                   # periodic global layers
+    for gl in cfg.global_layers:                      # explicit global layers
+        win[gl] = 0
+    return win
+
+
+# ---------------------------------------------------------------------------
+# layer init / axes per family
+# ---------------------------------------------------------------------------
+
+def _layer_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": jnp.ones((d,), cfg.dtype)}
+    if cfg.family in ("dense", "vlm", "moe", "hybrid"):
+        p["attn"] = L.attn_init(ks[0], cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        p["ssd"] = L.ssd_init(ks[1], cfg)
+    if cfg.family == "hybrid":
+        p["norm_attn"] = jnp.ones((d,), cfg.dtype)
+        p["norm_ssm"] = jnp.ones((d,), cfg.dtype)
+    if cfg.family in ("dense", "vlm", "hybrid"):
+        p["ln2"] = jnp.ones((d,), cfg.dtype)
+        p["mlp"] = L.mlp_init(ks[2], cfg)
+    elif cfg.family == "moe":
+        p["ln2"] = jnp.ones((d,), cfg.dtype)
+        p["moe"] = L.moe_init(ks[3], cfg)
+    return p
+
+
+def _layer_axes(cfg: ModelConfig) -> dict:
+    ax: dict = {"ln1": (None,)}
+    if cfg.family in ("dense", "vlm", "moe", "hybrid"):
+        ax["attn"] = L.attn_axes(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        ax["ssd"] = L.ssd_axes(cfg)
+    if cfg.family == "hybrid":
+        ax["norm_attn"] = (None,)
+        ax["norm_ssm"] = (None,)
+    if cfg.family in ("dense", "vlm", "hybrid"):
+        ax["ln2"] = (None,)
+        ax["mlp"] = L.mlp_axes(cfg)
+    elif cfg.family == "moe":
+        ax["ln2"] = (None,)
+        ax["moe"] = L.moe_axes(cfg)
+    return ax
+
+
+def _stack_axes(tree: Any) -> Any:
+    """Prepend the (unsharded) layer-stack axis to every leaf."""
+    return jax.tree.map(lambda t: (None,) + t, tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+# ---------------------------------------------------------------------------
+# layer apply (forward / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _layer_forward(p: dict, cfg: ModelConfig, x, positions, window):
+    aux = jnp.zeros((), jnp.float32)
+    x = acts.constrain_stream(x)                   # O1: pin batch sharding
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    if cfg.family in ("dense", "vlm", "moe"):
+        x = _res_add(cfg, x, L.attn_forward(p["attn"], cfg, h, positions,
+                                            window), "attn_out")
+    elif cfg.family == "ssm":
+        return _res_add(cfg, x, L.ssd_forward(p["ssd"], cfg, h), "ssd_out"), aux
+    elif cfg.family == "hybrid":
+        ya = L.attn_forward(p["attn"], cfg, h, positions, window)
+        ym = L.ssd_forward(p["ssd"], cfg, h)
+        mix = 0.5 * (rms_norm(p["norm_attn"], ya, cfg.norm_eps)
+                     + rms_norm(p["norm_ssm"], ym, cfg.norm_eps))
+        x = _res_add(cfg, x, mix, "attn_out")
+    h2 = rms_norm(p["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = L.moe_apply(p["moe"], cfg, h2)
+        x = _res_add(cfg, x, y, "moe_out")
+    else:
+        x = _res_add(cfg, x, L.mlp_apply(p["mlp"], h2), "mlp_out")
+    return x, aux
+
+
+def _layer_prefill(p, cfg, x, positions, cache, window):
+    x = acts.constrain_stream(x)                   # O1: pin batch sharding
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+    if cfg.family in ("dense", "vlm", "moe"):
+        y, ac = L.attn_prefill(p["attn"], cfg, h, positions,
+                               {k: cache[k] for k in ("k", "v", "kpos")}, window)
+        new_cache.update(ac)
+        x = x + y
+    elif cfg.family == "ssm":
+        y, sc = L.ssd_forward(p["ssd"], cfg, h, return_state=True)
+        new_cache.update(sc)
+        return x + y, new_cache
+    elif cfg.family == "hybrid":
+        ya, ac = L.attn_prefill(p["attn"], cfg, h, positions,
+                                {k: cache[k] for k in ("k", "v", "kpos")}, window)
+        ym, sc = L.ssd_forward(p["ssd"], cfg, h, return_state=True)
+        new_cache.update(ac)
+        new_cache.update(sc)
+        x = x + 0.5 * (rms_norm(p["norm_attn"], ya, cfg.norm_eps)
+                       + rms_norm(p["norm_ssm"], ym, cfg.norm_eps))
+    h2 = rms_norm(p["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = L.moe_apply(p["moe"], cfg, h2)
+        x = x + y
+    else:
+        x = x + L.mlp_apply(p["mlp"], h2)
+    return x, new_cache
+
+
+def _layer_decode(p, cfg, x1, cache, pos, window):
+    x1 = acts.constrain_stream(x1)                 # O1: pin batch sharding
+    h = rms_norm(p["ln1"], x1, cfg.norm_eps)
+    new_cache = dict(cache)
+    if cfg.family in ("dense", "vlm", "moe"):
+        y, ac = L.attn_decode(p["attn"], cfg, h,
+                              {k: cache[k] for k in ("k", "v", "kpos")}, pos, window)
+        new_cache.update(ac)
+        x1 = x1 + y
+    elif cfg.family == "ssm":
+        y, sc = L.ssd_decode(p["ssd"], cfg, h,
+                             {k: cache[k] for k in ("ssm", "conv")})
+        new_cache.update(sc)
+        return x1 + y, new_cache
+    elif cfg.family == "hybrid":
+        ya, ac = L.attn_decode(p["attn"], cfg, h,
+                               {k: cache[k] for k in ("k", "v", "kpos")}, pos, window)
+        ym, sc = L.ssd_decode(p["ssd"], cfg, h,
+                              {k: cache[k] for k in ("ssm", "conv")})
+        new_cache.update(ac)
+        new_cache.update(sc)
+        x1 = x1 + 0.5 * (rms_norm(p["norm_attn"], ya, cfg.norm_eps)
+                         + rms_norm(p["norm_ssm"], ym, cfg.norm_eps))
+    h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = L.moe_apply(p["moe"], cfg, h2)
+        x1 = x1 + y
+    else:
+        x1 = x1 + L.mlp_apply(p["mlp"], h2)
+    return x1, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_decoder(key: jax.Array, cfg: ModelConfig) -> dict:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    return {
+        "embed": init_dense(k_emb, (cfg.vocab_size, cfg.d_model), cfg.d_model,
+                            cfg.dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "head": init_dense(k_head, (cfg.d_model, cfg.vocab_size), cfg.d_model,
+                           cfg.dtype),
+    }
+
+
+def decoder_axes(cfg: ModelConfig) -> dict:
+    return {
+        "embed": ("vocab", "embed"),
+        "layers": _stack_axes(_layer_axes(cfg)),
+        "final_norm": (None,),
+        "head": ("embed", "vocab"),
+    }
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: Optional[jnp.ndarray] = None,
+            embeds: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits (B,S,V) f32-castable, moe_aux)."""
+    if embeds is None:
+        embeds = jnp.take(params["embed"], tokens, axis=0)
+    embeds = acts.constrain_stream(embeds)
+    b, s, d = embeds.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    windows = jnp.asarray(window_schedule(cfg))
+
+    def body(x, xs):
+        lp, win = xs
+        x, aux = _layer_forward(lp, cfg, x, positions, win)
+        return x, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    x, auxs = jax.lax.scan(body, embeds, (params["layers"], windows),
+                           unroll=cfg.scan_unroll)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = acts.constrain_batch_model(x @ params["head"], 2)   # vocab-sharded
+    return logits, jnp.sum(auxs)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    """Stacked (n_layers leading axis) cache pytree."""
+    def one_layer(_):
+        c: dict = {}
+        if cfg.family in ("dense", "vlm", "moe", "hybrid"):
+            c.update(L.attn_cache_init(cfg, batch, cache_len))
+        if cfg.family in ("ssm", "hybrid"):
+            c.update(L.ssd_cache_init(cfg, batch))
+        return c
+    return jax.vmap(one_layer)(jnp.arange(cfg.n_layers))
+
+
+def prefill(params: dict, cfg: ModelConfig, cache: dict,
+            tokens: Optional[jnp.ndarray] = None,
+            embeds: Optional[jnp.ndarray] = None):
+    """Prefill S tokens into the cache; returns (last-position logits, cache)."""
+    if embeds is None:
+        embeds = jnp.take(params["embed"], tokens, axis=0)
+    embeds = acts.constrain_stream(embeds)
+    b, s, d = embeds.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    windows = jnp.asarray(window_schedule(cfg))
+
+    def body(x, xs):
+        lp, lc, win = xs
+        x, nc = _layer_prefill(lp, cfg, x, positions, lc, win)
+        return x, nc
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    x, new_cache = jax.lax.scan(body, embeds, (params["layers"], cache, windows),
+                                unroll=cfg.scan_unroll)
+    x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = (x @ params["head"])[:, 0]
+    return logits.astype(jnp.float32), new_cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jnp.ndarray, pos: jnp.ndarray):
+    """One decode step. tokens (B,) int32; pos (B,) int32 per-request
+    positions (a scalar broadcasts — uniform batch).
+
+    Returns (logits (B,V) f32, new cache)."""
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)          # (B,1,D)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (tokens.shape[0],))
+    windows = jnp.asarray(window_schedule(cfg))
+
+    def body(x1, xs):
+        lp, lc, win = xs
+        x1, nc = _layer_decode(lp, cfg, x1, lc, pos, win)
+        return x1, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, windows),
+                                unroll=cfg.scan_unroll)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["head"])[:, 0]
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,216 @@
+"""Encoder-decoder backbone (Whisper-family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, enc_seq_len, D). The encoder is a
+non-causal transformer; the decoder adds cross-attention to the encoder
+memory. Decode shapes exercise the decoder's self-attn KV cache plus
+precomputed cross-attention K/V."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.common import ModelConfig, init_dense, rms_norm, rope
+
+
+# --- encoder ---------------------------------------------------------------
+
+def _enc_layer_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {"ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+            "attn": L.attn_init(ks[0], cfg),
+            "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+            "mlp": L.mlp_init(ks[1], cfg)}
+
+
+def _enc_layer_axes(cfg):
+    return {"ln1": (None,), "attn": L.attn_axes(cfg),
+            "ln2": (None,), "mlp": L.mlp_axes(cfg)}
+
+
+def _enc_layer_fwd(p, cfg, x, positions):
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    # non-causal: window < 0 sentinel -> full bidirectional
+    b, s, d = x.shape
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"])
+    q = rope(q, positions[None], cfg.rope_theta)
+    k = rope(k, positions[None], cfg.rope_theta)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, L._repeat_kv(k, n_rep)
+                        ).astype(jnp.float32) / np.sqrt(cfg.dh)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, L._repeat_kv(v, n_rep))
+    x = x + jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
+    x = x + L.mlp_apply(p["mlp"], rms_norm(p["ln2"], x, cfg.norm_eps))
+    return x
+
+
+# --- decoder with cross-attention ------------------------------------------
+
+def _dec_layer_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {"ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+            "attn": L.attn_init(ks[0], cfg),
+            "lnx": jnp.ones((cfg.d_model,), cfg.dtype),
+            "xattn": L.attn_init(ks[1], cfg),
+            "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+            "mlp": L.mlp_init(ks[2], cfg)}
+
+
+def _dec_layer_axes(cfg):
+    return {"ln1": (None,), "attn": L.attn_axes(cfg),
+            "lnx": (None,), "xattn": L.attn_axes(cfg),
+            "ln2": (None,), "mlp": L.mlp_axes(cfg)}
+
+
+def _cross_attn(p, cfg, h, mem_k, mem_v):
+    """h (B,Sq,D); mem_k/v (B,Sm,Hkv,Dh) precomputed from encoder memory."""
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, L._repeat_kv(mem_k, n_rep)
+                        ).astype(jnp.float32) / np.sqrt(cfg.dh)
+    probs = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, L._repeat_kv(mem_v, n_rep))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def _mem_kv(p, mem):
+    k = jnp.einsum("bsd,dhk->bshk", mem, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", mem, p["wv"])
+    return k, v
+
+
+# --- full model --------------------------------------------------------------
+
+def init_encdec(key: jax.Array, cfg: ModelConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k1, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": init_dense(k3, (cfg.vocab_size, cfg.d_model), cfg.d_model, cfg.dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "head": init_dense(k4, (cfg.d_model, cfg.vocab_size), cfg.d_model, cfg.dtype),
+    }
+
+
+def encdec_axes(cfg: ModelConfig) -> dict:
+    from repro.models.decoder import _stack_axes
+    return {
+        "embed": ("vocab", "embed"),
+        "enc_layers": _stack_axes(_enc_layer_axes(cfg)),
+        "enc_norm": (None,),
+        "dec_layers": _stack_axes(_dec_layer_axes(cfg)),
+        "final_norm": (None,),
+        "head": ("embed", "vocab"),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, S_enc, D) stub frontend embeddings -> encoder memory."""
+    positions = jnp.arange(frames.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        return _enc_layer_fwd(lp, cfg, x, positions), None
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, frames, params["enc_layers"],
+                        unroll=cfg.scan_unroll)
+    return rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, frames: jnp.ndarray, tokens: jnp.ndarray):
+    """Teacher-forced training forward. Returns (logits (B,S,V), aux=0)."""
+    mem = encode(params, cfg, frames)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    full = jnp.asarray(0, jnp.int32)
+
+    def body(h, lp):
+        hh = rms_norm(lp["ln1"], h, cfg.norm_eps)
+        h = h + L.attn_forward(lp["attn"], cfg, hh, positions, full)
+        hx = rms_norm(lp["lnx"], h, cfg.norm_eps)
+        mk, mv = _mem_kv(lp["xattn"], mem)
+        h = h + _cross_attn(lp["xattn"], cfg, hx, mk, mv)
+        h = h + L.mlp_apply(lp["mlp"], rms_norm(lp["ln2"], h, cfg.norm_eps))
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"], unroll=cfg.scan_unroll)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x @ params["head"], jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    def one_layer(_):
+        c = L.attn_cache_init(cfg, batch, cache_len)
+        c["mem_k"] = jnp.zeros((batch, cfg.enc_seq_len, cfg.n_kv_heads, cfg.dh),
+                               cfg.dtype)
+        c["mem_v"] = jnp.zeros((batch, cfg.enc_seq_len, cfg.n_kv_heads, cfg.dh),
+                               cfg.dtype)
+        return c
+    return jax.vmap(one_layer)(jnp.arange(cfg.n_layers))
+
+
+def prefill(params, cfg: ModelConfig, cache: dict, frames: jnp.ndarray,
+            tokens: jnp.ndarray):
+    """Encode + teacher-force tokens, filling self- and cross-KV caches."""
+    mem = encode(params, cfg, frames)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    full = jnp.asarray(0, jnp.int32)
+
+    def body(h, xs):
+        lp, lc = xs
+        nc = dict(lc)
+        hh = rms_norm(lp["ln1"], h, cfg.norm_eps)
+        y, ac = L.attn_prefill(lp["attn"], cfg, hh, positions,
+                               {k: lc[k] for k in ("k", "v", "kpos")}, full)
+        nc.update(ac)
+        h = h + y
+        hx = rms_norm(lp["lnx"], h, cfg.norm_eps)
+        mk, mv = _mem_kv(lp["xattn"], mem)
+        nc["mem_k"], nc["mem_v"] = mk, mv
+        h = h + _cross_attn(lp["xattn"], cfg, hx, mk, mv)
+        h = h + L.mlp_apply(lp["mlp"], rms_norm(lp["ln2"], h, cfg.norm_eps))
+        return h, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache),
+                                unroll=cfg.scan_unroll)
+    x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return (x @ params["head"])[:, 0].astype(jnp.float32), new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray):
+    """One decoder token; cross-attn reads cached mem_k/mem_v."""
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (tokens.shape[0],))
+    full = jnp.asarray(0, jnp.int32)
+
+    def body(h, xs):
+        lp, lc = xs
+        nc = dict(lc)
+        hh = rms_norm(lp["ln1"], h, cfg.norm_eps)
+        y, ac = L.attn_decode(lp["attn"], cfg, hh,
+                              {k: lc[k] for k in ("k", "v", "kpos")}, pos, full)
+        nc.update(ac)
+        h = h + y
+        hx = rms_norm(lp["lnx"], h, cfg.norm_eps)
+        h = h + _cross_attn(lp["xattn"], cfg, hx, lc["mem_k"], lc["mem_v"])
+        h = h + L.mlp_apply(lp["mlp"], rms_norm(lp["ln2"], h, cfg.norm_eps))
+        return h, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache),
+                                unroll=cfg.scan_unroll)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return (x @ params["head"])[:, 0].astype(jnp.float32), new_cache

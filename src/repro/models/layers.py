@@ -1,0 +1,616 @@
+"""Layer zoo: GQA attention (full / blockwise / sliding-window / decode),
+SwiGLU MLP, capacity-based MoE, and the Mamba2 SSD mixer.
+
+Every layer exposes ``*_init(key, cfg) -> params``, ``*_axes(cfg) ->
+logical-axis tree`` and pure apply functions. Per-layer params get stacked
+by the decoder and sliced by ``lax.scan``."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import act_sharding as acts
+from repro.models.common import ModelConfig, init_dense, rms_norm, rope
+
+BIG_NEG = -1e9
+
+
+def _constrain_attn(cfg: ModelConfig, q, k, v):
+    """O1/O2: pin attention activation shardings. Heads shard over the model
+    axis when divisible; otherwise fall back to SEQUENCE-parallel attention
+    (each rank: all heads x 1/TP of the queries, K/V gathered) instead of
+    letting propagation replicate the whole block."""
+    tp = acts.model_axis_size()
+    if tp == 0:
+        return q, k, v
+    if cfg.h_phys % tp == 0:
+        q = acts.constrain_batch_model(q, 2)
+        if cfg.n_kv_heads % tp == 0:
+            k = acts.constrain_batch_model(k, 2)
+            v = acts.constrain_batch_model(v, 2)
+        else:
+            k = acts.constrain_batch(k)
+            v = acts.constrain_batch(v)
+    else:
+        q = acts.constrain_batch_seq(q, 1)
+        k = acts.constrain_batch(k)
+        v = acts.constrain_batch(v)
+    return q, k, v
+
+
+# ===========================================================================
+# GQA attention
+# ===========================================================================
+
+def attn_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, dh, hq, hkv = cfg.d_model, cfg.dh, cfg.h_phys, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(k1, (d, hq, dh), d, cfg.dtype),
+        "wk": init_dense(k2, (d, hkv, dh), d, cfg.dtype),
+        "wv": init_dense(k3, (d, hkv, dh), d, cfg.dtype),
+        "wo": init_dense(k4, (hq, dh, d), hq * dh, cfg.dtype),
+    }
+
+
+def attn_axes(cfg: ModelConfig) -> dict:
+    return {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, s, hkv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, n_rep, dh)
+                            ).reshape(b, s, hkv * n_rep, dh)
+
+
+def _kv_for_q(cfg: ModelConfig, k: jnp.ndarray) -> jnp.ndarray:
+    """Map kv heads to PHYSICAL q heads. Without padding this is the usual
+    GQA repeat; with padded q heads, real heads keep their original
+    q->kv grouping and padded heads clamp to the last kv head (their output
+    is masked to zero anyway)."""
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if cfg.h_phys == cfg.n_heads:
+        return _repeat_kv(k, n_rep)
+    hmap = np.minimum(np.arange(cfg.h_phys) // n_rep, cfg.n_kv_heads - 1)
+    return k[:, :, jnp.asarray(hmap)]
+
+
+def _head_mask(cfg: ModelConfig, dtype) -> jnp.ndarray | None:
+    if cfg.h_phys == cfg.n_heads:
+        return None
+    m = np.zeros((cfg.h_phys,), np.float32)
+    m[:cfg.n_heads] = 1.0
+    return jnp.asarray(m, dtype)
+
+
+def _causal_window_mask(qpos, kpos, window):
+    """window: traced int32; <=0 means full causal."""
+    win = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max // 2)
+    ok = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] > qpos[:, None] - win)
+    return ok
+
+
+def _attn_dense(q, k, v, qpos, kpos, window):
+    """Whole-matrix attention (small S). q (B,S,Hq,Dh), k/v (B,Sk,Hq,Dh)."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / np.sqrt(dh)
+    mask = _causal_window_mask(qpos, kpos, window)
+    scores = jnp.where(mask[None, None], scores, BIG_NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _attn_blockwise(q, k, v, window, chunk: int):
+    """Flash-style online-softmax attention, O(chunk²) memory per step.
+
+    q,k,v: (B,S,Hq,Dh) (kv already repeated). Causal within/across chunks."""
+    b, s, h, dh = q.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    qc = q.reshape(b, nc, chunk, h, dh)
+    kc = k.reshape(b, nc, chunk, h, dh)
+    vc = v.reshape(b, nc, chunk, h, dh)
+    scale = 1.0 / np.sqrt(dh)
+
+    def q_chunk_body(qi, q_i):
+        # q_i: (B, C, H, Dh); scan over kv chunks with running softmax state
+        def kv_body(carry, inputs):
+            m, l, acc = carry
+            kj, (k_j, v_j) = inputs
+            s_ij = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_j).astype(jnp.float32) * scale
+            qpos = qi * chunk + jnp.arange(chunk)
+            kpos = kj * chunk + jnp.arange(chunk)
+            mask = _causal_window_mask(qpos, kpos, window)
+            s_ij = jnp.where(mask[None, None], s_ij, BIG_NEG)
+            m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+            p = jnp.exp(s_ij - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(q.dtype), v_j).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, chunk), BIG_NEG, jnp.float32)
+        l0 = jnp.zeros((b, h, chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0),
+            (jnp.arange(nc), (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4))))
+        out = acc / jnp.maximum(l[..., None], 1e-20)
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)          # (B,C,H,Dh)
+
+    outs = jax.lax.map(lambda args: q_chunk_body(*args),
+                       (jnp.arange(nc), qc.transpose(1, 0, 2, 3, 4)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+
+
+def attn_forward(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                 positions: jnp.ndarray, window) -> jnp.ndarray:
+    """Full-sequence causal attention. x (B,S,D); positions (S,)."""
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, positions[None], cfg.rope_theta)
+    k = rope(k, positions[None], cfg.rope_theta)
+    q, k, v = _constrain_attn(cfg, q, k, v)
+    if cfg.attn_impl != "dense" and s > 2 * cfg.attn_chunk \
+            and s % cfg.attn_chunk == 0:
+        out = _attn_blockwise(q, _kv_for_q(cfg, k), _kv_for_q(cfg, v),
+                              window, cfg.attn_chunk)
+    else:
+        out = _attn_dense(q, _kv_for_q(cfg, k), _kv_for_q(cfg, v),
+                          positions, positions, window)
+    mask = _head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    return acts.constrain_stream(jnp.einsum("bshk,hkd->bsd", out, p["wo"]))
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.dh), cfg.dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.dh), cfg.dtype),
+        # per-request slot positions (continuous batching: requests decode at
+        # different positions). Empty slots carry a FUTURE position sentinel
+        # so the causal check (kpos <= pos) masks them until written.
+        "kpos": jnp.full((batch, cache_len), jnp.iinfo(jnp.int32).max // 2,
+                         jnp.int32),
+    }
+
+
+def attn_prefill(p, cfg, x, positions, cache, window):
+    """Forward over S tokens + write cache slots [0..S). Requires S<=W."""
+    b, s, d = x.shape
+    w = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, positions[None], cfg.rope_theta)
+    k = rope(k, positions[None], cfg.rope_theta)
+    q, k, v = _constrain_attn(cfg, q, k, v)
+    if cfg.attn_impl != "dense" and s > 2 * cfg.attn_chunk \
+            and s % cfg.attn_chunk == 0:
+        out = _attn_blockwise(q, _kv_for_q(cfg, k), _kv_for_q(cfg, v),
+                              window, cfg.attn_chunk)
+    else:
+        out = _attn_dense(q, _kv_for_q(cfg, k), _kv_for_q(cfg, v),
+                          positions, positions, window)
+    mask = _head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    slots = positions % w
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[:, slots].set(k)
+    cache["v"] = cache["v"].at[:, slots].set(v)
+    cache["kpos"] = cache["kpos"].at[:, slots].set(positions[None])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+
+def attn_decode(p, cfg, x1, cache, pos, window):
+    """One-token decode. x1 (B,1,D); pos (B,) int32 per-request positions
+    (continuous batching); ring-buffer cache."""
+    b = x1.shape[0]
+    w = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x1, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x1, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x1, p["wv"])
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+    slot = pos % w                                                  # (B,)
+    bidx = jnp.arange(b)
+    ck = cache["k"].at[bidx, slot].set(k[:, 0])
+    cv = cache["v"].at[bidx, slot].set(v[:, 0])
+    kpos = cache["kpos"].at[bidx, slot].set(pos)
+    win = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max // 2)
+    valid = (kpos <= pos[:, None]) & (kpos > pos[:, None] - win)    # (B,W)
+    kk = _kv_for_q(cfg, ck)
+    vv = _kv_for_q(cfg, cv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) / np.sqrt(cfg.dh)
+    scores = jnp.where(valid[:, None, None], scores, BIG_NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x1.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+    mask = _head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": ck, "v": cv, "kpos": kpos}
+
+
+# ===========================================================================
+# SwiGLU MLP
+# ===========================================================================
+
+def mlp_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": init_dense(k2, (d, f), d, cfg.dtype),
+        "w_down": init_dense(k3, (f, d), f, cfg.dtype),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = init_dense(k1, (d, f), d, cfg.dtype)
+    return p
+
+
+def mlp_axes(cfg: ModelConfig) -> dict:
+    ax = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    if cfg.mlp_gated:
+        ax["w_gate"] = ("embed", "mlp")
+    return ax
+
+
+def mlp_apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    h = acts.constrain_batch_model(h, h.ndim - 1)       # hidden: model-sharded
+    return acts.constrain_stream(h @ p["w_down"])
+
+
+# ===========================================================================
+# MoE (token-choice top-k, static capacity, gather/scatter dispatch)
+# ===========================================================================
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": init_dense(k0, (d, e), d, jnp.float32),           # router in f32
+        "w_gate": init_dense(k1, (e, d, f), d, cfg.dtype),
+        "w_up": init_dense(k2, (e, d, f), d, cfg.dtype),
+        "w_down": init_dense(k3, (e, f, d), f, cfg.dtype),
+    }
+
+
+def moe_axes(cfg: ModelConfig) -> dict:
+    return {"router": ("embed", None),
+            "w_gate": ("expert", "embed", "expert_mlp"),
+            "w_up": ("expert", "embed", "expert_mlp"),
+            "w_down": ("expert", "expert_mlp", "embed")}
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    ideal = n_tokens * cfg.n_experts_active / cfg.n_experts
+    return max(1, int(np.ceil(ideal * cfg.expert_capacity_factor)))
+
+
+def moe_apply_ep(p: dict, cfg: ModelConfig, x: jnp.ndarray):
+    """Explicit expert parallelism (O4'): shard_map over the model axis.
+
+    Propagation-based EP hit XLA scatter-partitioning weaknesses (involuntary
+    full rematerialization of the dispatch buffer: olmoe train spent 275 s in
+    collectives). Manual dataflow instead: every model rank runs the (cheap)
+    router + per-row dispatch redundantly, builds the buffer ONLY for its own
+    E/TP experts, runs its expert FFNs locally, and ONE psum over the model
+    axis combines the token outputs — per layer collective = B·S·D bytes,
+    independent of E."""
+    from repro.distributed.act_sharding import _POLICY
+    pol = _POLICY.get()
+    mesh = pol["mesh"]
+    tp_axis = pol["model"]
+    tp = mesh.shape[tp_axis]
+    batch_axes = pol["batch"] if isinstance(pol["batch"], tuple) \
+        else (pol["batch"],)
+    e, k = cfg.n_experts, cfg.n_experts_active
+    e_loc = e // tp
+    b_global, s, d = x.shape
+    n_dp = 1
+    for a in batch_axes:
+        n_dp *= mesh.shape[a]
+    if b_global % n_dp != 0:
+        batch_axes, n_dp = (), 1                  # replicate odd batches
+    b = b_global // n_dp
+    cap = moe_capacity(cfg, s)
+    sk = s * k
+    from jax.sharding import PartitionSpec as P
+
+    def body(router, w_gate, w_up, w_down, xl):
+        rank = jax.lax.axis_index(tp_axis)
+        logits = jnp.einsum("bsd,de->bse", xl.astype(jnp.float32), router)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)                      # (B,S,k)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+        me = jnp.mean(probs, axis=(0, 1))
+        ce = jnp.mean(jax.nn.one_hot(top_e[..., 0], e), axis=(0, 1))
+        aux = e * jnp.sum(me * ce)
+
+        flat_e = top_e.reshape(b, sk)
+        is_local = (flat_e // e_loc) == rank
+        # non-local assignments sort to the end and never enter capacity
+        sort_key = jnp.where(is_local, flat_e, e)
+        order = jnp.argsort(sort_key, axis=-1)
+        sorted_e = jnp.take_along_axis(sort_key, order, axis=-1)
+        first = jax.vmap(lambda se: jnp.searchsorted(se, se, side="left")
+                         )(sorted_e)
+        pos_in_e = jnp.arange(sk)[None] - first
+        keep = (pos_in_e < cap) & (sorted_e < e)
+        e_rel = jnp.where(keep, sorted_e - rank * e_loc, 0)
+        # dropped / non-local assignments scatter into a TRASH slot — never
+        # into slot 0 of expert 0 (a .set there would clobber real tokens)
+        dest = jnp.where(keep, e_rel * cap + pos_in_e, e_loc * cap)
+        token_of = order // k
+
+        bidx = jnp.arange(b)[:, None]
+        src = jnp.take_along_axis(xl, token_of[..., None], axis=1) \
+            * keep[..., None].astype(xl.dtype)
+        buf = jnp.zeros((b, e_loc * cap + 1, d), xl.dtype
+                        ).at[bidx, dest].set(src)[:, :-1].reshape(b, e_loc, cap, d)
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, w_gate)) \
+            * jnp.einsum("becd,edf->becf", buf, w_up)
+        h = jnp.einsum("becf,efd->becd", h, w_down).reshape(b, e_loc * cap, d)
+
+        gathered = jnp.take_along_axis(h, dest[..., None], axis=1,
+                                       mode="clip")
+        gate = (jnp.take_along_axis(top_p.reshape(b, sk), order, axis=-1)
+                * keep).astype(xl.dtype)
+        out = jnp.zeros((b, s, d), xl.dtype).at[bidx, token_of].add(
+            gathered * gate[..., None])
+        out = jax.lax.psum(out, tp_axis)
+        if batch_axes:
+            # per-shard balance loss, pmean'd — the standard EP choice (a
+            # global mean would need an extra reduction of the full probs)
+            aux = jax.lax.pmean(aux, batch_axes)
+        return out, aux
+
+    bspec = batch_axes if len(batch_axes) != 1 else batch_axes[0]
+    fn = jax.shard_map(
+        body, mesh=mesh, axis_names=set(mesh.axis_names),    # full manual
+        in_specs=(P(None, None), P(tp_axis, None, None),
+                  P(tp_axis, None, None), P(tp_axis, None, None),
+                  P(bspec, None, None) if batch_axes else P(None, None, None)),
+        out_specs=(P(bspec, None, None) if batch_axes else P(None, None, None),
+                   P()),
+        check_vma=False)
+    out, aux = fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
+    return acts.constrain_stream(out), aux
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray):
+    """x (B,S,D) -> (out (B,S,D), aux_loss). Dropped-token capacity MoE.
+
+    Dispatch is PER BATCH ROW (sort/position/scatter along the row's own
+    S*k assignments): routing stays fully batch-parallel — no cross-device
+    sort/gather of the global token set (the baseline's global argsort made
+    XLA replicate the whole dispatch; olmoe train was 50x collective-bound).
+    Capacity is per (row, expert): ceil(S*k/E * cf), the standard per-rank
+    EP capacity semantics."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_active
+    tp = acts.model_axis_size()
+    if tp > 1 and e % tp == 0:
+        return moe_apply_ep(p, cfg, x)                   # O4': explicit EP
+    cap = moe_capacity(cfg, s)
+    sk = s * k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                          # (B,S,k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)          # renormalize
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(top_e[..., 0], e), axis=(0, 1))
+    aux_loss = e * jnp.sum(me * ce)
+
+    # --- per-row dispatch ---------------------------------------------------
+    flat_e = top_e.reshape(b, sk)
+    order = jnp.argsort(flat_e, axis=-1)                            # (B, S*k)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    first_of_run = jax.vmap(
+        lambda se: jnp.searchsorted(se, se, side="left"))(sorted_e)
+    pos_in_e = jnp.arange(sk)[None] - first_of_run                  # (B, S*k)
+    keep = pos_in_e < cap
+    # overflow drops go to a trash slot, not slot 0 of expert 0
+    dest = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)      # (B, S*k)
+    token_of = order // k                                           # (B, S*k)
+
+    bidx = jnp.arange(b)[:, None]
+    src = jnp.take_along_axis(x, token_of[..., None], axis=1) \
+        * keep[..., None].astype(x.dtype)
+    buf = jnp.zeros((b, e * cap + 1, d), x.dtype).at[bidx, dest].set(src)
+    buf = acts.constrain_expert(buf[:, :-1].reshape(b, e, cap, d), expert_dim=1)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) \
+        * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    h = acts.constrain_expert(h, expert_dim=1)
+    h = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    h = acts.constrain_expert(h, expert_dim=1).reshape(b, e * cap, d)
+
+    gathered = jnp.take_along_axis(h, dest[..., None], axis=1,
+                                   mode="clip")                     # (B,S*k,D)
+    gate = (jnp.take_along_axis(top_p.reshape(b, sk), order, axis=-1)
+            * keep).astype(x.dtype)
+    out = jnp.zeros((b, s, d), x.dtype).at[bidx, token_of].add(
+        gathered * gate[..., None])
+    return acts.constrain_stream(out), aux_loss
+
+
+# ===========================================================================
+# Mamba2 SSD mixer (state-space duality, chunked)
+# ===========================================================================
+
+def ssd_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, di, n, hs = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n                                           # x, B, C (G=1)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    # z / xBC / dt projections kept as SEPARATE params: the concatenated
+    # width (2*di+2n+hs, e.g. 3352) is indivisible by the 16-way model axis
+    # and would force replication; split, each block shards cleanly (O3).
+    return {
+        "in_z": init_dense(k1, (d, di), d, cfg.dtype),
+        "in_xbc": init_dense(k4, (d, conv_dim), d, cfg.dtype),
+        "in_dt": init_dense(k5, (d, hs), d, cfg.dtype),
+        "conv_w": init_dense(k2, (cfg.ssm_conv, conv_dim), cfg.ssm_conv, cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, hs)).astype(jnp.float32),
+        "d_skip": jnp.ones((hs,), jnp.float32),
+        "dt_bias": jnp.zeros((hs,), jnp.float32),
+        "norm": jnp.ones((di,), cfg.dtype),
+        "out_proj": init_dense(k3, (di, d), di, cfg.dtype),
+    }
+
+
+def ssd_axes(cfg: ModelConfig) -> dict:
+    return {"in_z": ("embed", "mlp"), "in_xbc": ("embed", "mlp"),
+            "in_dt": ("embed", None), "conv_w": ("conv", "mlp"),
+            "conv_b": ("mlp",), "a_log": (None,), "d_skip": (None,),
+            "dt_bias": (None,), "norm": ("mlp",), "out_proj": ("mlp", "embed")}
+
+
+def _project_zxbcdt(p, x):
+    return x @ p["in_z"], x @ p["in_xbc"], x @ p["in_dt"]
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d. xbc (B,S,C); w (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def _ssd_chunked(xs, b_in, c_in, dt, a_log, chunk: int, init_state=None):
+    """SSD core. xs (B,S,H,P); b_in/c_in (B,S,N) (G=1); dt (B,S,H) (post-
+    softplus). Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s_orig, h, pdim = xs.shape
+    n = b_in.shape[-1]
+    q = min(chunk, s_orig)
+    pad = (-s_orig) % q
+    if pad:        # causal: end-padding never influences the returned prefix
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // q
+    a = -jnp.exp(a_log)                                             # (H,)
+    da = (a[None, None] * dt).reshape(bsz, nc, q, h)                # log-decay
+    xbar = (xs * dt[..., None]).reshape(bsz, nc, q, h, pdim)
+    bc = b_in.reshape(bsz, nc, q, n)
+    cc = c_in.reshape(bsz, nc, q, n)
+
+    cum = jnp.cumsum(da, axis=2)                                    # (B,nc,Q,H)
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for j<=i. Mask in LOG space
+    # (before exp) — masking after exp leaks NaN through where() gradients.
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]              # (B,nc,Q,K,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.exp(jnp.where(tri[None, None, ..., None], li, -1e30))
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc)                      # (B,nc,Q,K)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp",
+                         cb.astype(jnp.float32), l_mat, xbar.astype(jnp.float32))
+
+    # chunk summary states: S_c = sum_k exp(cum_end - cum_k) * B_k ⊗ xbar_k
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)                 # (B,nc,Q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchnp",
+                        bc.astype(jnp.float32), decay_to_end, xbar.astype(jnp.float32))
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                         # (B,nc,H)
+
+    def scan_fn(r, inp):
+        s_c, dk = inp                                               # (B,H,N,P),(B,H)
+        r_new = r * dk[..., None, None] + s_c
+        return r_new, r                                             # emit state BEFORE chunk
+
+    r0 = jnp.zeros((bsz, h, n, pdim), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+    final, r_prev = jax.lax.scan(
+        scan_fn, r0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    r_prev = r_prev.transpose(1, 0, 2, 3, 4)                        # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         cc.astype(jnp.float32), jnp.exp(cum), r_prev)
+    y = (y_intra + y_inter).reshape(bsz, s, h, pdim)[:, :s_orig]
+    return y, final
+
+
+def ssd_forward(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                init_state=None, return_state: bool = False):
+    """Full-sequence Mamba2 mixer. x (B,S,D) -> (B,S,D)."""
+    di, n, hs, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc_raw, dt = _project_zxbcdt(p, x)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :di].reshape(*x.shape[:2], hs, pdim)
+    b_in = xbc[..., di:di + n]
+    c_in = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, final = _ssd_chunked(xs.astype(jnp.float32), b_in.astype(jnp.float32),
+                            c_in.astype(jnp.float32), dt, p["a_log"],
+                            cfg.ssm_chunk, init_state)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        # decode conv cache holds the last K-1 PRE-activation xBC inputs
+        kc = cfg.ssm_conv - 1
+        tail = jnp.pad(xbc_raw, ((0, 0), (kc, 0), (0, 0)))[:, -kc:]
+        return out, {"ssm": final.astype(jnp.float32),
+                     "conv": tail.astype(jnp.float32)}
+    return out
+
+
+def ssd_cache_init(cfg: ModelConfig, batch: int) -> dict:
+    di, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, n, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), jnp.float32),
+    }
+
+
+def ssd_decode(p: dict, cfg: ModelConfig, x1: jnp.ndarray, cache: dict):
+    """Single-token recurrent step. x1 (B,1,D)."""
+    di, n, hs, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _project_zxbcdt(p, x1)                             # (B,1,*)
+    window = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None]                           # (B,1,C)
+    xs = xbc1[..., :di].reshape(-1, hs, pdim).astype(jnp.float32)   # (B,H,P)
+    b_in = xbc1[:, 0, di:di + n].astype(jnp.float32)                # (B,N)
+    c_in = xbc1[:, 0, di + n:].astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(a[None] * dt1)                                  # (B,H)
+    xbar = xs * dt1[..., None]                                      # (B,H,P)
+    state = cache["ssm"] * decay[..., None, None] \
+        + jnp.einsum("bn,bhp->bhnp", b_in, xbar)
+    y = jnp.einsum("bn,bhnp->bhp", c_in, state) \
+        + p["d_skip"][None, :, None] * xs
+    y = y.reshape(-1, 1, di).astype(x1.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_cache = {"ssm": state,
+                 "conv": window[:, 1:].astype(jnp.float32)}
+    return out, new_cache

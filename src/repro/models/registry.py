@@ -1,0 +1,139 @@
+"""Uniform model API across families + the train/serve entry points used by
+launch/, tests and benchmarks."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decoder, encdec
+from repro.models.common import ModelConfig, cross_entropy_loss
+
+
+class ModelAPI(NamedTuple):
+    init: Callable
+    axes: Callable
+    loss_fn: Callable              # (params, cfg, batch) -> (loss, metrics)
+    forward: Callable              # (params, cfg, batch) -> logits
+    init_cache: Callable           # (cfg, batch, cache_len) -> cache
+    prefill: Callable              # (params, cfg, cache, batch) -> (logits, cache)
+    decode_step: Callable          # (params, cfg, cache, tokens, pos) -> (logits, cache)
+
+
+# --- decoder-only families ---------------------------------------------------
+
+def _dec_loss(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    logits, aux = decoder.forward(params, cfg, tokens=tokens[:, :-1])
+    loss = cross_entropy_loss(logits, tokens[:, 1:])
+    total = loss + 0.01 * aux
+    return total, {"ce": loss, "moe_aux": aux}
+
+
+def _dec_forward(params, cfg, batch):
+    logits, _ = decoder.forward(params, cfg, tokens=batch["tokens"])
+    return logits
+
+
+def _dec_prefill(params, cfg, cache, batch):
+    return decoder.prefill(params, cfg, cache, tokens=batch["tokens"])
+
+
+# --- vlm: stub patch embeddings prepended to text ----------------------------
+
+def _vlm_embeds(params, cfg, batch):
+    txt = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return jnp.concatenate([batch["img_embeds"].astype(txt.dtype), txt], axis=1)
+
+
+def _vlm_loss(params, cfg: ModelConfig, batch):
+    # predict text tokens only; image positions are context
+    tokens = batch["tokens"]                       # (B, S_text+1)
+    embeds = _vlm_embeds(params, cfg, {"tokens": tokens[:, :-1],
+                                       "img_embeds": batch["img_embeds"]})
+    logits, aux = decoder.forward(params, cfg, embeds=embeds)
+    n_img = batch["img_embeds"].shape[1]
+    logits_txt = logits[:, n_img:]
+    loss = cross_entropy_loss(logits_txt, tokens[:, 1:])
+    return loss + 0.01 * aux, {"ce": loss, "moe_aux": aux}
+
+
+def _vlm_forward(params, cfg, batch):
+    embeds = _vlm_embeds(params, cfg, batch)
+    logits, _ = decoder.forward(params, cfg, embeds=embeds)
+    return logits
+
+
+def _vlm_prefill(params, cfg, cache, batch):
+    embeds = _vlm_embeds(params, cfg, batch)
+    return decoder.prefill(params, cfg, cache, embeds=embeds)
+
+
+# --- enc-dec ------------------------------------------------------------------
+
+def _encdec_loss(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    logits, aux = encdec.forward(params, cfg, batch["frames"], tokens[:, :-1])
+    loss = cross_entropy_loss(logits, tokens[:, 1:])
+    return loss, {"ce": loss, "moe_aux": aux}
+
+
+def _encdec_forward(params, cfg, batch):
+    logits, _ = encdec.forward(params, cfg, batch["frames"], batch["tokens"])
+    return logits
+
+
+def _encdec_prefill(params, cfg, cache, batch):
+    return encdec.prefill(params, cfg, cache, batch["frames"], batch["tokens"])
+
+
+_DEC_API = ModelAPI(
+    init=decoder.init_decoder, axes=decoder.decoder_axes,
+    loss_fn=_dec_loss, forward=_dec_forward,
+    init_cache=decoder.init_cache, prefill=_dec_prefill,
+    decode_step=decoder.decode_step)
+
+
+_REGISTRY: dict[str, ModelAPI] = {
+    "dense": _DEC_API,
+    "moe": _DEC_API,
+    "ssm": _DEC_API,
+    "hybrid": _DEC_API,
+    "vlm": _DEC_API._replace(loss_fn=_vlm_loss, forward=_vlm_forward,
+                             prefill=_vlm_prefill),
+    "encdec": ModelAPI(
+        init=encdec.init_encdec, axes=encdec.encdec_axes,
+        loss_fn=_encdec_loss, forward=_encdec_forward,
+        init_cache=encdec.init_cache, prefill=_encdec_prefill,
+        decode_step=encdec.decode_step),
+}
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    return _REGISTRY[cfg.family]
+
+
+def rules_overrides(cfg: ModelConfig, model_axis_size: int) -> dict:
+    """Per-arch logical-axis adjustments for divisibility on the mesh.
+
+    * kv heads replicate when they don't divide the model axis (MQA/GQA);
+    * MoE: shard the expert dim when divisible, else the per-expert ffn dim;
+    * heads fall back to unsharded for tiny head counts (smoke configs)."""
+    over: dict[str, Any] = {}
+    if cfg.n_kv_heads % model_axis_size != 0:
+        over["kv_heads"] = None
+    if cfg.n_heads % model_axis_size != 0:
+        over["heads"] = None
+    if cfg.d_ff and cfg.d_ff % model_axis_size != 0:
+        over["mlp"] = None
+    if cfg.n_experts:
+        if cfg.n_experts % model_axis_size == 0:
+            over["expert"] = "model"
+            over["expert_mlp"] = None
+        else:
+            over["expert"] = None
+            over["expert_mlp"] = "model" if cfg.d_ff % model_axis_size == 0 else None
+    if cfg.vocab_size % model_axis_size != 0:
+        over["vocab"] = None
+    return over

@@ -1,0 +1,4 @@
+from repro.optim.adamw import OptConfig, adamw_init, adamw_update, lr_at  # noqa: F401
+from repro.optim.compress import (  # noqa: F401
+    quantize_grad, dequantize_grad, compressed_psum, ErrorFeedback,
+)

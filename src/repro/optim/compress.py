@@ -1,0 +1,57 @@
+"""Error-feedback int8 gradient compression for the cross-pod all-reduce.
+
+At 2 pods x 50 GB/s ICI, the cross-pod gradient reduction of a 314B-param
+model is the slowest collective in the system. The classic mitigation
+(1-bit Adam / EF-SGD lineage): quantize the *cross-pod* reduction to int8
+with an error-feedback residual so the quantization noise is re-injected
+next step instead of lost. Within-pod reductions stay full precision.
+
+Usage (inside shard_map over the ("pod","data") axes):
+
+    g_local = psum(g, "data")                 # full-precision within pod
+    g_global, ef = compressed_psum(g_local + ef, "pod")
+
+The pure quantize/dequantize pieces are exposed separately so the unit test
+can verify the EF contraction property without a mesh."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedback(NamedTuple):
+    residual: jnp.ndarray
+
+
+def quantize_grad(g: jnp.ndarray, bits: int = 8):
+    """Symmetric per-tensor quantization -> (int codes, f32 scale)."""
+    qmax = (1 << (bits - 1)) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / qmax
+    q = jnp.clip(jnp.round(g / scale), -qmax - 1, qmax).astype(jnp.int32)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_grad(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(g: jnp.ndarray, axis_name: str, bits: int = 8,
+                    residual: jnp.ndarray | None = None):
+    """int-quantized psum over `axis_name` with error feedback.
+
+    Must be called inside shard_map with `axis_name` bound. Returns
+    (mean-reduced g (f32), new residual)."""
+    if residual is not None:
+        g = g.astype(jnp.float32) + residual
+    q, scale = quantize_grad(g, bits)
+    # max-reduce scales so all ranks dequantize identically, then int psum
+    scale = jax.lax.pmax(scale, axis_name)
+    qmax = (1 << (bits - 1)) - 1
+    q = jnp.clip(jnp.round(g / scale), -qmax - 1, qmax).astype(jnp.int32)
+    sent = q.astype(jnp.float32) * scale
+    new_residual = g - sent                      # what this rank failed to send
+    total = jax.lax.psum(q, axis_name).astype(jnp.float32) * scale
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return total / n, new_residual

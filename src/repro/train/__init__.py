@@ -1,0 +1,4 @@
+from repro.train.step import (  # noqa: F401
+    TrainState, build_train_step, make_train_state, param_shardings, zero_spec,
+)
+from repro.train.loop import train_loop, TrainLoopConfig  # noqa: F401

@@ -1,0 +1,153 @@
+"""Train-step builder: grad accumulation, AdamW, ZeRO-1 sharded moments.
+
+The returned step is a plain function suitable for jax.jit with explicit
+in/out shardings (launch/train.py and launch/dryrun.py provide those).
+Gradient accumulation scans over microbatches so peak activation memory is
+1/grad_accum of the full batch (required for grok-314b train_4k to fit a
+16 GB v5e chip)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    AxisRules, DEFAULT_RULES, fsdp_rules_for_mesh, logical_to_spec,
+    sanitize_specs_tree, specs_for_tree)
+from repro.models.common import ModelConfig
+from repro.models.registry import ModelAPI, get_api, rules_overrides
+from repro.optim.adamw import OptConfig, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: dict
+    step: jnp.ndarray
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh) -> AxisRules:
+    if cfg.pure_dp:
+        # small-arch strategy: weights REPLICATED over the model axis (which
+        # carries sequence parallelism for activations instead); ZeRO shards
+        # the embed dim of weight matrices across every mesh axis.
+        merged = {k: None for k in DEFAULT_RULES.rules}
+        all_axes = tuple(mesh.axis_names)
+        merged["embed"] = all_axes if len(all_axes) > 1 else all_axes[0]
+        return AxisRules(merged)
+    base = fsdp_rules_for_mesh(mesh) if cfg.use_fsdp else DEFAULT_RULES
+    model_size = mesh.shape.get("model", 1)
+    over = rules_overrides(cfg, model_size)
+    merged = dict(base.rules)
+    merged.update(over)
+    if cfg.use_fsdp:
+        # FSDP: additionally shard the embed dim of weight matrices over data
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        merged["embed"] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return AxisRules(merged)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, api: Optional[ModelAPI] = None):
+    api = api or get_api(cfg)
+    rules = rules_for(cfg, mesh)
+    spec_tree = specs_for_tree(api.axes(cfg), rules)
+    params_sds = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0), cfg))
+    return sanitize_specs_tree(spec_tree, params_sds, mesh)
+
+
+def zero_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """ZeRO-1: extend a param spec with sharding over every UNUSED mesh axis
+    on the first still-unsharded, divisible dim — optimizer moments live 1/N
+    per device. Falls back to progressively smaller axis subsets when
+    divisibility fails (e.g. vocab=50280 shards over data but not 512)."""
+    used = set()
+    for s in spec:
+        if s is None:
+            continue
+        for a in (s if isinstance(s, tuple) else (s,)):
+            used.add(a)
+    free = [a for a in mesh.axis_names if a not in used]
+    # try largest subset first, dropping trailing axes on failure
+    for cut in range(len(free), 0, -1):
+        axes = free[:cut]
+        nshard = int(np.prod([mesh.shape[a] for a in axes]))
+        if nshard <= 1:
+            continue
+        new = list(spec)
+        for i, s in enumerate(new):
+            if s is None and shape[i] % nshard == 0 and shape[i] >= nshard:
+                new[i] = tuple(axes) if len(axes) > 1 else axes[0]
+                return P(*new)
+    return spec
+
+
+def opt_shardings(param_specs: Any, params_shape: Any, mesh: Mesh) -> dict:
+    m_specs = jax.tree.map(
+        lambda sp, p: zero_spec(sp, p.shape, mesh), param_specs, params_shape,
+        is_leaf=lambda x: isinstance(x, P))
+    return {"m": m_specs, "v": m_specs, "step": P()}
+
+
+def make_train_state(key: jax.Array, cfg: ModelConfig,
+                     api: Optional[ModelAPI] = None) -> TrainState:
+    api = api or get_api(cfg)
+    params = api.init(key, cfg)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh, state_shape: TrainState):
+    """PartitionSpec pytree matching a TrainState (from eval_shape)."""
+    p_specs = param_shardings(cfg, mesh)
+    p_specs = sanitize_specs_tree(p_specs, state_shape.params, mesh)
+    o_specs = opt_shardings(p_specs, state_shape.params, mesh)
+    return TrainState(params=p_specs, opt=o_specs, step=P())
+
+
+def build_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                     api: Optional[ModelAPI] = None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch leaves have a leading global-batch dim; with cfg.grad_accum > 1 the
+    batch splits into microbatches scanned sequentially (grad accumulation)."""
+    api = api or get_api(cfg)
+    accum = max(1, cfg.grad_accum)
+
+    def loss_fn(params, batch):
+        return api.loss_fn(params, cfg, batch)
+
+    def train_step(state: TrainState, batch: dict):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                (l, g) = carry
+                (li, mi), gi = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mb)
+                g = jax.tree.map(jnp.add, g, gi)
+                return (l + li, g), mi
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            (loss, grads), metrics = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            state.params, grads, state.opt, opt_cfg)
+        metrics = dict(metrics) if isinstance(metrics, dict) else {"aux": metrics}
+        metrics["loss"] = loss
+        metrics.update(opt_metrics)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,7 @@
+from repro.utils.tree import (  # noqa: F401
+    tree_size,
+    tree_bytes,
+    tree_map_with_path_str,
+    flatten_dict,
+    unflatten_dict,
+)

@@ -1,0 +1,52 @@
+"""Small pytree helpers shared across the framework."""
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+import jax
+import numpy as np
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements in all leaves."""
+    return sum(int(np.prod(x.shape)) if hasattr(x, "shape") else 1
+               for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes across leaves (works on ShapeDtypeStruct too)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_map_with_path_str(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """jax.tree.map_with_path but with '/'-joined string keys."""
+    def _fn(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        return fn(key, leaf)
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def flatten_dict(tree: Mapping[str, Any], sep: str = "/", prefix: str = "") -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    for k, v in tree.items():
+        key = f"{prefix}{sep}{k}" if prefix else str(k)
+        if isinstance(v, Mapping):
+            out.update(flatten_dict(v, sep=sep, prefix=key))
+        else:
+            out[key] = v
+    return out
+
+
+def unflatten_dict(flat: Mapping[str, Any], sep: str = "/") -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    for k, v in flat.items():
+        parts = k.split(sep)
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out

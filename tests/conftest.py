@@ -1,0 +1,13 @@
+import os
+import sys
+
+# Smoke tests and benches run on the single real CPU device. ONLY the
+# dry-run (launch/dryrun.py) overrides the device count, never here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# repo root on sys.path so tests can import the benchmarks package
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

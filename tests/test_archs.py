@@ -1,0 +1,104 @@
+"""Per-assigned-architecture smoke tests: a REDUCED config of the same
+family runs one forward + one train step on CPU, asserting output shapes and
+no NaNs. (Full configs are exercised via the dry-run only.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.shapes import SHAPES, shapes_for
+from repro.models.registry import get_api
+
+B, S = 2, 16
+
+
+def _smoke_batch(cfg, key):
+    batch = {"tokens": jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.random.normal(
+            key, (B, cfg.n_img_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (B, cfg.enc_seq_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+
+    logits = api.forward(params, cfg, batch)
+    s_total = S + 1 + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, s_total, cfg.vocab_size), logits.shape
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    (loss, metrics), grads = jax.value_and_grad(
+        api.loss_fn, has_aux=True)(params, cfg, batch)
+    assert bool(jnp.isfinite(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs must carry the exact assigned hyperparameters."""
+    expected = {
+        "olmoe-1b-7b": dict(n_layers=16, d_model=2048, n_heads=16,
+                            n_kv_heads=16, d_ff=1024, vocab_size=50304,
+                            n_experts=64, n_experts_active=8),
+        "grok-1-314b": dict(n_layers=64, d_model=6144, n_heads=48,
+                            n_kv_heads=8, d_ff=32768, vocab_size=131072,
+                            n_experts=8, n_experts_active=2),
+        "granite-20b": dict(n_layers=52, d_model=6144, n_heads=48,
+                            n_kv_heads=1, d_ff=24576, vocab_size=49152),
+        "minitron-8b": dict(n_layers=32, d_model=4096, n_heads=32,
+                            n_kv_heads=8, d_ff=16384, vocab_size=256000),
+        "minitron-4b": dict(n_layers=32, d_model=3072, n_heads=24,
+                            n_kv_heads=8, d_ff=9216, vocab_size=256000),
+        "deepseek-7b": dict(n_layers=30, d_model=4096, n_heads=32,
+                            n_kv_heads=32, d_ff=11008, vocab_size=102400),
+        "mamba2-130m": dict(n_layers=24, d_model=768, vocab_size=50280,
+                            ssm_state=128),
+        "llava-next-34b": dict(n_layers=60, d_model=7168, n_heads=56,
+                               n_kv_heads=8, d_ff=20480, vocab_size=64000),
+        "whisper-tiny": dict(n_layers=4, d_model=384, n_heads=6,
+                             n_kv_heads=6, d_ff=1536, vocab_size=51865),
+        "hymba-1.5b": dict(n_layers=32, d_model=1600, n_heads=25,
+                           n_kv_heads=5, d_ff=5504, vocab_size=32001,
+                           ssm_state=16),
+    }[arch]
+    cfg = get_config(arch)
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_shape_skip_policy():
+    assert shapes_for("ssm") == ["train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"]
+    assert shapes_for("hybrid")[-1] == "long_500k"
+    for fam in ("dense", "moe", "vlm", "encdec"):
+        assert "long_500k" not in shapes_for(fam)
+    assert SHAPES["long_500k"].kind == "decode"
+    assert SHAPES["train_4k"].global_batch == 256
+
+
+def test_param_counts_plausible():
+    """Analytic param counts should land near the archs' nameplate sizes."""
+    approx = {
+        "grok-1-314b": (314e9, 0.15),
+        "granite-20b": (20e9, 0.35),
+        "minitron-8b": (8e9, 0.45),   # fat embeddings dominate
+        "minitron-4b": (4e9, 0.6),
+        "deepseek-7b": (7e9, 0.25),
+        "llava-next-34b": (34e9, 0.25),
+        "mamba2-130m": (130e6, 0.45),
+        "hymba-1.5b": (1.5e9, 0.5),
+        "olmoe-1b-7b": (6.9e9, 0.35),
+    }
+    for arch, (target, tol) in approx.items():
+        n = get_config(arch).param_count()
+        assert abs(n - target) / target < tol, (arch, n, target)

@@ -1,0 +1,136 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose against the
+pure-jnp oracles in repro/kernels/ref.py (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+LEVELS = [(8, 8), (4, 4), (4, 4), (2, 2)]
+STARTS = [0, 64, 80, 96]
+N_PIX = 100
+
+
+def _point_data(key, b, nq, h, k, dtype):
+    ks = jax.random.split(key, 5)
+    lvl = jax.random.randint(ks[0], (b, nq, h, k), 0, 4)
+    wl = jnp.take(jnp.asarray([w for _, w in LEVELS]), lvl).astype(jnp.int32)
+    hl = jnp.take(jnp.asarray([hh for hh, _ in LEVELS]), lvl).astype(jnp.int32)
+    st = jnp.take(jnp.asarray(STARTS), lvl).astype(jnp.int32)
+    x = jax.random.uniform(ks[1], (b, nq, h, k), minval=-2.0, maxval=10.0
+                           ).astype(dtype)
+    y = jax.random.uniform(ks[2], (b, nq, h, k), minval=-2.0, maxval=10.0
+                           ).astype(dtype)
+    p = jax.nn.softmax(jax.random.normal(ks[3], (b, nq, h, k)), axis=-1
+                       ).astype(dtype)
+    return x, y, st, wl, hl, p
+
+
+@pytest.mark.parametrize("b,nq,h,k,dh", [
+    (1, 16, 1, 4, 8), (2, 37, 3, 16, 32), (1, 128, 8, 16, 32), (2, 5, 2, 64, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_msgs_fused_sweep(b, nq, h, k, dh, dtype):
+    key = jax.random.PRNGKey(b * 100 + nq)
+    v = jax.random.normal(key, (b, N_PIX, h, dh)).astype(dtype)
+    x, y, st, wl, hl, p = _point_data(key, b, nq, h, k, dtype)
+    out = ops.msgs_fused(v, x, y, st, wl, hl, p, block_q=16)
+    want = ref.msgs_fused_ref(v, x, y, st, wl, hl, p)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_msgs_fused_remap_fwp_compact():
+    key = jax.random.PRNGKey(3)
+    b, nq, h, k, dh = 2, 33, 2, 8, 16
+    n_rows = 40                                  # compacted buffer (+0 row)
+    v = jax.random.normal(key, (b, n_rows, h, dh))
+    v = v.at[:, -1].set(0.0)                     # sentinel row = zeros
+    remap = jax.random.randint(key, (b, N_PIX), 0, n_rows)
+    x, y, st, wl, hl, p = _point_data(key, b, nq, h, k, jnp.float32)
+    out = ops.msgs_fused(v, x, y, st, wl, hl, p, remap=remap, block_q=16)
+    want = ref.msgs_fused_ref(v, x, y, st, wl, hl, p, remap=remap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_msgs_fused_zero_probs_prune_exactly():
+    """PAP semantics: zero-probability points contribute exactly nothing."""
+    key = jax.random.PRNGKey(4)
+    b, nq, h, k, dh = 1, 20, 2, 8, 16
+    v = jax.random.normal(key, (b, N_PIX, h, dh))
+    x, y, st, wl, hl, p = _point_data(key, b, nq, h, k, jnp.float32)
+    mask = jax.random.bernoulli(key, 0.5, p.shape)
+    p_masked = jnp.where(mask, p, 0.0)
+    out = ops.msgs_fused(v, x, y, st, wl, hl, p_masked, block_q=16)
+    want = ref.msgs_fused_ref(v, x, y, st, wl, hl, p_masked)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("hl_wl_halo", [((32, 16), 3), ((16, 16), 2), ((64, 8), 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_msgs_windowed_sweep(hl_wl_halo, dtype):
+    (hl, wl), halo = hl_wl_halo
+    k, dh = 8, 16
+    key = jax.random.PRNGKey(hl)
+    v2 = jax.random.normal(key, (hl, wl, dh)).astype(dtype)
+    nq = hl * wl
+    ys, xs = np.meshgrid(np.arange(hl) + 0.5, np.arange(wl) + 0.5, indexing="ij")
+    offx = jax.random.uniform(jax.random.fold_in(key, 1), (nq, k),
+                              minval=-halo, maxval=halo)
+    offy = jax.random.uniform(jax.random.fold_in(key, 2), (nq, k),
+                              minval=-halo, maxval=halo)
+    xq = (jnp.asarray(xs.reshape(-1))[:, None] + offx - 0.5).astype(dtype)
+    yq = (jnp.asarray(ys.reshape(-1))[:, None] + offy - 0.5).astype(dtype)
+    p = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 3), (nq, k)),
+                       axis=-1).astype(dtype)
+    out = ops.msgs_windowed(v2, xq, yq, p, query_level_width=wl, halo=halo,
+                            block_q=64)
+    want = ref.msgs_windowed_ref(v2, xq, yq, p)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("m,k,n", [(70, 90, 50), (128, 128, 128), (33, 257, 65)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_sweep(m, k, n, dtype):
+    key = jax.random.PRNGKey(m)
+    x = jax.random.normal(key, (m, k)).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)).astype(dtype)
+    out = ops.matmul(x, w, bm=32, bn=32, bk=32)
+    want = ref.matmul_ref(x, w)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_matmul_int8_dequant_in_kernel():
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (64, 96))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (96, 48))
+    s = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 127.0
+    wq = jnp.clip(jnp.round(w / s), -128, 127).astype(jnp.int8)
+    out = ops.matmul(x, wq, s, bm=32, bn=16, bk=32)
+    want = ref.matmul_ref(x, wq, s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # and the quantized result approximates the f32 one
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w),
+                               rtol=0.2, atol=0.2)
+
+
+def test_kernel_matches_unfused_reference():
+    """Fusion (C6) must not change semantics: fused kernel == the
+    materialize-then-aggregate baseline."""
+    key = jax.random.PRNGKey(11)
+    b, nq, h, k, dh = 2, 24, 2, 16, 16
+    v = jax.random.normal(key, (b, N_PIX, h, dh))
+    x, y, st, wl, hl, p = _point_data(key, b, nq, h, k, jnp.float32)
+    fused = ops.msgs_fused(v, x, y, st, wl, hl, p, block_q=8)
+    unfused = ref.msgs_unfused_ref(v, x, y, st, wl, hl, p)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-5)
