@@ -21,6 +21,33 @@ def _time(fn, *args, iters: int = 5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6   # us
 
 
+def _msda_backend_rows() -> list[tuple[str, float, str]]:
+    """Planned end-to-end MSDA block through each registered backend."""
+    from repro import msda
+    from repro.core import nn
+    from repro.core.msdeform_attn import MSDeformAttnConfig, init_msdeform_attn
+
+    levels = ((16, 20), (8, 10), (4, 5), (2, 3))
+    n_in = sum(h * w for h, w in levels)
+    cfg = MSDeformAttnConfig(d_model=64, n_heads=4,
+                             range_narrow=(6.0, 4.0, 3.0, 2.0))
+    key = jax.random.PRNGKey(7)
+    params = init_msdeform_attn(key, cfg)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, n_in, 64))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (1, n_in, 64))
+    refs = jnp.broadcast_to(
+        nn.reference_points_for_levels(levels)[None], (1, n_in, 2))
+
+    rows = []
+    for name in msda.available_backends():
+        plan = msda.make_plan(cfg, levels, backend=name, block_q=64)
+        fn = jax.jit(lambda p_, q_, r_, x_, plan=plan:
+                     msda.msda_attention(p_, plan, q_, r_, x_)[0])
+        rows.append((f"msda_{name}", _time(lambda: fn(params, q, refs, x)),
+                     f"planned block, lanes={plan.lane_layout}x{plan.head_pack}"))
+    return rows
+
+
 def run(log=print) -> list[tuple[str, float, str]]:
     rows = []
     key = jax.random.PRNGKey(0)
@@ -38,12 +65,19 @@ def run(log=print) -> list[tuple[str, float, str]]:
 
     t_fused = _time(lambda: ops.msgs_fused(v, x, y, st, wl, hl, p, block_q=128))
     rows.append(("msgs_fused_pallas_interp", t_fused, "structural"))
+    # head-packed dispatch: 4 heads x Dh=32 share one 128-lane group
+    t_packed = _time(lambda: ops.msgs_fused_packed(
+        v, x, y, st, wl, hl, p, head_pack=4, block_q=128))
+    rows.append(("msgs_fused_packed4_pallas_interp", t_packed,
+                 "structural; 4x32->128 lanes"))
     jref = jax.jit(ref.msgs_fused_ref)
     t_ref = _time(lambda: jref(v, x, y, st, wl, hl, p))
     rows.append(("msgs_ref_jnp", t_ref, "oracle"))
     juf = jax.jit(ref.msgs_unfused_ref)
     t_uf = _time(lambda: juf(v, x, y, st, wl, hl, p))
     rows.append(("msgs_unfused_jnp", t_uf, "materializing baseline"))
+
+    rows.extend(_msda_backend_rows())
 
     xm = jax.random.normal(key, (256, 256))
     wm = jax.random.normal(jax.random.fold_in(key, 3), (256, 256))

@@ -19,6 +19,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig6,fig7a,fig7b,fig9,fmap_reuse,micro")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write machine-readable rows "
+                         "[{name, us_per_call, derived}, ...] to PATH "
+                         "(for BENCH_*.json perf tracking)")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -110,6 +114,17 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        payload = {
+            "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                     for n, us, d in rows],
+            "results": results,
+        }
+        os.makedirs(os.path.dirname(os.path.abspath(args.json)), exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print(f"[run] wrote {len(payload['rows'])} rows to {args.json}")
 
 
 if __name__ == "__main__":

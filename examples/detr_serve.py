@@ -20,12 +20,16 @@ import numpy as np
 from benchmarks.detr_toy import toy_config, train_toy_detector, with_attn
 from repro.core.detector import detector_apply
 from repro.data.detection import eval_detection_ap, synth_detection_batch
+from repro.msda import available_backends, make_plan
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batches", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--backend", default=None,
+                    choices=available_backends() + ["auto"],
+                    help="MSDA backend override (default: plan from config)")
     args = ap.parse_args()
 
     cfg, params = train_toy_detector()
@@ -34,8 +38,13 @@ def main():
                           range_narrow=(8.0, 6.0, 4.0, 3.0),
                           act_bits=12, weight_bits=12)
 
+    plan = make_plan(serve_cfg.encoder.attn, serve_cfg.level_shapes,
+                     backend=args.backend)
+    print(f"[serve] {plan.describe()}")
+
     fwd = jax.jit(lambda p, img: detector_apply(p, serve_cfg, img,
-                                                collect_stats=True))
+                                                collect_stats=True,
+                                                backend=args.backend))
     key = jax.random.PRNGKey(42)
     img, _, _, gt = synth_detection_batch(key, args.batch, cfg.img_size,
                                           cfg.level_shapes)

@@ -75,8 +75,12 @@ def _pyramid(params, cfg: DetectorConfig, images: jnp.ndarray):
 
 
 def detector_apply(params: dict, cfg: DetectorConfig, images: jnp.ndarray,
-                   *, collect_stats: bool = False):
-    """Returns (cls_logits (B,N_in,C+1), boxes (B,N_in,4 cxcywh), aux)."""
+                   *, collect_stats: bool = False,
+                   backend: str | None = None):
+    """Returns (cls_logits (B,N_in,C+1), boxes (B,N_in,4 cxcywh), aux).
+
+    ``backend`` overrides the encoder's MSDA backend ("auto" lets the
+    plan pick by VMEM fit; see repro/msda/plan.py)."""
     feats = _pyramid(params, cfg, images)
     flat = []
     for f, proj in zip(feats, params["proj"]):
@@ -89,7 +93,8 @@ def detector_apply(params: dict, cfg: DetectorConfig, images: jnp.ndarray,
         [nn.sine_pos_embed_2d(h, w, cfg.d_model) for h, w in level_shapes], axis=0)
     refs = nn.reference_points_for_levels(level_shapes)
     enc, aux = encoder_apply(params["encoder"], cfg.encoder, x_flat, pos, refs,
-                             level_shapes, collect_stats=collect_stats)
+                             level_shapes, collect_stats=collect_stats,
+                             backend=backend)
     cls_logits = nn.linear(params["cls_head"], enc)
     boxes = jax.nn.sigmoid(nn.linear(params["box_head"], enc))
     return cls_logits, boxes, aux

@@ -28,9 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import pap as pap_lib
-from repro.core.msdeform_attn import MSDeformAttnConfig, _corner_data
+from repro.core.msdeform_attn import MSDeformAttnConfig
 from repro.core.quant import maybe_fake_quant
+from repro.msda.sampling import corner_data, select_points
 
 
 def band_layout(level_shapes, n_bands: int, ranges):
@@ -131,21 +131,8 @@ def msdeform_attn_banded(
             v_locals.append((jnp.concatenate(
                 [from_above, seg, from_below], axis=1), False))
 
-        # --- sampling-point generation (PAP-aware) -------------------------
-        logits = jnp.einsum("bnd,dhk->bnhk", q_b, wq(prm["attn_w"])) \
-            + prm["attn_b"]
-        probs = jax.nn.softmax(logits, axis=-1)
-        probs = maybe_fake_quant(probs, cfg.act_bits)
-        sel = pap_lib.pap_select(probs, cfg.pap_mode,
-                                 threshold=cfg.pap_threshold, k=cfg.pap_keep)
-        offs = jnp.einsum("bnd,dhk->bnhk", q_b, wq(prm["offs_w"])) \
-            + prm["offs_b"]
-        offs = offs.reshape(b, nq_b, h, l * p_pts, 2)
-        offs_k = jnp.take_along_axis(offs, sel.point_idx[..., None], axis=3)
-        lvl_of_pt = (sel.point_idx // p_pts).astype(jnp.int32)
-        bounds = jnp.take(jnp.asarray(cfg.range_narrow, q_b.dtype), lvl_of_pt)
-        offs_k = jnp.clip(offs_k, -bounds[..., None], bounds[..., None])
-        offs_k = maybe_fake_quant(offs_k, cfg.act_bits)
+        # --- sampling-point generation (PAP-aware, shared with msda) -------
+        sel, offs_k, lvl_of_pt = select_points(prm, cfg, q_b)
 
         # --- per-level local gather + Eq.4 BI + aggregation ----------------
         out_h = jnp.zeros((b, nq_b, h, dh), q_b.dtype)
@@ -166,14 +153,16 @@ def msdeform_attn_banded(
             else:
                 y_loc = y_px - rank * rb + hal
             ones = jnp.ones_like(lvl_of_pt)
-            idx, wgt, valid = _corner_data(
+            idx, wgt, valid = corner_data(
                 x_px, y_loc, ones * w_l, ones * n_rows_loc,
                 jnp.zeros_like(ones))
-            # validity in GLOBAL image coords (original H before padding)
+            # validity in GLOBAL image coords. Built as a stacked mask, not
+            # per-corner .at[].set(): the boolean scatter miscompiles under
+            # shard_map on multi-device CPU (silently corrupts one corner).
             yg = jnp.floor(y_px)
-            for ci, dy in enumerate((0, 0, 1, 1)):
-                valid = valid.at[..., ci].set(
-                    valid[..., ci] & ((yg + dy) >= 0) & ((yg + dy) < hp))
+            extra = jnp.stack([((yg + dy) >= 0) & ((yg + dy) < hp)
+                               for dy in (0, 0, 1, 1)], axis=-1)
+            valid = valid & extra
             eff_w = wgt * valid.astype(wgt.dtype) \
                 * (sel.probs * on_lvl.astype(wgt.dtype))[..., None]
             k_pts = idx.shape[3]
@@ -190,11 +179,17 @@ def msdeform_attn_banded(
 
     bspec = (batch_axes if len(batch_axes) != 1 else batch_axes[0]) \
         if batch_axes else None
-    fn = jax.shard_map(
-        body, mesh=mesh, axis_names=set(mesh.axis_names),
-        in_specs=(P(), P(bspec, axis, None), P(bspec, axis, None),
-                  P(bspec, axis, None)),
-        out_specs=P(bspec, axis, None), check_vma=False)
+    in_specs = (P(), P(bspec, axis, None), P(bspec, axis, None),
+                P(bspec, axis, None))
+    out_specs = P(bspec, axis, None)
+    if hasattr(jax, "shard_map"):                    # jax >= 0.6
+        fn = jax.shard_map(body, mesh=mesh, axis_names=set(mesh.axis_names),
+                           in_specs=in_specs, out_specs=out_specs,
+                           check_vma=False)
+    else:                                            # 0.4.x experimental API
+        from jax.experimental.shard_map import shard_map as _shard_map
+        fn = _shard_map(body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
     return fn(params, query, ref_points, x_flat)
 
 

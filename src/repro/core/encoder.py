@@ -3,7 +3,10 @@ DEFA block-to-block FWP mask chain (paper §3.1/§4.1 dataflow).
 
 Block k counts sampled-pixel frequency during its MSGS and hands the
 resulting fmap mask to block k+1, which prunes its value projection with it
-(the first block always runs unpruned — there is no mask yet)."""
+(the first block always runs unpruned — there is no mask yet). The chain is
+carried by an explicit :class:`repro.msda.MSDAPipelineState`, and every
+block executes through one :class:`repro.msda.MSDAPlan` resolved ahead of
+the loop (backend, tiling, and lane layout are shape-static)."""
 from __future__ import annotations
 
 import dataclasses
@@ -14,8 +17,9 @@ import jax.numpy as jnp
 
 from repro.core import nn
 from repro.core.msdeform_attn import (
-    MSDeformAttnConfig, init_msdeform_attn, msdeform_attn_apply, logical_axes,
+    MSDeformAttnConfig, init_msdeform_attn, logical_axes,
 )
+from repro.msda import MSDAPipelineState, make_plan, msda_attention
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,23 +68,23 @@ def encoder_apply(
     level_shapes: Sequence[Tuple[int, int]],
     *,
     collect_stats: bool = False,
+    backend: Optional[str] = None,         # msda backend override (or "auto")
 ):
     """Returns (features (B,N_in,D), aux with per-block DEFA stats)."""
     b = x_flat.shape[0]
     if ref_points.ndim == 2:
         ref_points = jnp.broadcast_to(ref_points[None], (b,) + ref_points.shape)
+    plan = make_plan(cfg.attn, tuple((int(lh), int(lw))
+                                     for lh, lw in level_shapes),
+                     backend=backend)
     h = x_flat
-    fwp_state = None
-    aux_blocks = []
+    state = MSDAPipelineState.initial()
     for blk in params["blocks"]:
         q = h + pos_embed[None]
-        attn_out, aux = msdeform_attn_apply(
-            blk["attn"], cfg.attn, q, ref_points, h, level_shapes,
-            fwp_state=fwp_state, collect_stats=collect_stats)
-        fwp_state = aux.get("fwp_state")
+        attn_out, state = msda_attention(
+            blk["attn"], plan, q, ref_points, h,
+            state=state, collect_stats=collect_stats)
         h = nn.layer_norm(blk["ln1"], h + attn_out)
         ff = nn.linear(blk["ffn2"], jax.nn.relu(nn.linear(blk["ffn1"], h)))
         h = nn.layer_norm(blk["ln2"], h + ff)
-        if collect_stats:
-            aux_blocks.append({k: v for k, v in aux.items() if k != "fwp_state"})
-    return h, {"blocks": aux_blocks}
+    return h, {"blocks": list(state.block_stats)}

@@ -26,8 +26,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fwp as fwp_lib
-from repro.core import pap as pap_lib
-from repro.core.quant import maybe_fake_quant
 
 
 # --------------------------------------------------------------------------
@@ -50,7 +48,9 @@ class MSDeformAttnConfig:
     range_narrow: Optional[Tuple[float, ...]] = None   # per-level |offset| bound (px)
     act_bits: Optional[int] = None       # 12 => INT12 fake-quant (paper default)
     weight_bits: Optional[int] = None
-    impl: str = "jnp"                    # jnp | pallas
+    impl: str = "jnp"                    # legacy: jnp | pallas (see `backend`)
+    backend: Optional[str] = None        # msda backend name or "auto";
+                                         # overrides `impl` when set
     dtype: Any = jnp.float32
 
     @property
@@ -99,14 +99,6 @@ def logical_axes(cfg: MSDeformAttnConfig) -> dict:
         "out_w": ("heads", None, "embed"),
         "out_b": (None,),
     }
-
-
-def level_meta(level_shapes: Sequence[Tuple[int, int]]):
-    """Static per-level arrays: flat starts, widths, heights; total N_in."""
-    starts, n_in = fwp_lib.level_starts(level_shapes)
-    ws = np.asarray([w for _, w in level_shapes], np.int32)
-    hs = np.asarray([h for h, _ in level_shapes], np.int32)
-    return jnp.asarray(starts), jnp.asarray(ws), jnp.asarray(hs), n_in
 
 
 # --------------------------------------------------------------------------
@@ -180,44 +172,12 @@ def msdeform_attn_ref(params: dict, cfg: MSDeformAttnConfig,
 
 
 # --------------------------------------------------------------------------
-# DEFA dataflow — flat-gather execution with PAP/FWP/quant + Pallas option
+# DEFA dataflow — thin compatibility shim over the repro.msda subsystem
 # --------------------------------------------------------------------------
-
-def _corner_data(x_px, y_px, wl, hl, start):
-    """Per-point corner indices/weights/validity in the flat fmap.
-
-    x_px,y_px,wl,hl,start: (...,) arrays (wl/hl/start already per-point).
-    Returns idx (..., 4) int32, wgt (..., 4), valid (..., 4)."""
-    x0 = jnp.floor(x_px)
-    y0 = jnp.floor(y_px)
-    t1 = x_px - x0
-    t0 = y_px - y0
-    corners = []
-    for dy in (0, 1):
-        for dx in (0, 1):
-            cx = x0 + dx
-            cy = y0 + dy
-            valid = ((cx >= 0) & (cx < wl) & (cy >= 0) & (cy < hl))
-            cxc = jnp.clip(cx, 0, wl - 1).astype(jnp.int32)
-            cyc = jnp.clip(cy, 0, hl - 1).astype(jnp.int32)
-            idx = start + cyc * wl + cxc
-            w = (t1 if dx else (1 - t1)) * (t0 if dy else (1 - t0))
-            corners.append((idx, w, valid))
-    idx = jnp.stack([c[0] for c in corners], axis=-1)
-    wgt = jnp.stack([c[1] for c in corners], axis=-1)
-    valid = jnp.stack([c[2] for c in corners], axis=-1)
-    return idx, wgt, valid
-
-
-def _flat_gather_heads(v: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
-    """v: (B, N, H, Dh); idx: (B, Nq, H, M) -> (B, Nq, H, M, Dh)."""
-    b, n, h, dh = v.shape
-    _, nq, _, m = idx.shape
-    vv = v.transpose(0, 2, 1, 3).reshape(b * h, n, dh)
-    ii = idx.transpose(0, 2, 1, 3).reshape(b * h, nq * m)
-    g = jnp.take_along_axis(vv, ii[..., None], axis=1)
-    return g.reshape(b, h, nq, m, dh).transpose(0, 2, 1, 3, 4)
-
+# The monolithic implementation moved to repro/msda/ (plan + backends +
+# pipeline). This entry point survives for existing callers: it resolves a
+# memoized MSDAPlan from the config (legacy cfg.impl maps to a backend
+# name) and adapts MSDAPipelineState back to the old aux-dict protocol.
 
 def msdeform_attn_apply(
     params: dict,
@@ -233,100 +193,18 @@ def msdeform_attn_apply(
     """DEFA-optimized MSDeformAttn. Returns (out (B,Nq,D), aux dict).
 
     aux: {"fwp_state": FWPState|None (for the NEXT block),
-          "pap_keep_frac", "fwp_keep_frac", "sampled_frac"} when
-    collect_stats or fwp enabled.
-    """
-    b, nq, d = query.shape
-    h, l, p, lp, dh = cfg.n_heads, cfg.n_levels, cfg.n_points, cfg.n_lp, cfg.head_dim
-    starts, ws, hs, n_in = level_meta(level_shapes)
-    assert x_flat.shape[1] == n_in, (x_flat.shape, n_in)
+          "pap_keep_frac", "fwp_keep_frac", ...} when collect_stats or
+    fwp enabled. New code should use repro.msda directly."""
+    from repro.msda import MSDAPipelineState, msda_attention, plan_for
+
+    plan = plan_for(cfg, tuple((int(h), int(w)) for h, w in level_shapes),
+                    n_queries=int(query.shape[1]))
+    state = MSDAPipelineState(fwp=fwp_state)
+    out, state = msda_attention(params, plan, query, ref_points, x_flat,
+                                state=state, collect_stats=collect_stats)
     aux: dict = {}
-
-    wq = lambda w: maybe_fake_quant(w, cfg.weight_bits)
-
-    # ---- 1. attention probabilities + PAP (paper dataflow step 1) --------
-    logits = jnp.einsum("bnd,dhk->bnhk", query, wq(params["attn_w"])) + params["attn_b"]
-    probs = jax.nn.softmax(logits, axis=-1)
-    probs = maybe_fake_quant(probs, cfg.act_bits)
-    sel = pap_lib.pap_select(probs, cfg.pap_mode,
-                             threshold=cfg.pap_threshold, k=cfg.pap_keep)
-    k_pts = sel.point_idx.shape[-1]
-
-    # ---- 2. masked sampling-point generation (ΔP) ------------------------
-    offs = jnp.einsum("bnd,dhk->bnhk", query, wq(params["offs_w"])) + params["offs_b"]
-    offs = offs.reshape(b, nq, h, lp, 2)
-    # gather only surviving points' offsets
-    offs_k = jnp.take_along_axis(
-        offs, sel.point_idx[..., None].astype(jnp.int32), axis=3)  # (B,Nq,H,K,2)
-    lvl_of_pt = (sel.point_idx // p).astype(jnp.int32)              # (B,Nq,H,K)
-    wl = jnp.take(ws, lvl_of_pt)
-    hl = jnp.take(hs, lvl_of_pt)
-    st = jnp.take(starts, lvl_of_pt)
-    if cfg.range_narrow is not None:
-        bounds = jnp.take(jnp.asarray(cfg.range_narrow, query.dtype), lvl_of_pt)
-        offs_k = jnp.clip(offs_k, -bounds[..., None], bounds[..., None])
-    offs_k = maybe_fake_quant(offs_k, cfg.act_bits)     # INT12 BI datapath input
-
-    wl_f = wl.astype(query.dtype)
-    hl_f = hl.astype(query.dtype)
-    x_px = ref_points[:, :, None, None, 0] * wl_f + offs_k[..., 0] - 0.5
-    y_px = ref_points[:, :, None, None, 1] * hl_f + offs_k[..., 1] - 0.5
-
-    # ---- 3. FWP-pruned value projection ----------------------------------
-    if fwp_state is not None and cfg.fwp_mode == "compact":
-        cap = fwp_state.keep_idx.shape[1]
-        x_kept = jnp.take_along_axis(x_flat, fwp_state.keep_idx[..., None], axis=1)
-        v = jnp.einsum("bnd,dhk->bnhk", x_kept, wq(params["value_w"])) + params["value_b"]
-        v = jnp.concatenate([v, jnp.zeros((b, 1, h, dh), v.dtype)], axis=1)
-        pix2slot = fwp_state.pix2slot                               # (B, N_in)
-        n_rows = cap + 1
-    elif fwp_state is not None and cfg.fwp_mode == "mask":
-        xm = x_flat * fwp_state.keep_mask[..., None].astype(x_flat.dtype)
-        v = jnp.einsum("bnd,dhk->bnhk", xm, wq(params["value_w"])) + params["value_b"]
-        # masked pixels must contribute EXACT zero (bias would leak):
-        v = v * fwp_state.keep_mask[..., None, None].astype(v.dtype)
-        pix2slot = None
-        n_rows = n_in
-    else:
-        v = jnp.einsum("bnd,dhk->bnhk", x_flat, wq(params["value_w"])) + params["value_b"]
-        pix2slot = None
-        n_rows = n_in
-    v = maybe_fake_quant(v, cfg.act_bits)
-
-    # ---- 4. fused MSGS + aggregation -------------------------------------
-    if cfg.impl == "pallas":
-        from repro.kernels import ops as kernel_ops
-        out_h = kernel_ops.msgs_fused(
-            v, x_px, y_px, st, wl, hl, sel.probs, remap=pix2slot)   # (B,Nq,H,Dh)
-    else:
-        idx, wgt, valid = _corner_data(x_px, y_px, wl, hl, st)      # (B,Nq,H,K,4)
-        if pix2slot is not None:
-            bidx = jnp.arange(b).reshape(b, 1, 1, 1, 1)
-            idx = pix2slot[bidx, idx]                               # pruned -> sentinel
-        eff_w = wgt * valid.astype(wgt.dtype) * sel.probs[..., None]
-        g = _flat_gather_heads(v, idx.reshape(b, nq, h, k_pts * 4))
-        out_h = jnp.sum(g * eff_w.reshape(b, nq, h, k_pts * 4)[..., None], axis=3)
-
-    out = jnp.einsum("bnhk,hkd->bnd", out_h, wq(params["out_w"])) + params["out_b"]
-
-    # ---- 5. FWP frequency counting for the NEXT block --------------------
-    need_freq = cfg.fwp_mode != "off"
-    if need_freq or collect_stats:
-        pt_alive = (sel.probs > 0).astype(jnp.float32)              # pruned pts don't count
-        # frequency is counted in ORIGINAL pixel space (pre-compaction)
-        idx_orig, _, valid_orig = _corner_data(x_px, y_px, wl, hl, st)
-        counted = valid_orig.astype(jnp.float32) * pt_alive[..., None]
-        freq = fwp_lib.count_frequency(
-            idx_orig.reshape(b, -1), counted.reshape(b, -1), n_in)
-        if need_freq:
-            aux["fwp_state"] = fwp_lib.build_fwp_state(
-                freq, level_shapes, k=cfg.fwp_k,
-                mode=cfg.fwp_mode, capacity=cfg.fwp_capacity)
-        if collect_stats:
-            aux["freq"] = freq
-            aux["pap_keep_frac"] = sel.keep_frac
-            aux["point_alive_frac"] = jnp.mean(pt_alive)
-            if "fwp_state" in aux:
-                aux["fwp_keep_frac"] = 1.0 - fwp_lib.fwp_sparsity(aux["fwp_state"])
-            aux["value_rows"] = n_rows
+    if cfg.fwp_mode != "off":
+        aux["fwp_state"] = state.fwp
+    if collect_stats and state.block_stats:
+        aux.update(state.block_stats[-1])
     return out, aux

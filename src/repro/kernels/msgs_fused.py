@@ -22,28 +22,31 @@ per-head slices are 1/8 of it). For fmaps beyond VMEM use the windowed
 variant (msgs_windowed.py) which exploits C3 range-narrowing + C7 reuse.
 
 TPU alignment note: Dh (typically 32 in DETR-family) is below the 128-lane
-width; production tiling pads Dh→128 or packs 4 heads per lane group. The
-kernel keeps the logical layout; padding is the wrapper's job (ops.py).
+width. ``msgs_fused_packed_pallas`` packs ``head_pack = 128 // Dh`` heads
+per 128-lane group (grid (B, H/G, Nq/TQ)): one staged (N_rows, G·Dh) table
+row carries G heads, so the lane groups that a padded layout would leave
+idle do real work. The MSDAPlan (repro/msda/plan.py) decides pad vs. pack.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, v_ref, o_ref):
-    v = v_ref[0, :, 0, :]                       # (N_rows, Dh)
-    x = x_ref[0, :, 0, :]                       # (TQ, K)
-    y = y_ref[0, :, 0, :]
-    st = st_ref[0, :, 0, :]
-    wl = wl_ref[0, :, 0, :]
-    hl = hl_ref[0, :, 0, :]
-    probs = p_ref[0, :, 0, :]
+def _eq4_sample_agg(x, y, st, wl, hl, probs, v,
+                    remap: Optional[jnp.ndarray] = None,
+                    lanes: Optional[Tuple[int, int]] = None) -> jnp.ndarray:
+    """Shared Eq. 4 corner gather + factorized bilinear + aggregation.
 
+    x, y, st, wl, hl, probs: (TQ, K); v: (N_rows, Dv). ``remap`` is the
+    optional FWP-compact pixel -> slot indirection (N_pix,). ``lanes``
+    selects a (lo, n) lane slice of the gathered rows — used by the
+    head-packed layout where Dv = G·Dh holds G heads side by side.
+    Returns (TQ, n) with n = Dv unless sliced."""
     x0 = jnp.floor(x)
     y0 = jnp.floor(y)
     t1 = (x - x0)[..., None]                    # frac along x
@@ -56,7 +59,11 @@ def _kernel(x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, v_ref, o_ref):
         cy = y0i + dy
         valid = (cx >= 0) & (cx < wl) & (cy >= 0) & (cy < hl)
         idx = st + jnp.clip(cy, 0, hl - 1) * wl + jnp.clip(cx, 0, wl - 1)
+        if remap is not None:
+            idx = jnp.take(remap, idx.reshape(-1)).reshape(idx.shape)
         g = jnp.take(v, idx.reshape(-1), axis=0).reshape(idx.shape + (v.shape[-1],))
+        if lanes is not None:
+            g = g[..., lanes[0]:lanes[0] + lanes[1]]
         return g * valid[..., None]
 
     n0 = corner(0, 0)
@@ -65,42 +72,53 @@ def _kernel(x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, v_ref, o_ref):
     n3 = corner(1, 1)
     # Eq. 4 — exactly three multiplies by the fractional coordinates:
     s = n0 + (n2 - n0) * t0 + ((n1 - n0) + (n3 - n2 - n1 + n0) * t0) * t1
-    o_ref[0, :, 0, :] = jnp.sum(s * probs[..., None], axis=1)
+    return jnp.sum(s * probs[..., None], axis=1)
+
+
+def _kernel(x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, v_ref, o_ref):
+    o_ref[0, :, 0, :] = _eq4_sample_agg(
+        x_ref[0, :, 0, :], y_ref[0, :, 0, :], st_ref[0, :, 0, :],
+        wl_ref[0, :, 0, :], hl_ref[0, :, 0, :], p_ref[0, :, 0, :],
+        v_ref[0, :, 0, :])
 
 
 def _kernel_remap(x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, r_ref, v_ref, o_ref):
     """FWP-compact variant: corner pixel -> compacted slot indirection."""
-    v = v_ref[0, :, 0, :]
-    remap = r_ref[0, :]
-    x = x_ref[0, :, 0, :]
-    y = y_ref[0, :, 0, :]
-    st = st_ref[0, :, 0, :]
-    wl = wl_ref[0, :, 0, :]
-    hl = hl_ref[0, :, 0, :]
-    probs = p_ref[0, :, 0, :]
+    o_ref[0, :, 0, :] = _eq4_sample_agg(
+        x_ref[0, :, 0, :], y_ref[0, :, 0, :], st_ref[0, :, 0, :],
+        wl_ref[0, :, 0, :], hl_ref[0, :, 0, :], p_ref[0, :, 0, :],
+        v_ref[0, :, 0, :], remap=r_ref[0, :])
 
-    x0 = jnp.floor(x)
-    y0 = jnp.floor(y)
-    t1 = (x - x0)[..., None]
-    t0 = (y - y0)[..., None]
-    x0i = x0.astype(jnp.int32)
-    y0i = y0.astype(jnp.int32)
 
-    def corner(dx, dy):
-        cx = x0i + dx
-        cy = y0i + dy
-        valid = (cx >= 0) & (cx < wl) & (cy >= 0) & (cy < hl)
-        pix = st + jnp.clip(cy, 0, hl - 1) * wl + jnp.clip(cx, 0, wl - 1)
-        slot = jnp.take(remap, pix.reshape(-1)).reshape(pix.shape)
-        g = jnp.take(v, slot.reshape(-1), axis=0).reshape(pix.shape + (v.shape[-1],))
-        return g * valid[..., None]
+def _make_kernel_packed(head_pack: int, dh: int, use_remap: bool):
+    """Head-packed kernel: one grid step serves ``head_pack`` heads whose
+    value rows are packed side by side into a (N_rows, G·Dh) lane group."""
+    def kernel(*refs):
+        if use_remap:
+            x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, r_ref, v_ref, o_ref = refs
+            remap = r_ref[0, :]
+        else:
+            x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, v_ref, o_ref = refs
+            remap = None
+        n_rows = v_ref.shape[1]
+        vp = v_ref[0].reshape(n_rows, head_pack * dh)   # packed lane group
+        for g in range(head_pack):                       # static unroll
+            o_ref[0, :, g, :] = _eq4_sample_agg(
+                x_ref[0, :, g, :], y_ref[0, :, g, :], st_ref[0, :, g, :],
+                wl_ref[0, :, g, :], hl_ref[0, :, g, :], p_ref[0, :, g, :],
+                vp, remap=remap, lanes=(g * dh, dh))
+    return kernel
 
-    n0 = corner(0, 0)
-    n1 = corner(1, 0)
-    n2 = corner(0, 1)
-    n3 = corner(1, 1)
-    s = n0 + (n2 - n0) * t0 + ((n1 - n0) + (n3 - n2 - n1 + n0) * t0) * t1
-    o_ref[0, :, 0, :] = jnp.sum(s * probs[..., None], axis=1)
+
+def _pad_points(nq, tq, x_px, y_px, probs, start, wl, hl):
+    pad = (-nq) % tq
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        x_px, y_px, probs = zf(x_px), zf(y_px), zf(probs)
+        start = zf(start)
+        wl = jnp.pad(wl, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1)
+        hl = jnp.pad(hl, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1)
+    return pad, x_px, y_px, probs, start, wl, hl
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
@@ -120,13 +138,8 @@ def msgs_fused_pallas(
     b, n_rows, h, dh = v.shape
     _, nq, _, k = x_px.shape
     tq = min(block_q, nq)
-    pad = (-nq) % tq
-    if pad:
-        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        x_px, y_px, probs = zf(x_px), zf(y_px), zf(probs)
-        start = zf(start)
-        wl = jnp.pad(wl, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1)
-        hl = jnp.pad(hl, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1)
+    pad, x_px, y_px, probs, start, wl, hl = _pad_points(
+        nq, tq, x_px, y_px, probs, start, wl, hl)
     nq_p = nq + pad
     grid = (b, h, nq_p // tq)
 
@@ -150,5 +163,57 @@ def msgs_fused_pallas(
                       r_spec, v_spec],
             out_specs=out_spec, out_shape=out_shape,
             interpret=interpret, name="msgs_fused_remap",
+        )(x_px, y_px, start, wl, hl, probs, remap, v)
+    return out[:, :nq] if pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("head_pack", "block_q", "interpret"))
+def msgs_fused_packed_pallas(
+    v: jnp.ndarray,                      # (B, N_rows, H, Dh)
+    x_px: jnp.ndarray,                   # (B, Nq, H, K)
+    y_px: jnp.ndarray,
+    start: jnp.ndarray,                  # int32
+    wl: jnp.ndarray,                     # int32
+    hl: jnp.ndarray,                     # int32
+    probs: jnp.ndarray,
+    remap: Optional[jnp.ndarray] = None,  # (B, N_pix) int32
+    *,
+    head_pack: int = 4,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Head-packed fused MSGS: G = head_pack heads share one 128-lane
+    group — grid (B, H/G, Nq/TQ), staged table (N_rows, G·Dh)."""
+    b, n_rows, h, dh = v.shape
+    _, nq, _, k = x_px.shape
+    assert h % head_pack == 0, (h, head_pack)
+    tq = min(block_q, nq)
+    pad, x_px, y_px, probs, start, wl, hl = _pad_points(
+        nq, tq, x_px, y_px, probs, start, wl, hl)
+    nq_p = nq + pad
+    g = head_pack
+    grid = (b, h // g, nq_p // tq)
+
+    pt_spec = pl.BlockSpec((1, tq, g, k), lambda bi, gi, qi: (bi, qi, gi, 0))
+    v_spec = pl.BlockSpec((1, n_rows, g, dh), lambda bi, gi, qi: (bi, 0, gi, 0))
+    out_spec = pl.BlockSpec((1, tq, g, dh), lambda bi, gi, qi: (bi, qi, gi, 0))
+    out_shape = jax.ShapeDtypeStruct((b, nq_p, h, dh), v.dtype)
+
+    kernel = _make_kernel_packed(g, dh, use_remap=remap is not None)
+    if remap is None:
+        out = pl.pallas_call(
+            kernel, grid=grid,
+            in_specs=[pt_spec, pt_spec, pt_spec, pt_spec, pt_spec, pt_spec, v_spec],
+            out_specs=out_spec, out_shape=out_shape,
+            interpret=interpret, name="msgs_fused_packed",
+        )(x_px, y_px, start, wl, hl, probs, v)
+    else:
+        r_spec = pl.BlockSpec((1, remap.shape[1]), lambda bi, gi, qi: (bi, 0))
+        out = pl.pallas_call(
+            kernel, grid=grid,
+            in_specs=[pt_spec, pt_spec, pt_spec, pt_spec, pt_spec, pt_spec,
+                      r_spec, v_spec],
+            out_specs=out_spec, out_shape=out_shape,
+            interpret=interpret, name="msgs_fused_packed_remap",
         )(x_px, y_px, start, wl, hl, probs, remap, v)
     return out[:, :nq] if pad else out

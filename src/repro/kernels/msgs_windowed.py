@@ -4,7 +4,8 @@ DEFA bounds sampling offsets per level (range-narrowing) so only a bounded
 window of the fmap around a query tile's reference points can ever be
 touched; neighbouring tiles' windows overlap and the overlap is reused
 on-chip (paper Fig. 4). On TPU this becomes a BlockSpec with an
-*element-offset* window (``pl.Element``): for query tile t the kernel
+*element-offset* window (``pl.Element`` on jax >= 0.5,
+``indexing_mode=pl.Unblocked`` before): for query tile t the kernel
 receives fmap rows [row0(t) − R, row0(t) + tile_rows + R]; Pallas's
 double-buffered pipeline fetches each window once and VMEM holds only the
 window, not the level — the VMEM working set drops from H·W·Dh to
@@ -24,15 +25,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _make_kernel(tile_q: int, w_level: int, halo: int, window_rows: int,
+def _make_kernel(tile_q: int, w_query: int, halo: int, window_rows: int,
                  h_level: int, rows_scale: float):
     def kernel(x_ref, y_ref, p_ref, v_ref, o_ref):
         t = pl.program_id(0)
-        # first reference row of this query tile, scaled to the sampled level
-        q_row0 = (t * tile_q) // w_level
+        # first reference row of this query tile (query-level rows), scaled
+        # to the sampled level
+        q_row0 = (t * tile_q) // w_query
         row0 = jnp.clip((q_row0 * rows_scale).astype(jnp.int32) - halo,
                         0, max(0, h_level - window_rows))
-        v = v_ref[...].reshape(window_rows * v_ref.shape[1], v_ref.shape[2])
+        w_fmap = v_ref.shape[1]           # sampled level's width (!= w_query
+        #                                   when query and fmap levels differ)
+        v = v_ref[...].reshape(window_rows * w_fmap, v_ref.shape[2])
         x = x_ref[...]                    # (TQ, K) absolute pixel coords
         y = y_ref[...]
         probs = p_ref[...]
@@ -47,10 +51,10 @@ def _make_kernel(tile_q: int, w_level: int, halo: int, window_rows: int,
         def corner(dx, dy):
             cx = x0i + dx
             cy = y0i + dy
-            valid = ((cx >= 0) & (cx < w_level) & (cy >= 0) & (cy < h_level)
+            valid = ((cx >= 0) & (cx < w_fmap) & (cy >= 0) & (cy < h_level)
                      & (cy >= row0) & (cy < row0 + window_rows))
             ly = jnp.clip(cy - row0, 0, window_rows - 1)
-            idx = ly * w_level + jnp.clip(cx, 0, w_level - 1)
+            idx = ly * w_fmap + jnp.clip(cx, 0, w_fmap - 1)
             g = jnp.take(v, idx.reshape(-1), axis=0).reshape(idx.shape + (v.shape[-1],))
             return g * valid[..., None]
 
@@ -101,7 +105,11 @@ def msgs_windowed_pallas(
                         0, max(0, hl - window_rows))
         return (row0, 0, 0)
 
-    v_spec = pl.BlockSpec((pl.Element(window_rows), wl, dh), v_index)
+    if hasattr(pl, "Element"):           # jax >= 0.5 spelling
+        v_spec = pl.BlockSpec((pl.Element(window_rows), wl, dh), v_index)
+    else:                                # 0.4.x spelling
+        v_spec = pl.BlockSpec((window_rows, wl, dh), v_index,
+                              indexing_mode=pl.Unblocked())
     pt_spec = pl.BlockSpec((tq, k), lambda t: (t, 0))
     out_spec = pl.BlockSpec((tq, dh), lambda t: (t, 0))
 

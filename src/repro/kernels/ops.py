@@ -11,7 +11,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.msgs_fused import msgs_fused_pallas
+from repro.kernels.msgs_fused import msgs_fused_pallas, msgs_fused_packed_pallas
 from repro.kernels.msgs_windowed import msgs_windowed_pallas
 from repro.kernels.matmul import matmul_pallas
 
@@ -31,6 +31,19 @@ def msgs_fused(v, x_px, y_px, start, wl, hl, probs,
     return msgs_fused_pallas(v, x_px, y_px, start.astype(jnp.int32),
                              wl.astype(jnp.int32), hl.astype(jnp.int32),
                              probs, remap, block_q=block_q, interpret=interp)
+
+
+def msgs_fused_packed(v, x_px, y_px, start, wl, hl, probs,
+                      remap: Optional[jnp.ndarray] = None, *,
+                      head_pack: int = 4, block_q: int = 128,
+                      interpret: Optional[bool] = None):
+    """Head-packed fused grid-sample + aggregation: ``head_pack`` heads
+    share one 128-lane group (see kernels/msgs_fused.py)."""
+    interp = _interpret_default() if interpret is None else interpret
+    return msgs_fused_packed_pallas(v, x_px, y_px, start.astype(jnp.int32),
+                                    wl.astype(jnp.int32), hl.astype(jnp.int32),
+                                    probs, remap, head_pack=head_pack,
+                                    block_q=block_q, interpret=interp)
 
 
 def msgs_windowed(v2d, x_px, y_px, probs, *, query_level_width: int,

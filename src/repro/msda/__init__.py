@@ -1,0 +1,40 @@
+"""repro.msda — the layered MSDeformAttn subsystem.
+
+Three layers, one seam for every future backend:
+
+  * :mod:`repro.msda.plan` — static :class:`MSDAPlan` resolved once per
+    (config, level_shapes): backend choice, query tiling, VMEM fit,
+    TPU lane layout (pad Dh -> 128 vs. pack 128/Dh heads per lane group);
+  * :mod:`repro.msda.backends` — named-backend registry (``jnp_gather``,
+    ``pallas_fused``, ``pallas_windowed``, plus the ``auto`` policy) with
+    a uniform ``(plan, v, pts, probs) -> out`` contract;
+  * :mod:`repro.msda.pipeline` / :mod:`repro.msda.attention` — the
+    planned block execution threading explicit
+    :class:`MSDAPipelineState` (FWP mask chain + stats) across blocks.
+
+Quickstart::
+
+    from repro import msda
+    plan = msda.make_plan(cfg, level_shapes, backend="auto")
+    state = msda.MSDAPipelineState.initial()
+    out, state = msda.msda_attention(params, plan, q, refs, x, state=state)
+"""
+from repro.msda.attention import msda_attention, project_values
+from repro.msda.backends import (available_backends, get_backend,
+                                 register_backend)
+from repro.msda.pipeline import MSDAPipelineState
+from repro.msda.plan import (DEFAULT_VMEM_BUDGET, MSDAPlan, lane_layout,
+                             make_plan, plan_for, windowed_eligible)
+from repro.msda.sampling import (SamplingPoints, corner_data,
+                                 flat_gather_heads, generate_points,
+                                 level_meta, select_points)
+
+__all__ = [
+    "msda_attention", "project_values",
+    "available_backends", "get_backend", "register_backend",
+    "MSDAPipelineState",
+    "DEFAULT_VMEM_BUDGET", "MSDAPlan", "lane_layout", "make_plan",
+    "plan_for", "windowed_eligible",
+    "SamplingPoints", "corner_data", "flat_gather_heads",
+    "generate_points", "level_meta", "select_points",
+]

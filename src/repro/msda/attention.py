@@ -1,0 +1,111 @@
+"""Planned MSDA execution — the algorithm level of the DEFA dataflow.
+
+``msda_attention`` runs the five paper steps (PAP'd probabilities, masked
+sampling-point generation, FWP-pruned value projection, backend-dispatched
+fused MSGS+aggregation, frequency counting for the next block) against a
+static :class:`~repro.msda.plan.MSDAPlan`. The gather+aggregate step is a
+registry lookup — backends never leak into this file.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import fwp as fwp_lib
+from repro.core.quant import maybe_fake_quant
+from repro.msda import backends as backend_registry
+from repro.msda.pipeline import MSDAPipelineState
+from repro.msda.plan import MSDAPlan
+from repro.msda.sampling import SamplingPoints, corner_data, generate_points
+
+
+def project_values(params: dict, cfg, x_flat: jnp.ndarray,
+                   fwp_state: Optional[fwp_lib.FWPState]):
+    """FWP-pruned value projection V = X W^V.
+
+    Returns (v (B, N_rows, H, Dh), pix2slot or None, n_rows)."""
+    b = x_flat.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+    n_in = x_flat.shape[1]
+    wq = lambda w: maybe_fake_quant(w, cfg.weight_bits)
+    if fwp_state is not None and cfg.fwp_mode == "compact":
+        cap = fwp_state.keep_idx.shape[1]
+        x_kept = jnp.take_along_axis(x_flat, fwp_state.keep_idx[..., None], axis=1)
+        v = jnp.einsum("bnd,dhk->bnhk", x_kept, wq(params["value_w"])) \
+            + params["value_b"]
+        v = jnp.concatenate([v, jnp.zeros((b, 1, h, dh), v.dtype)], axis=1)
+        pix2slot = fwp_state.pix2slot                    # (B, N_in)
+        n_rows = cap + 1
+    elif fwp_state is not None and cfg.fwp_mode == "mask":
+        xm = x_flat * fwp_state.keep_mask[..., None].astype(x_flat.dtype)
+        v = jnp.einsum("bnd,dhk->bnhk", xm, wq(params["value_w"])) \
+            + params["value_b"]
+        # masked pixels must contribute EXACT zero (bias would leak):
+        v = v * fwp_state.keep_mask[..., None, None].astype(v.dtype)
+        pix2slot = None
+        n_rows = n_in
+    else:
+        v = jnp.einsum("bnd,dhk->bnhk", x_flat, wq(params["value_w"])) \
+            + params["value_b"]
+        pix2slot = None
+        n_rows = n_in
+    return maybe_fake_quant(v, cfg.act_bits), pix2slot, n_rows
+
+
+def msda_attention(
+    params: dict,
+    plan: MSDAPlan,
+    query: jnp.ndarray,                 # (B, Nq, D)
+    ref_points: jnp.ndarray,            # (B, Nq, 2) normalized
+    x_flat: jnp.ndarray,                # (B, N_in, D) raw fmap features
+    state: Optional[MSDAPipelineState] = None,
+    *,
+    collect_stats: bool = False,
+) -> Tuple[jnp.ndarray, MSDAPipelineState]:
+    """One planned MSDA block. Returns (out (B, Nq, D), next state)."""
+    cfg = plan.cfg
+    b, nq, _ = query.shape
+    assert x_flat.shape[1] == plan.n_in, (x_flat.shape, plan.n_in)
+    if state is None:
+        state = MSDAPipelineState.initial()
+    wq = lambda w: maybe_fake_quant(w, cfg.weight_bits)
+
+    # ---- 1+2. PAP'd probabilities + masked point generation --------------
+    v, pix2slot, n_rows = project_values(params, cfg, x_flat, state.fwp)
+    sel, pts = generate_points(params, cfg, query, ref_points,
+                               plan.level_shapes, pix2slot=pix2slot)
+
+    # ---- 3. backend-dispatched fused MSGS + aggregation ------------------
+    backend = backend_registry.get_backend(plan.backend)
+    out_h = backend(plan, v, pts, sel.probs)             # (B, Nq, H, Dh)
+
+    out = jnp.einsum("bnhk,hkd->bnd", out_h, wq(params["out_w"])) \
+        + params["out_b"]
+
+    # ---- 4. FWP frequency counting for the NEXT block --------------------
+    need_freq = cfg.fwp_mode != "off"
+    next_fwp = None
+    stats = None
+    if need_freq or collect_stats:
+        pt_alive = (sel.probs > 0).astype(jnp.float32)   # pruned pts don't count
+        # frequency is counted in ORIGINAL pixel space (pre-compaction)
+        idx_orig, _, valid_orig = corner_data(pts.x_px, pts.y_px,
+                                              pts.wl, pts.hl, pts.start)
+        counted = valid_orig.astype(jnp.float32) * pt_alive[..., None]
+        freq = fwp_lib.count_frequency(
+            idx_orig.reshape(b, -1), counted.reshape(b, -1), plan.n_in)
+        if need_freq:
+            next_fwp = fwp_lib.build_fwp_state(
+                freq, plan.level_shapes, k=cfg.fwp_k,
+                mode=cfg.fwp_mode, capacity=cfg.fwp_capacity)
+        if collect_stats:
+            stats = {
+                "freq": freq,
+                "pap_keep_frac": sel.keep_frac,
+                "point_alive_frac": jnp.mean(pt_alive),
+                "value_rows": n_rows,
+            }
+            if next_fwp is not None:
+                stats["fwp_keep_frac"] = 1.0 - fwp_lib.fwp_sparsity(next_fwp)
+    return out, state.advance(next_fwp, stats)

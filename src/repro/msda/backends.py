@@ -1,0 +1,154 @@
+"""Named MSDA execution backends.
+
+Every backend implements one uniform contract:
+
+    backend(plan: MSDAPlan,
+            v: (B, N_rows, H, Dh),          # value table (maybe FWP-compacted)
+            pts: SamplingPoints,            # (B, Nq, H, K) point geometry
+            probs: (B, Nq, H, K),           # PAP-surviving probabilities
+            ) -> (B, Nq, H, Dh)             # per-head aggregated samples
+
+so new kernels (sharded, quantized, batched-serving) slot in with a
+``@register_backend("name")`` and zero caller changes. Selection happens
+once, in ``plan.make_plan`` — never inside the hot path.
+
+  * ``jnp_gather``      — XLA flat-gather oracle path (any hardware).
+  * ``pallas_fused``    — whole-table-in-VMEM fused MSGS+aggregation
+                          kernel (C6); head-packed 128-lane dispatch when
+                          the plan packs ``head_pack`` heads per group.
+  * ``pallas_windowed`` — bounded-window kernel (C3+C7) for tables beyond
+                          the VMEM budget; needs raster-ordered encoder
+                          queries (Nq == N_in) and range-narrowing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.msda.sampling import SamplingPoints, corner_data, flat_gather_heads
+
+BackendFn = Callable[..., jnp.ndarray]
+
+_REGISTRY: Dict[str, BackendFn] = {}
+
+
+def register_backend(name: str):
+    """Decorator: register fn under ``name`` in the backend registry."""
+    def deco(fn: BackendFn) -> BackendFn:
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_backend(name: str) -> BackendFn:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"no MSDA backend {name!r}; "
+                       f"available: {available_backends()}") from None
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# jnp_gather — pure-XLA flat gather (runs anywhere, autodiff-friendly)
+# --------------------------------------------------------------------------
+
+@register_backend("jnp_gather")
+def jnp_gather(plan, v: jnp.ndarray, pts: SamplingPoints,
+               probs: jnp.ndarray) -> jnp.ndarray:
+    b, nq, h, k = probs.shape
+    idx, wgt, valid = corner_data(pts.x_px, pts.y_px, pts.wl, pts.hl, pts.start)
+    if pts.pix2slot is not None:
+        bidx = jnp.arange(b).reshape(b, 1, 1, 1, 1)
+        idx = pts.pix2slot[bidx, idx]                    # pruned -> sentinel
+    eff_w = wgt * valid.astype(wgt.dtype) * probs[..., None]
+    g = flat_gather_heads(v, idx.reshape(b, nq, h, k * 4))
+    return jnp.sum(g * eff_w.reshape(b, nq, h, k * 4)[..., None], axis=3)
+
+
+# --------------------------------------------------------------------------
+# pallas_fused — whole value table staged in VMEM, optional head packing
+# --------------------------------------------------------------------------
+
+@register_backend("pallas_fused")
+def pallas_fused(plan, v: jnp.ndarray, pts: SamplingPoints,
+                 probs: jnp.ndarray) -> jnp.ndarray:
+    from repro.kernels import ops as kernel_ops
+    h = v.shape[2]
+    if plan.head_pack > 1 and h % plan.head_pack == 0:
+        return kernel_ops.msgs_fused_packed(
+            v, pts.x_px, pts.y_px, pts.start, pts.wl, pts.hl, probs,
+            remap=pts.pix2slot, head_pack=plan.head_pack,
+            block_q=plan.block_q)
+    return kernel_ops.msgs_fused(
+        v, pts.x_px, pts.y_px, pts.start, pts.wl, pts.hl, probs,
+        remap=pts.pix2slot, block_q=plan.block_q)
+
+
+# --------------------------------------------------------------------------
+# pallas_windowed — bounded fmap window per query tile (C3 + C7)
+# --------------------------------------------------------------------------
+
+@register_backend("pallas_windowed")
+def pallas_windowed(plan, v: jnp.ndarray, pts: SamplingPoints,
+                    probs: jnp.ndarray) -> jnp.ndarray:
+    """Per-(query-level x sampled-level) windowed dispatch.
+
+    Requires raster-ordered encoder queries: query q is pixel q of the
+    flattened pyramid (Nq == plan.n_in), so a query tile's references are
+    contiguous rows and range-narrowing bounds the touched fmap window.
+    Off-level points ride along with zero probability (their coordinates
+    are meaningless for the current sampled level; the kernel's validity
+    mask plus the zero weight removes them exactly), which keeps PAP-topk
+    dynamic point-to-level assignment supported."""
+    from repro.kernels import ops as kernel_ops
+    cfg = plan.cfg
+    b, nq, h, k = probs.shape
+    assert nq == plan.n_in, (
+        "pallas_windowed needs raster-ordered encoder queries "
+        f"(Nq={nq} != N_in={plan.n_in}); plan a different backend")
+    assert cfg.range_narrow is not None
+
+    if pts.pix2slot is not None:
+        # Densify the FWP-compacted table: pruned pixels hit the zero
+        # sentinel row, reproducing mask semantics inside the window.
+        idx = pts.pix2slot[:, :, None, None]
+        idx = jnp.broadcast_to(idx, (b, plan.n_in) + v.shape[2:])
+        v = jnp.take_along_axis(v, idx, axis=1)
+
+    from repro.core.fwp import level_starts
+    starts, _ = level_starts(plan.level_shapes)
+
+    out_levels = []          # per-query-level accs; levels tile [0, Nq)
+    for ql, (hq, wq_) in enumerate(plan.level_shapes):
+        q_lo, nq_l = int(starts[ql]), hq * wq_
+        xq = pts.x_px[:, q_lo:q_lo + nq_l]
+        yq = pts.y_px[:, q_lo:q_lo + nq_l]
+        lvl = pts.lvl_of_pt[:, q_lo:q_lo + nq_l]
+        pq = probs[:, q_lo:q_lo + nq_l]
+        acc = jnp.zeros((b, nq_l, h, v.shape[-1]), v.dtype)
+        for sl, (hs_, ws_) in enumerate(plan.level_shapes):
+            v2 = v[:, int(starts[sl]):int(starts[sl]) + hs_ * ws_]
+            v2 = v2.reshape(b, hs_, ws_, h, v.shape[-1])
+            on = (lvl == sl).astype(pq.dtype)
+            # cross-level row scaling can shift the window estimate by up
+            # to half a sampled-level row per query row — widen the halo
+            halo = (int(math.ceil(cfg.range_narrow[sl])) + 2
+                    + int(math.ceil(0.5 * max(1.0, hs_ / hq))))
+            run = lambda v2d, xx, yy, pp: kernel_ops.msgs_windowed(
+                v2d, xx, yy, pp, query_level_width=wq_, halo=halo,
+                block_q=plan.block_q)
+            vbh = v2.transpose(0, 3, 1, 2, 4).reshape(b * h, hs_, ws_, -1)
+            xbh = xq.transpose(0, 2, 1, 3).reshape(b * h, nq_l, k)
+            ybh = yq.transpose(0, 2, 1, 3).reshape(b * h, nq_l, k)
+            pbh = (pq * on).transpose(0, 2, 1, 3).reshape(b * h, nq_l, k)
+            o = jax.vmap(run)(vbh, xbh, ybh, pbh)            # (B*H, nq_l, Dh)
+            acc = acc + o.reshape(b, h, nq_l, -1).transpose(0, 2, 1, 3)
+        out_levels.append(acc)
+    return jnp.concatenate(out_levels, axis=1)

@@ -1,0 +1,43 @@
+"""Cross-layer MSDA pipeline state.
+
+The DEFA dataflow is stateful *across* encoder blocks: block k counts how
+often MSGS touched each fmap pixel and block k+1 prunes its value
+projection with the result (FWP, paper §3.1). The seed threaded this
+through an ad-hoc ``aux["fwp_state"]`` dict; ``MSDAPipelineState`` makes
+the chain explicit and gives every consumer (encoder, detector,
+distributed wrapper, serving) one object to carry:
+
+    state = MSDAPipelineState.initial()
+    for block in blocks:
+        out, state = msda_attention(params, plan, q, refs, x, state=state)
+
+``block_stats`` accumulates the per-block DEFA statistics (PAP keep
+fraction, FWP keep fraction, value rows) when requested.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.fwp import FWPState
+
+
+@dataclasses.dataclass(frozen=True)
+class MSDAPipelineState:
+    """State produced by block k, consumed by block k+1."""
+    fwp: Optional[FWPState] = None       # mask/keep-list for the NEXT block
+    block_index: int = 0                 # how many blocks have executed
+    block_stats: Tuple[dict, ...] = ()   # per-block stats (collect_stats)
+
+    @classmethod
+    def initial(cls) -> "MSDAPipelineState":
+        """State before the first block: no mask yet, nothing counted."""
+        return cls()
+
+    def advance(self, fwp: Optional[FWPState],
+                stats: Optional[dict]) -> "MSDAPipelineState":
+        """State after one block: new FWP chain link, stats appended."""
+        return MSDAPipelineState(
+            fwp=fwp, block_index=self.block_index + 1,
+            block_stats=self.block_stats + ((stats,) if stats is not None
+                                            else ()))

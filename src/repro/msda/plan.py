@@ -1,0 +1,155 @@
+"""MSDAPlan — the static execution plan for one (config, level_shapes).
+
+Resolved ONCE per shape family (cache it, or let ``plan_for`` memoize);
+everything in it is Python-static so it can be closed over by jit'd code.
+The plan decides, ahead of execution:
+
+  * **backend** — which registered kernel runs the fused gather+aggregate
+    step (``jnp_gather`` | ``pallas_fused`` | ``pallas_windowed``; the
+    ``auto`` policy picks by VMEM fit, mirroring the NPU follow-up work's
+    shape-specialized kernel selection);
+  * **VMEM fit** — whether the whole per-(batch, head-group) value table
+    fits the configured VMEM slab (fused whole-table kernel) or only a
+    bounded window does (windowed kernel, needs range-narrowing);
+  * **TPU lane layout** — Dh is usually 32 in the DETR family, far below
+    the 128-lane vector width. The plan either pads Dh -> 128 (7/8 of the
+    lanes idle) or *packs* ``128 // Dh`` heads per lane group so one
+    staged table row carries several heads (``head_pack``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import fwp as fwp_lib
+
+#: Default VMEM slab reserved for the fused kernel's staged value table.
+#: Real TPU cores have ~16 MB of VMEM; half is left for the double-buffered
+#: point/output tiles and the rest of the program.
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+
+_LANE_WIDTH = 128
+
+
+def lane_layout(n_heads: int, head_dim: int) -> Tuple[str, int]:
+    """TPU last-dim layout for a (rows, Dh) value table.
+
+    Returns (layout, head_pack): ``("native", 1)`` when Dh already fills
+    the 128-lane width, ``("pack", g)`` when g = gcd(n_heads, 128 // Dh)
+    heads can share one lane group, else ``("pad", 1)``."""
+    if head_dim % _LANE_WIDTH == 0:
+        return "native", 1
+    if head_dim < _LANE_WIDTH and _LANE_WIDTH % head_dim == 0:
+        g = math.gcd(n_heads, _LANE_WIDTH // head_dim)
+        if g > 1:
+            return "pack", g
+    return "pad", 1
+
+
+def value_rows(level_shapes: Sequence[Tuple[int, int]]) -> int:
+    """WORST-CASE rows of the value table a backend gathers from.
+
+    FWP-compact shrinks the table from block 2 onward, but block 1 always
+    runs unpruned (there is no mask yet), so the VMEM-fit decision must be
+    made against the full n_in-row table — a plan that only fits the
+    compacted table would blow VMEM on the first block."""
+    _, n_in = fwp_lib.level_starts(level_shapes)
+    return n_in
+
+
+def windowed_eligible(cfg) -> bool:
+    """The windowed kernel needs a finite sampling radius (C3) to bound
+    its fmap window — without range-narrowing there is no window."""
+    return cfg.range_narrow is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class MSDAPlan:
+    """Static per-(config, level_shapes) execution plan. Hashable."""
+    cfg: "object"                                   # MSDeformAttnConfig
+    level_shapes: Tuple[Tuple[int, int], ...]
+    backend: str                 # resolved registry name (never "auto")
+    block_q: int                 # query tile for the Pallas kernels
+    lane_layout: str             # "native" | "pad" | "pack"
+    head_pack: int               # heads per 128-lane group (1 unless packed)
+    vmem_budget_bytes: int
+    value_table_bytes: int       # staged (rows, lanes) slab for pallas_fused
+    n_in: int                    # total flat pixels across levels
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.value_table_bytes <= self.vmem_budget_bytes
+
+    def describe(self) -> str:
+        return (f"MSDAPlan(backend={self.backend}, block_q={self.block_q}, "
+                f"lanes={self.lane_layout}x{self.head_pack}, "
+                f"table={self.value_table_bytes/1024:.0f}KB/"
+                f"{self.vmem_budget_bytes/1024:.0f}KB, n_in={self.n_in})")
+
+
+def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
+              backend: Optional[str] = None,
+              block_q: int = 128,
+              vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
+              n_queries: Optional[int] = None) -> MSDAPlan:
+    """Resolve the static plan.
+
+    Backend precedence: explicit ``backend`` arg > ``cfg.backend`` >
+    the legacy ``cfg.impl`` string ("pallas" -> pallas_fused, "jnp" ->
+    jnp_gather). Any of them may be ``"auto"``: fused whole-table kernel
+    when the staged value table fits the VMEM budget, else the windowed
+    kernel when range-narrowing bounds the window, else the jnp gather.
+
+    ``n_queries``: optional hint for auto-selection. The windowed kernel
+    requires raster-ordered encoder queries (Nq == N_in); pass the query
+    count for decoder-style workloads so ``auto`` never plans a backend
+    whose runtime precondition is already known to fail."""
+    from repro.msda import backends as backend_registry
+
+    level_shapes = tuple((int(h), int(w)) for h, w in level_shapes)
+    _, n_in = fwp_lib.level_starts(level_shapes)
+    layout, pack = lane_layout(cfg.n_heads, cfg.head_dim)
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    lanes = cfg.head_dim if layout == "native" else _LANE_WIDTH
+    table_bytes = value_rows(level_shapes) * lanes * itemsize
+
+    requested = backend
+    if requested is None:
+        requested = getattr(cfg, "backend", None)
+    if requested is None:
+        legacy = {"jnp": "jnp_gather", "pallas": "pallas_fused"}
+        requested = legacy.get(cfg.impl, cfg.impl)
+
+    if requested == "auto":
+        raster_ok = n_queries is None or n_queries == n_in
+        if table_bytes <= vmem_budget_bytes:
+            requested = "pallas_fused"
+        elif windowed_eligible(cfg) and raster_ok:
+            requested = "pallas_windowed"
+        else:
+            requested = "jnp_gather"
+
+    if requested not in backend_registry.available_backends():
+        raise ValueError(
+            f"unknown MSDA backend {requested!r}; "
+            f"available: {backend_registry.available_backends()}")
+    if requested == "pallas_windowed" and not windowed_eligible(cfg):
+        raise ValueError("pallas_windowed needs cfg.range_narrow set "
+                         "(the bound IS what makes the fmap window finite)")
+
+    return MSDAPlan(cfg=cfg, level_shapes=level_shapes, backend=requested,
+                    block_q=block_q, lane_layout=layout, head_pack=pack,
+                    vmem_budget_bytes=vmem_budget_bytes,
+                    value_table_bytes=table_bytes, n_in=n_in)
+
+
+@functools.lru_cache(maxsize=256)
+def plan_for(cfg, level_shapes: Tuple[Tuple[int, int], ...],
+             backend: Optional[str] = None,
+             n_queries: Optional[int] = None) -> MSDAPlan:
+    """Memoized make_plan for hot call sites (the compat shim)."""
+    return make_plan(cfg, level_shapes, backend=backend, n_queries=n_queries)

@@ -11,3 +11,24 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# hypothesis is an optional dependency (the `test` extra in pyproject.toml).
+# Test modules import given/settings/st from here: with hypothesis absent,
+# property tests skip cleanly and everything else still runs.
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    import pytest  # noqa: E402
+
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed (pip install -e .[test])")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _StubStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StubStrategies()

@@ -6,7 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# given/settings/st skip property tests cleanly when hypothesis is absent
+from conftest import given, settings, st
 
 from repro.core import fwp as fwp_lib
 from repro.core import pap as pap_lib

@@ -2,7 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+# given/settings/st skip property tests cleanly when hypothesis is absent
+from conftest import given, settings, st
 
 from repro.models.common import ModelConfig, rope
 from repro.models.decoder import window_schedule

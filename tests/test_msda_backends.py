@@ -1,0 +1,222 @@
+"""Oracle parity + planning tests for the repro.msda subsystem.
+
+Every registered backend must produce the same numbers as the pure
+per-level oracle (``msdeform_attn_ref``) when pruning is off (or covers
+everything), and must agree with the ``jnp_gather`` backend under real
+PAP-topk / FWP-compact pruning. Plan auto-selection and the head-packed
+(4 heads x Dh=32 -> 128 lanes) dispatch are exercised explicitly."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import msda
+from repro.core import nn
+from repro.core.msdeform_attn import (
+    MSDeformAttnConfig, init_msdeform_attn, msdeform_attn_ref)
+
+LEVELS = ((16, 20), (8, 10), (4, 5), (2, 3))
+N_IN = sum(h * w for h, w in LEVELS)
+B, D = 1, 64
+RANGES = (6.0, 4.0, 3.0, 2.0)
+ALL_BACKENDS = ("jnp_gather", "pallas_fused", "pallas_windowed")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # Raster-ordered encoder queries (pallas_windowed needs Nq == N_in)
+    cfg = MSDeformAttnConfig(d_model=D, n_heads=2, range_narrow=RANGES)
+    key = jax.random.PRNGKey(0)
+    params = init_msdeform_attn(key, cfg)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, N_IN, D))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (B, N_IN, D))
+    refs = jnp.broadcast_to(
+        nn.reference_points_for_levels(LEVELS)[None], (B, N_IN, 2))
+    out_ref = msdeform_attn_ref(params, cfg, q, refs, x, LEVELS)
+    return cfg, params, q, refs, x, out_ref
+
+
+def _run(setup_t, backend, state=None, **cfg_kw):
+    cfg, params, q, refs, x, _ = setup_t
+    cfg2 = dataclasses.replace(cfg, **cfg_kw)
+    plan = msda.make_plan(cfg2, LEVELS, backend=backend, block_q=64)
+    return msda.msda_attention(params, plan, q, refs, x, state=state)
+
+
+# --------------------------------------------------------------------------
+# oracle parity — all backends vs. the independent per-level reference
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_backend_matches_oracle_plain(setup, backend):
+    out, _ = _run(setup, backend)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(setup[-1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_backend_matches_oracle_pap_topk_covering(setup, backend):
+    """PAP-topk keeping every point must still equal the oracle exactly."""
+    cfg = setup[0]
+    out, _ = _run(setup, backend, pap_mode="topk", pap_keep=cfg.n_lp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(setup[-1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_backend_matches_oracle_fwp_compact_covering(setup, backend):
+    """FWP-compact with full capacity & zero threshold keeps every pixel:
+    the compacted execution must reproduce the oracle bit-for-tolerance."""
+    _, st1 = _run(setup, "jnp_gather", fwp_mode="compact", fwp_k=0.0,
+                  fwp_capacity=1.0)
+    out, _ = _run(setup, backend, state=st1, fwp_mode="compact", fwp_k=0.0,
+                  fwp_capacity=1.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(setup[-1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# cross-backend parity under REAL pruning (output != oracle by design)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ("pallas_fused", "pallas_windowed"))
+def test_backend_matches_jnp_pap_topk(setup, backend):
+    kw = dict(pap_mode="topk", pap_keep=8)
+    want, _ = _run(setup, "jnp_gather", **kw)
+    out, _ = _run(setup, backend, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("backend", ("pallas_fused", "pallas_windowed"))
+def test_backend_matches_jnp_fwp_compact(setup, backend):
+    kw = dict(fwp_mode="compact", fwp_k=1.0, fwp_capacity=0.6)
+    _, st1 = _run(setup, "jnp_gather", **kw)
+    want, _ = _run(setup, "jnp_gather", state=st1, **kw)
+    out, _ = _run(setup, backend, state=st1, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("backend", ("pallas_fused", "pallas_windowed"))
+def test_backend_matches_jnp_pap_and_fwp_combined(setup, backend):
+    kw = dict(pap_mode="topk", pap_keep=8,
+              fwp_mode="compact", fwp_k=1.0, fwp_capacity=0.6)
+    _, st1 = _run(setup, "jnp_gather", **kw)
+    want, _ = _run(setup, "jnp_gather", state=st1, **kw)
+    out, _ = _run(setup, backend, state=st1, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# plan resolution
+# --------------------------------------------------------------------------
+
+def test_plan_auto_prefers_fused_when_table_fits(setup):
+    plan = msda.make_plan(setup[0], LEVELS, backend="auto")
+    assert plan.backend == "pallas_fused"
+    assert plan.fits_vmem
+
+
+def test_plan_auto_falls_to_windowed_when_table_exceeds_budget(setup):
+    plan = msda.make_plan(setup[0], LEVELS, backend="auto",
+                          vmem_budget_bytes=1024)   # table is ~213 KB
+    assert plan.backend == "pallas_windowed"
+    assert not plan.fits_vmem
+
+
+def test_plan_auto_respects_query_count_hint(setup):
+    """Decoder-style queries (Nq != N_in) can't use the windowed kernel:
+    the hint keeps auto from planning a backend that must crash."""
+    plan = msda.make_plan(setup[0], LEVELS, backend="auto",
+                          vmem_budget_bytes=1024, n_queries=7)
+    assert plan.backend == "jnp_gather"
+    plan = msda.make_plan(setup[0], LEVELS, backend="auto",
+                          vmem_budget_bytes=1024, n_queries=N_IN)
+    assert plan.backend == "pallas_windowed"
+
+
+def test_plan_auto_falls_to_jnp_without_range_narrowing(setup):
+    cfg = dataclasses.replace(setup[0], range_narrow=None)
+    plan = msda.make_plan(cfg, LEVELS, backend="auto", vmem_budget_bytes=1024)
+    assert plan.backend == "jnp_gather"
+
+
+def test_plan_windowed_requires_range_narrowing(setup):
+    cfg = dataclasses.replace(setup[0], range_narrow=None)
+    with pytest.raises(ValueError):
+        msda.make_plan(cfg, LEVELS, backend="pallas_windowed")
+
+
+def test_plan_unknown_backend_rejected(setup):
+    with pytest.raises(ValueError):
+        msda.make_plan(setup[0], LEVELS, backend="nope")
+
+
+def test_plan_legacy_impl_mapping(setup):
+    cfg = dataclasses.replace(setup[0], impl="pallas")
+    assert msda.make_plan(cfg, LEVELS).backend == "pallas_fused"
+    cfg = dataclasses.replace(setup[0], impl="jnp")
+    assert msda.make_plan(cfg, LEVELS).backend == "jnp_gather"
+    # explicit cfg.backend overrides impl
+    cfg = dataclasses.replace(setup[0], impl="jnp", backend="pallas_fused")
+    assert msda.make_plan(cfg, LEVELS).backend == "pallas_fused"
+
+
+def test_registry_lists_all_builtins():
+    for name in ALL_BACKENDS:
+        assert name in msda.available_backends()
+        assert callable(msda.get_backend(name))
+
+
+# --------------------------------------------------------------------------
+# head-packed lane layout (4 heads x Dh=32 -> one 128-lane group)
+# --------------------------------------------------------------------------
+
+def test_lane_layout_resolution():
+    assert msda.lane_layout(8, 32) == ("pack", 4)     # 4x32 = 128 lanes
+    assert msda.lane_layout(8, 128) == ("native", 1)
+    assert msda.lane_layout(3, 40) == ("pad", 1)      # 40 doesn't divide 128
+
+
+def test_head_packed_backend_matches_oracle():
+    """DETR-scale head geometry (8 heads, Dh=32): the plan packs 4 heads
+    per lane group and the packed kernel must equal the oracle."""
+    cfg = MSDeformAttnConfig(d_model=256, n_heads=8, range_narrow=RANGES)
+    key = jax.random.PRNGKey(3)
+    params = init_msdeform_attn(key, cfg)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, N_IN, 256))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (B, N_IN, 256))
+    refs = jnp.broadcast_to(
+        nn.reference_points_for_levels(LEVELS)[None], (B, N_IN, 2))
+    plan = msda.make_plan(cfg, LEVELS, backend="pallas_fused", block_q=64)
+    assert plan.lane_layout == "pack" and plan.head_pack == 4
+    out, _ = msda.msda_attention(params, plan, q, refs, x)
+    want = msdeform_attn_ref(params, cfg, q, refs, x, LEVELS)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# pipeline state threading
+# --------------------------------------------------------------------------
+
+def test_pipeline_state_threads_fwp_chain(setup):
+    cfg, params, q, refs, x, _ = setup
+    cfg2 = dataclasses.replace(cfg, fwp_mode="compact", fwp_k=1.0,
+                               fwp_capacity=0.8)
+    plan = msda.make_plan(cfg2, LEVELS, backend="jnp_gather")
+    state = msda.MSDAPipelineState.initial()
+    assert state.fwp is None and state.block_index == 0
+    _, state = msda.msda_attention(params, plan, q, refs, x, state=state,
+                                   collect_stats=True)
+    assert state.fwp is not None and state.block_index == 1
+    assert len(state.block_stats) == 1
+    assert "pap_keep_frac" in state.block_stats[0]
+    _, state = msda.msda_attention(params, plan, q, refs, x, state=state,
+                                   collect_stats=True)
+    assert state.block_index == 2 and len(state.block_stats) == 2
+    assert "fwp_keep_frac" in state.block_stats[1]
