@@ -1,0 +1,71 @@
+"""CI perf-regression gate for the per-backend micro rows.
+
+Compares the ``micro`` section of a freshly produced benchmark JSON
+(``benchmarks/run.py --only micro --json <path>``) against the committed
+``results/benchmarks.json`` baseline and fails (exit 1) when any
+``msda_*`` backend row is more than ``--threshold`` times slower than
+its baseline. Rows without a baseline entry (new backends) are reported
+but never fail; interpret-mode wall time is structural, so the default
+threshold is a generous 1.5x.
+
+Usage:
+    python benchmarks/check_regression.py \
+        --baseline results/benchmarks.json --current /tmp/bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _micro_rows(payload: dict) -> dict:
+    # accept both the results file ({"micro": {...}}) and the --json
+    # payload ({"results": {"micro": {...}}})
+    if "micro" in payload:
+        return payload["micro"]
+    return payload.get("results", {}).get("micro", {})
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="results/benchmarks.json")
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when current > threshold * baseline")
+    ap.add_argument("--prefix", default="msda_",
+                    help="only rows with this prefix gate the build")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = _micro_rows(json.load(f))
+    with open(args.current) as f:
+        cur = _micro_rows(json.load(f))
+
+    failures = []
+    for name, row in sorted(cur.items()):
+        if not name.startswith(args.prefix):
+            continue
+        us = float(row["us_per_call"])
+        if name not in base:
+            print(f"[check] {name}: {us:.1f} us (no baseline — skipped)")
+            continue
+        ref = float(base[name]["us_per_call"])
+        ratio = us / ref if ref > 0 else float("inf")
+        status = "FAIL" if ratio > args.threshold else "ok"
+        print(f"[check] {name}: {us:.1f} us vs baseline {ref:.1f} us "
+              f"({ratio:.2f}x) {status}")
+        if ratio > args.threshold:
+            failures.append((name, ratio))
+
+    if failures:
+        print(f"[check] {len(failures)} backend row(s) regressed "
+              f">{args.threshold}x: "
+              + ", ".join(f"{n} ({r:.2f}x)" for n, r in failures))
+        return 1
+    print("[check] all backend rows within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

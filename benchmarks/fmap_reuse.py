@@ -36,9 +36,27 @@ def report(block_q: int = 512) -> dict:
         })
         tot_full += full
         tot_win += win
-    return {"levels": rows, "total_vmem_full_kb": tot_full / 1024,
-            "total_vmem_window_kb": tot_win / 1024,
-            "total_ratio": tot_full / tot_win}
+    out = {"levels": rows, "total_vmem_full_kb": tot_full / 1024,
+           "total_vmem_window_kb": tot_win / 1024,
+           "total_ratio": tot_full / tot_win}
+    out.update(_msp_staged(block_q))
+    return out
+
+
+def _msp_staged(block_q: int, capacity: float = 0.6) -> dict:
+    """What the single-launch multi-scale-parallel kernel ACTUALLY stages
+    per grid step (all L level windows co-resident), dense vs the
+    FWP-compact slot windows — computed from the kernel's real static
+    window geometry, not the analytic model above."""
+    from repro.core.fwp import level_capacities
+    from repro.kernels.msgs_windowed import window_geometry
+    geo = window_geometry(LEVELS, tuple(float(r) for r in RANGES), block_q)
+    caps = level_capacities(LEVELS, capacity)
+    dense = geo.staged_bytes(D_HEAD, BYTES)
+    compact = geo.staged_bytes(D_HEAD, BYTES, caps=caps)
+    return {"msp_staged_dense_kb": dense / 1024,
+            "msp_staged_compact_kb": compact / 1024,
+            "msp_compact_ratio": dense / compact}
 
 
 if __name__ == "__main__":
@@ -47,3 +65,6 @@ if __name__ == "__main__":
         print(row)
     print(f"total VMEM: {r['total_vmem_full_kb']:.0f} KB -> "
           f"{r['total_vmem_window_kb']:.0f} KB ({r['total_ratio']:.1f}x)")
+    print(f"msp staged/step: dense {r['msp_staged_dense_kb']:.0f} KB -> "
+          f"compact {r['msp_staged_compact_kb']:.0f} KB "
+          f"({r['msp_compact_ratio']:.2f}x)")

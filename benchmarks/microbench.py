@@ -13,12 +13,14 @@ import numpy as np
 from repro.kernels import ops, ref
 
 
-def _time(fn, *args, iters: int = 5) -> float:
+def _time(fn, *args, iters: int = 7) -> float:
     fn(*args)                                   # compile/warm
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6   # us
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6           # us (median: load-spike-proof)
 
 
 def _msda_backend_rows() -> list[tuple[str, float, str]]:
@@ -45,6 +47,22 @@ def _msda_backend_rows() -> list[tuple[str, float, str]]:
                      msda.msda_attention(p_, plan, q_, r_, x_)[0])
         rows.append((f"msda_{name}", _time(lambda: fn(params, q, refs, x)),
                      f"planned block, lanes={plan.lane_layout}x{plan.head_pack}"))
+
+    # FWP-compact windowed pair: the single-launch kernel samples the
+    # compacted table directly (no densify); the retired loop densifies.
+    import dataclasses
+    cfg_c = dataclasses.replace(cfg, fwp_mode="compact", fwp_k=1.0,
+                                fwp_capacity=0.6)
+    plan_j = msda.make_plan(cfg_c, levels, backend="jnp_gather", block_q=64)
+    _, state = msda.msda_attention(params, plan_j, q, refs, x)
+    for name in ("pallas_windowed", "pallas_windowed_loop"):
+        plan = msda.make_plan(cfg_c, levels, backend=name, block_q=64)
+        fn = jax.jit(lambda p_, q_, r_, x_, plan=plan:
+                     msda.msda_attention(p_, plan, q_, r_, x_,
+                                         state=state)[0])
+        rows.append((f"msda_{name}_fwpcompact",
+                     _time(lambda: fn(params, q, refs, x)),
+                     "planned block, FWP-compact table"))
     return rows
 
 

@@ -105,11 +105,27 @@ def main() -> None:
 
     if want("micro"):
         from benchmarks.microbench import run as micro_run
-        rows.extend(micro_run())
+        micro_rows = micro_run()
+        rows.extend(micro_rows)
+        # per-backend micro rows keyed by name: the CI regression gate
+        # (benchmarks/check_regression.py) diffs these against the
+        # committed results/benchmarks.json baseline
+        results["micro"] = {n: {"us_per_call": round(us, 1), "derived": d}
+                            for n, us, d in micro_rows}
 
     os.makedirs("results", exist_ok=True)
+    # merge: a partial run (--only micro) must not clobber the other
+    # figures' entries in the committed baseline
+    baseline: dict = {}
+    if os.path.exists("results/benchmarks.json"):
+        try:
+            with open("results/benchmarks.json") as f:
+                baseline = json.load(f)
+        except (OSError, ValueError):
+            baseline = {}
+    baseline.update(results)
     with open("results/benchmarks.json", "w") as f:
-        json.dump(results, f, indent=1, default=str)
+        json.dump(baseline, f, indent=1, default=str)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:

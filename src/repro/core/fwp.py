@@ -102,6 +102,11 @@ def build_fwp_state(
     for li, ((h, w), s, c) in enumerate(zip(level_shapes, starts, caps)):
         score_l = jax.lax.dynamic_slice_in_dim(score, int(s), h * w, axis=1)
         _, idx_l = jax.lax.top_k(score_l, c)                      # (B, c)
+        # Slots are RASTER-ORDERED within the level (sorted by pixel index,
+        # not by score): a spatial pixel window then maps to a contiguous
+        # slot range of the compact table, which is what lets the windowed
+        # kernel stage a bounded slot window instead of densifying.
+        idx_l = jnp.sort(idx_l, axis=1)
         keep_parts.append(idx_l.astype(jnp.int32) + int(s))
         slot_parts.append(slot_off + jnp.arange(c, dtype=jnp.int32))
         slot_off += c

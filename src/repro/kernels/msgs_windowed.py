@@ -1,29 +1,392 @@
-"""Pallas TPU kernel: windowed MSGS — fmap reuse via bounded ranges (C3+C7).
+"""Pallas TPU kernels: windowed MSGS — fmap reuse via bounded ranges (C3+C7).
 
 DEFA bounds sampling offsets per level (range-narrowing) so only a bounded
 window of the fmap around a query tile's reference points can ever be
 touched; neighbouring tiles' windows overlap and the overlap is reused
-on-chip (paper Fig. 4). On TPU this becomes a BlockSpec with an
-*element-offset* window (``pl.Element`` on jax >= 0.5,
-``indexing_mode=pl.Unblocked`` before): for query tile t the kernel
-receives fmap rows [row0(t) − R, row0(t) + tile_rows + R]; Pallas's
-double-buffered pipeline fetches each window once and VMEM holds only the
-window, not the level — the VMEM working set drops from H·W·Dh to
-window·W·Dh (measured in benchmarks/fmap_reuse.py).
+on-chip (paper Fig. 4).
 
-Single-level, single-(batch·head) view: callers vmap over batch/head and
-invoke per (query-level × sampled-level) pair; queries are raster-ordered
-over their level (encoder queries are the fmap pixels themselves).
+Two generations of the idea live here:
+
+``msgs_windowed_msp_pallas`` — the **multi-scale-parallel** kernel (paper
+C5 at the launch level): ONE ``pallas_call`` whose grid spans
+
+    (batch x head-group x query-tile)
+
+with the sampled-level axis unrolled *inside* each grid step. Every step
+stages all L range-narrowed level windows into VMEM at once — each level
+gets its own statically-sized BlockSpec window, so the big level's
+window never inflates the small levels' staging (a level axis in the
+grid would force one uniform window extent on every level). The L
+partial sums accumulate in registers and the output block is written
+once — cross-level aggregation is fused in-kernel instead of
+materialized as L HBM-sized accumulators, and the co-resident level
+windows are the VMEM analogue of DEFA's inter-level parallel PE groups.
+The kernel is **FWP-compact-native**: when the value table is compacted,
+each level window is a *slot* window of the compact table (slots are
+raster-ordered per level, so a pixel window maps to one contiguous slot
+range located by ``searchsorted(keep_idx, window_start)`` and bounded
+statically by ``min(window_pixels, level_capacity)``), and the corner
+gather goes through a windowed slice of the ``pix2slot`` indirection —
+the densified (B, N_in, H, Dh) table is never built. Dynamic window
+starts ride in as scalar-prefetch arguments so the BlockSpec index maps
+can DMA the right slab.
+
+``msgs_windowed_pallas`` — the retired per-(query-level x sampled-level)
+single-launch-per-pair kernel, kept one release for the
+``pallas_windowed_loop`` backend so the parity suite can diff the two
+numerically. It receives fmap rows [row0(t) − R, row0(t) + tile_rows + R]
+per query tile t via an element-offset BlockSpec (``pl.Element`` on
+jax >= 0.5, ``indexing_mode=pl.Unblocked`` before).
 """
 from __future__ import annotations
 
 import functools
 import math
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+
+# ==========================================================================
+# Static window geometry for the multi-scale-parallel kernel
+# ==========================================================================
+
+class WindowGeometry(NamedTuple):
+    """Static (numpy) per-(tile, sampled-level) window plan.
+
+    Tiles partition the *padded* raster query axis level by level (tiles
+    never straddle a query-level boundary, so every tile has one static
+    reference-row span). All arrays are host-side numpy: the geometry is
+    resolved once per (level_shapes, ranges, tile_q) and closed over by
+    the jit'd kernel wrapper."""
+    level_shapes: Tuple[Tuple[int, int], ...]
+    level_starts: Tuple[int, ...]     # flat start of each level
+    tile_q: int                       # uniform query-tile size
+    n_tiles: int                      # total tiles across query levels
+    nq_padded: int                    # tile_q * n_tiles
+    pad_offsets: Tuple[int, ...]      # per query level: start in padded axis
+    tile_qlevel: np.ndarray           # (T,) query level of each tile
+    pix_lo: np.ndarray                # (T, L) natural flat-pixel window start
+    win_pix: np.ndarray               # (T, L) pixel-window size (rows * w_l)
+    w_pix_levels: Tuple[int, ...]     # per sampled level: staged pixel
+    #   window (max over tiles) — the static BlockSpec extent of level l
+    pstart: np.ndarray                # (T, L) pix_lo clipped per level so a
+    #   w_pix_levels[l] window always stays inside the flat table
+    n_in: int
+
+    def slot_windows(self, caps: Sequence[int]) -> Tuple[int, ...]:
+        """Per-level compact-table slot windows: a pixel window of
+        ``w_pix_levels[l]`` pixels holds at most ``min(that, cap_l)``
+        slots (slots are raster-ordered per level)."""
+        return tuple(min(w, int(c))
+                     for w, c in zip(self.w_pix_levels, caps))
+
+    def staged_bytes(self, lanes: int, itemsize: int,
+                     caps: Optional[Sequence[int]] = None) -> int:
+        """Value-window VMEM staged per grid step (all L level windows
+        are co-resident). With ``caps`` (FWP-compact): the slot windows
+        of the compacted table plus the int32 ``pix2slot`` slices. The
+        single source of truth for plan accounting and benchmarks."""
+        if caps is None:
+            return sum(self.w_pix_levels) * lanes * itemsize
+        return (sum(self.slot_windows(caps)) * lanes * itemsize
+                + sum(self.w_pix_levels) * 4)
+
+
+@functools.lru_cache(maxsize=64)
+def window_geometry(level_shapes: Tuple[Tuple[int, int], ...],
+                    ranges: Tuple[float, ...],
+                    tile_q: int) -> WindowGeometry:
+    """Resolve the static window plan.
+
+    For tile t (query level ql, reference rows [qr0, qr1]) sampling level
+    sl, the touched rows are bounded by the pixel-centre reference mapping
+    y = (r + 0.5) / h_ql * h_sl - 0.5 plus the range-narrowing bound
+    R_sl, one bilinear-corner row, and one row of quantization margin.
+
+    Note the static extents are maxima over ALL tiles: a coarse query
+    level's tile spans many of its rows, so its references cover most of
+    the image and its fine-level windows approach the whole level. The
+    fine (large) query levels hold the vast majority of tiles and keep
+    tight windows; under FWP-compact every extent is additionally
+    capacity-bounded via :meth:`WindowGeometry.slot_windows`."""
+    starts = np.concatenate(
+        [[0], np.cumsum([h * w for h, w in level_shapes])[:-1]]).astype(np.int64)
+    n_in = int(sum(h * w for h, w in level_shapes))
+    n_l = len(level_shapes)
+
+    tiles = []                       # (ql, first query row, last query row)
+    pad_offsets = []
+    off = 0
+    for ql, (h, w) in enumerate(level_shapes):
+        pad_offsets.append(off)
+        n = h * w
+        for i in range(0, n, tile_q):
+            qr0 = i // w
+            qr1 = (min(i + tile_q, n) - 1) // w
+            tiles.append((ql, qr0, qr1))
+        off += tile_q * math.ceil(n / tile_q)
+    n_tiles = len(tiles)
+
+    pix_lo = np.zeros((n_tiles, n_l), np.int64)
+    win_pix = np.zeros((n_tiles, n_l), np.int64)
+    for t, (ql, qr0, qr1) in enumerate(tiles):
+        h_ql = level_shapes[ql][0]
+        for sl, (h_sl, w_sl) in enumerate(level_shapes):
+            r_bound = float(ranges[sl])
+            ymin = (qr0 + 0.5) / h_ql * h_sl - 0.5 - r_bound - 1.0
+            ymax = (qr1 + 0.5) / h_ql * h_sl - 0.5 + r_bound + 1.0
+            r0 = max(0, int(math.floor(ymin)))
+            r1 = min(h_sl - 1, int(math.floor(ymax)) + 1)
+            pix_lo[t, sl] = starts[sl] + r0 * w_sl
+            win_pix[t, sl] = (r1 - r0 + 1) * w_sl
+    w_pix_levels = tuple(int(w) for w in win_pix.max(axis=0))
+    pstart = np.stack(
+        [np.clip(pix_lo[:, l], 0, n_in - w_pix_levels[l])
+         for l in range(n_l)], axis=1)
+    return WindowGeometry(
+        level_shapes=level_shapes, level_starts=tuple(int(s) for s in starts),
+        tile_q=tile_q, n_tiles=n_tiles,
+        nq_padded=tile_q * n_tiles, pad_offsets=tuple(pad_offsets),
+        tile_qlevel=np.asarray([t[0] for t in tiles], np.int64),
+        pix_lo=pix_lo, win_pix=win_pix, w_pix_levels=w_pix_levels,
+        pstart=pstart.astype(np.int32), n_in=n_in)
+
+
+def repack_queries(geo: WindowGeometry, arr: jnp.ndarray,
+                   fill=0) -> jnp.ndarray:
+    """Re-lay a raster-ordered (B, Nq, ...) per-query array into the
+    tile-packed padded layout (B, nq_padded, ...)."""
+    parts = []
+    for ql, (h, w) in enumerate(geo.level_shapes):
+        n = h * w
+        seg = arr[:, geo.level_starts[ql]:geo.level_starts[ql] + n]
+        pad = geo.tile_q * math.ceil(n / geo.tile_q) - n
+        if pad:
+            widths = [(0, 0), (0, pad)] + [(0, 0)] * (arr.ndim - 2)
+            seg = jnp.pad(seg, widths, constant_values=fill)
+        parts.append(seg)
+    return jnp.concatenate(parts, axis=1)
+
+
+def unpack_queries(geo: WindowGeometry, arr: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`repack_queries` (drops the per-level padding)."""
+    parts = []
+    for ql, (h, w) in enumerate(geo.level_shapes):
+        off = geo.pad_offsets[ql]
+        parts.append(arr[:, off:off + h * w])
+    return jnp.concatenate(parts, axis=1)
+
+
+# ==========================================================================
+# Multi-scale-parallel windowed kernel (single launch, fused aggregation)
+# ==========================================================================
+
+def _make_msp_kernel(geo: WindowGeometry, w_rows_v: Tuple[int, ...],
+                     head_pack: int, dh: int, use_remap: bool):
+    """Kernel body for grid (B, H/G, T); sampled levels unrolled in-body.
+
+    Refs (after the scalar-prefetch window starts): x, y, level, probs
+    point blocks (1, TQ, G, K); per level an optional remap window
+    (1, w_pix_levels[l]) and a value window (1, w_rows_v[l], G, Dh);
+    output block (1, TQ, G, Dh). All L level windows are resident in the
+    same grid step — the VMEM analogue of DEFA's inter-level parallel PE
+    groups — and their partial sums accumulate in registers, so level
+    aggregation is fused with no HBM round-trip and no output revisiting."""
+    n_l = len(geo.level_shapes)
+
+    def kernel(*refs):
+        if use_remap:
+            vstart_ref, pstart_ref = refs[0], refs[1]
+            x_ref, y_ref, lvl_ref, p_ref = refs[2:6]
+            r_refs = refs[6:6 + n_l]
+            v_refs = refs[6 + n_l:6 + 2 * n_l]
+        else:
+            vstart_ref = refs[0]
+            x_ref, y_ref, lvl_ref, p_ref = refs[1:5]
+            v_refs = refs[5:5 + n_l]
+        o_ref = refs[-1]
+        b = pl.program_id(0)
+        t = pl.program_id(2)
+
+        x = x_ref[0]                                     # (TQ, G, K)
+        y = y_ref[0]
+        lvlp = lvl_ref[0]
+        probs = p_ref[0]
+        gid = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+
+        x0 = jnp.floor(x)
+        y0 = jnp.floor(y)
+        t1 = (x - x0)[..., None]
+        t0 = (y - y0)[..., None]
+        x0i = x0.astype(jnp.int32)
+        y0i = y0.astype(jnp.int32)
+
+        acc = jnp.zeros(x.shape[:2] + (dh,), o_ref.dtype)
+        for l, (h_l, w_l) in enumerate(geo.level_shapes):
+            st_l = geo.level_starts[l]
+            wv = w_rows_v[l]
+            wp = geo.w_pix_levels[l]
+            # The whole head group is processed vectorized: the packed
+            # level window is viewed as (wv * G, Dh) and each head's
+            # corner gather addresses row*G + head, so one flat take
+            # serves all G heads with no per-head lane slicing.
+            v3 = v_refs[l][0].reshape(wv * head_pack, dh)
+            on = lvlp == l                               # point on level l
+            if use_remap:
+                r2 = r_refs[l][0]
+                s_lo = vstart_ref[b, t, l]
+                p_lo = pstart_ref[t, l]
+            else:
+                s_lo = vstart_ref[t, l]
+
+            def corner(dx, dy):
+                cx = x0i + dx
+                cy = y0i + dy
+                valid = on & (cx >= 0) & (cx < w_l) & (cy >= 0) & (cy < h_l)
+                pix = (st_l + jnp.clip(cy, 0, h_l - 1) * w_l
+                       + jnp.clip(cx, 0, w_l - 1))
+                if use_remap:
+                    lpix = pix - p_lo
+                    valid &= (lpix >= 0) & (lpix < wp)
+                    lpix = jnp.clip(lpix, 0, wp - 1)
+                    slot = jnp.take(r2, lpix.reshape(-1)).reshape(lpix.shape)
+                    lrow = slot - s_lo                   # slot-window local
+                else:
+                    lrow = pix - s_lo                    # pixel-window local
+                valid &= (lrow >= 0) & (lrow < wv)
+                idx = jnp.clip(lrow, 0, wv - 1) * head_pack + gid
+                gat = jnp.take(v3, idx.reshape(-1), axis=0).reshape(
+                    idx.shape + (dh,))
+                return gat * valid[..., None]
+
+            n0 = corner(0, 0)
+            n1 = corner(1, 0)
+            n2 = corner(0, 1)
+            n3 = corner(1, 1)
+            # Eq. 4 — three multiplies by the fractional coordinates:
+            s = (n0 + (n2 - n0) * t0
+                 + ((n1 - n0) + (n3 - n2 - n1 + n0) * t0) * t1)
+            acc += jnp.sum(s * probs[..., None], axis=2)
+        o_ref[0] = acc
+    return kernel
+
+
+def _v_index(l: int, g: int, use_remap: bool):
+    if use_remap:
+        return lambda bi, gi, ti, vs, ps: (bi, vs[bi, ti, l], gi * g, 0)
+    return lambda bi, gi, ti, vs: (bi, vs[ti, l], gi * g, 0)
+
+
+def _r_index(l: int):
+    return lambda bi, gi, ti, vs, ps: (bi, ps[ti, l])
+
+
+def _elem_spec(shape: Tuple[int, ...], index_map) -> pl.BlockSpec:
+    """Element-offset window BlockSpec across jax versions: every dim is
+    element-indexed (the index maps return element offsets for all dims,
+    e.g. ``gi * g`` for the head axis) — ``pl.Element`` per dim on
+    jax >= 0.5, ``indexing_mode=pl.Unblocked()`` before."""
+    if hasattr(pl, "Element"):           # jax >= 0.5 spelling
+        return pl.BlockSpec(tuple(pl.Element(s) for s in shape), index_map)
+    return pl.BlockSpec(shape, index_map, indexing_mode=pl.Unblocked())
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "level_shapes", "ranges", "tile_q", "head_pack", "caps", "interpret"))
+def msgs_windowed_msp_pallas(
+    v: jnp.ndarray,          # (B, N_rows, H, Dh) value table (maybe compact)
+    x_px: jnp.ndarray,       # (B, Nq, H, K) absolute pixel x in own level
+    y_px: jnp.ndarray,       # (B, Nq, H, K)
+    lvl_of_pt: jnp.ndarray,  # (B, Nq, H, K) int32 level index per point
+    probs: jnp.ndarray,      # (B, Nq, H, K)
+    remap: Optional[jnp.ndarray] = None,      # (B, N_in) pix -> slot
+    keep_idx: Optional[jnp.ndarray] = None,   # (B, cap) slot -> pix, sorted
+    *,
+    level_shapes: Tuple[Tuple[int, int], ...],
+    ranges: Tuple[float, ...],               # per-level |offset| bound (px)
+    tile_q: int = 128,
+    head_pack: int = 1,
+    caps: Optional[Tuple[int, ...]] = None,  # compact per-level capacities
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Single-launch multi-scale-parallel windowed MSGS + fused aggregation.
+
+    Queries must be raster-ordered encoder queries (Nq == N_in). Returns
+    (B, Nq, H, Dh). ``remap``/``keep_idx``/``caps`` together enable the
+    FWP-compact-native path (v is the compacted table + sentinel row)."""
+    b, n_rows, h, dh = v.shape
+    nq = x_px.shape[1]
+    k = x_px.shape[-1]
+    use_remap = remap is not None
+    assert h % head_pack == 0, (h, head_pack)
+    g = head_pack
+    n_groups = h // g
+
+    geo = window_geometry(level_shapes, ranges, tile_q)
+    assert nq == geo.n_in, (nq, geo.n_in)
+    n_l = len(level_shapes)
+
+    pack = lambda a, fill=0: repack_queries(geo, a, fill=fill)
+    x_px, y_px, probs = pack(x_px), pack(y_px), pack(probs)
+    lvl_of_pt = pack(lvl_of_pt, -1)          # padding matches no level
+
+    if use_remap:
+        # Window of the COMPACT table: first slot at-or-after the pixel
+        # window start (slots are raster-ordered per level), clipped so
+        # the static per-level slot window always fits the table.
+        # Clipping only moves the start down, which keeps every kept
+        # slot of the pixel window covered.
+        w_rows_v = tuple(min(w, n_rows) for w in (
+            geo.slot_windows(caps) if caps is not None else geo.w_pix_levels))
+        pix_lo = jnp.asarray(geo.pix_lo.reshape(-1), jnp.int32)
+        vstart = jax.vmap(lambda ki: jnp.searchsorted(ki, pix_lo))(keep_idx)
+        vstart = vstart.reshape(b, geo.n_tiles, n_l)
+        hi = jnp.asarray([n_rows - wv for wv in w_rows_v], jnp.int32)
+        vstart = jnp.clip(vstart, 0, hi[None, None, :]).astype(jnp.int32)
+        pstart = jnp.asarray(geo.pstart, jnp.int32)
+        scalars = (vstart, pstart)
+    else:
+        w_rows_v = geo.w_pix_levels
+        vstart = jnp.asarray(geo.pstart, jnp.int32)      # pixel == row space
+        scalars = (vstart,)
+
+    grid = (b, n_groups, geo.n_tiles)
+    pt = pl.BlockSpec((1, geo.tile_q, g, k),
+                      lambda bi, gi, ti, *s: (bi, ti, gi, 0))
+    v_specs = [_elem_spec((1, w_rows_v[l], g, dh), _v_index(l, g, use_remap))
+               for l in range(n_l)]
+    if use_remap:
+        r_specs = [_elem_spec((1, geo.w_pix_levels[l]), _r_index(l))
+                   for l in range(n_l)]
+        in_specs = [pt, pt, pt, pt] + r_specs + v_specs
+        inputs = ((x_px, y_px, lvl_of_pt, probs) + (remap,) * n_l
+                  + (v,) * n_l)
+    else:
+        in_specs = [pt, pt, pt, pt] + v_specs
+        inputs = (x_px, y_px, lvl_of_pt, probs) + (v,) * n_l
+    out_spec = pl.BlockSpec((1, geo.tile_q, g, dh),
+                            lambda bi, gi, ti, *s: (bi, ti, gi, 0))
+
+    kernel = _make_msp_kernel(geo, w_rows_v, g, dh, use_remap)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=len(scalars), grid=grid,
+            in_specs=in_specs, out_specs=out_spec),
+        out_shape=jax.ShapeDtypeStruct((b, geo.nq_padded, h, dh), v.dtype),
+        interpret=interpret, name="msgs_windowed_msp",
+    )(*scalars, *inputs)
+    return unpack_queries(geo, out)
+
+
+# ==========================================================================
+# Retired per-(query-level x sampled-level) kernel (pallas_windowed_loop)
+# ==========================================================================
 
 def _make_kernel(tile_q: int, w_query: int, halo: int, window_rows: int,
                  h_level: int, rows_scale: float):

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.msgs_fused import msgs_fused_pallas, msgs_fused_packed_pallas
-from repro.kernels.msgs_windowed import msgs_windowed_pallas
+from repro.kernels.msgs_windowed import (msgs_windowed_msp_pallas,
+                                         msgs_windowed_pallas)
 from repro.kernels.matmul import matmul_pallas
 
 
@@ -44,6 +45,25 @@ def msgs_fused_packed(v, x_px, y_px, start, wl, hl, probs,
                                     wl.astype(jnp.int32), hl.astype(jnp.int32),
                                     probs, remap, head_pack=head_pack,
                                     block_q=block_q, interpret=interp)
+
+
+def msgs_windowed_msp(v, x_px, y_px, lvl_of_pt, probs,
+                      remap: Optional[jnp.ndarray] = None,
+                      keep_idx: Optional[jnp.ndarray] = None, *,
+                      level_shapes, ranges, tile_q: int = 128,
+                      head_pack: int = 1, caps=None,
+                      interpret: Optional[bool] = None):
+    """Single-launch multi-scale-parallel windowed MSGS + fused in-kernel
+    level aggregation; FWP-compact-native. See kernels/msgs_windowed.py."""
+    interp = _interpret_default() if interpret is None else interpret
+    return msgs_windowed_msp_pallas(
+        v, x_px, y_px, lvl_of_pt.astype(jnp.int32), probs,
+        remap, keep_idx,
+        level_shapes=tuple(tuple(int(x) for x in s) for s in level_shapes),
+        ranges=tuple(float(r) for r in ranges), tile_q=tile_q,
+        head_pack=head_pack,
+        caps=None if caps is None else tuple(int(c) for c in caps),
+        interpret=interp)
 
 
 def msgs_windowed(v2d, x_px, y_px, probs, *, query_level_width: int,

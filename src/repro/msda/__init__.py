@@ -6,7 +6,9 @@ Three layers, one seam for every future backend:
     (config, level_shapes): backend choice, query tiling, VMEM fit,
     TPU lane layout (pad Dh -> 128 vs. pack 128/Dh heads per lane group);
   * :mod:`repro.msda.backends` — named-backend registry (``jnp_gather``,
-    ``pallas_fused``, ``pallas_windowed``, plus the ``auto`` policy) with
+    ``pallas_fused``, ``pallas_windowed`` — the single-launch
+    multi-scale-parallel windowed kernel — and the retired
+    ``pallas_windowed_loop`` diff target, plus the ``auto`` policy) with
     a uniform ``(plan, v, pts, probs) -> out`` contract;
   * :mod:`repro.msda.pipeline` / :mod:`repro.msda.attention` — the
     planned block execution threading explicit
@@ -23,8 +25,9 @@ from repro.msda.attention import msda_attention, project_values
 from repro.msda.backends import (available_backends, get_backend,
                                  register_backend)
 from repro.msda.pipeline import MSDAPipelineState
-from repro.msda.plan import (DEFAULT_VMEM_BUDGET, MSDAPlan, lane_layout,
-                             make_plan, plan_for, windowed_eligible)
+from repro.msda.plan import (DEFAULT_VMEM_BUDGET, MSDAPlan,
+                             block_q_for_levels, lane_layout, make_plan,
+                             next_pow2, plan_for, windowed_eligible)
 from repro.msda.sampling import (SamplingPoints, corner_data,
                                  flat_gather_heads, generate_points,
                                  level_meta, select_points)
@@ -33,8 +36,8 @@ __all__ = [
     "msda_attention", "project_values",
     "available_backends", "get_backend", "register_backend",
     "MSDAPipelineState",
-    "DEFAULT_VMEM_BUDGET", "MSDAPlan", "lane_layout", "make_plan",
-    "plan_for", "windowed_eligible",
+    "DEFAULT_VMEM_BUDGET", "MSDAPlan", "block_q_for_levels", "lane_layout",
+    "make_plan", "next_pow2", "plan_for", "windowed_eligible",
     "SamplingPoints", "corner_data", "flat_gather_heads",
     "generate_points", "level_meta", "select_points",
 ]

@@ -73,8 +73,12 @@ def msda_attention(
 
     # ---- 1+2. PAP'd probabilities + masked point generation --------------
     v, pix2slot, n_rows = project_values(params, cfg, x_flat, state.fwp)
+    # compact-table geometry rides along with the point geometry: the
+    # windowed kernel locates slot windows by searchsorting keep_idx
+    keep_idx = state.fwp.keep_idx if pix2slot is not None else None
     sel, pts = generate_points(params, cfg, query, ref_points,
-                               plan.level_shapes, pix2slot=pix2slot)
+                               plan.level_shapes, pix2slot=pix2slot,
+                               keep_idx=keep_idx)
 
     # ---- 3. backend-dispatched fused MSGS + aggregation ------------------
     backend = backend_registry.get_backend(plan.backend)

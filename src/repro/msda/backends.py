@@ -12,13 +12,26 @@ so new kernels (sharded, quantized, batched-serving) slot in with a
 ``@register_backend("name")`` and zero caller changes. Selection happens
 once, in ``plan.make_plan`` — never inside the hot path.
 
-  * ``jnp_gather``      — XLA flat-gather oracle path (any hardware).
-  * ``pallas_fused``    — whole-table-in-VMEM fused MSGS+aggregation
-                          kernel (C6); head-packed 128-lane dispatch when
-                          the plan packs ``head_pack`` heads per group.
-  * ``pallas_windowed`` — bounded-window kernel (C3+C7) for tables beyond
-                          the VMEM budget; needs raster-ordered encoder
-                          queries (Nq == N_in) and range-narrowing.
+  * ``jnp_gather``           — XLA flat-gather oracle path (any hardware).
+  * ``pallas_fused``         — whole-table-in-VMEM fused MSGS+aggregation
+                               kernel (C6); head-packed 128-lane dispatch
+                               when the plan packs ``head_pack`` heads per
+                               group.
+  * ``pallas_windowed``      — multi-scale-parallel windowed kernel
+                               (C3+C5+C7): ONE launch whose grid spans
+                               (B x head-group x query-tile x sampled
+                               level), staging only each level's
+                               range-narrowed window and accumulating
+                               cross-level partials in-kernel. Samples the
+                               FWP-compacted table directly through the
+                               pix2slot indirection — never densifies.
+                               Needs raster-ordered encoder queries
+                               (Nq == N_in) and range-narrowing.
+  * ``pallas_windowed_loop`` — the retired L² launch loop (one kernel per
+                               query-level x sampled-level pair, vmapped
+                               over B·H). Kept one release as the numeric
+                               diff target for the single-launch kernel;
+                               under FWP-compact it densifies the table.
 """
 from __future__ import annotations
 
@@ -64,11 +77,15 @@ def jnp_gather(plan, v: jnp.ndarray, pts: SamplingPoints,
                probs: jnp.ndarray) -> jnp.ndarray:
     b, nq, h, k = probs.shape
     idx, wgt, valid = corner_data(pts.x_px, pts.y_px, pts.wl, pts.hl, pts.start)
+    idx = idx.reshape(b, nq, h, k * 4)
     if pts.pix2slot is not None:
-        bidx = jnp.arange(b).reshape(b, 1, 1, 1, 1)
+        # pixel -> compact-slot remap on the flat (b, nq, h, k*4) index:
+        # hoisted out of the 5-D corner broadcast so the oracle path pays
+        # one flat gather, not a broadcast remap plus a gather.
+        bidx = jnp.arange(b).reshape(b, 1, 1, 1)
         idx = pts.pix2slot[bidx, idx]                    # pruned -> sentinel
     eff_w = wgt * valid.astype(wgt.dtype) * probs[..., None]
-    g = flat_gather_heads(v, idx.reshape(b, nq, h, k * 4))
+    g = flat_gather_heads(v, idx)
     return jnp.sum(g * eff_w.reshape(b, nq, h, k * 4)[..., None], axis=3)
 
 
@@ -92,28 +109,68 @@ def pallas_fused(plan, v: jnp.ndarray, pts: SamplingPoints,
 
 
 # --------------------------------------------------------------------------
-# pallas_windowed — bounded fmap window per query tile (C3 + C7)
+# pallas_windowed — multi-scale-parallel windowed single launch (C3+C5+C7)
 # --------------------------------------------------------------------------
+
+def _require_raster(plan, nq: int) -> None:
+    assert nq == plan.n_in, (
+        "windowed backends need raster-ordered encoder queries "
+        f"(Nq={nq} != N_in={plan.n_in}); plan a different backend")
+    assert plan.cfg.range_narrow is not None
+
 
 @register_backend("pallas_windowed")
 def pallas_windowed(plan, v: jnp.ndarray, pts: SamplingPoints,
                     probs: jnp.ndarray) -> jnp.ndarray:
-    """Per-(query-level x sampled-level) windowed dispatch.
+    """One Pallas launch across all levels (multi-scale parallelism).
 
-    Requires raster-ordered encoder queries: query q is pixel q of the
-    flattened pyramid (Nq == plan.n_in), so a query tile's references are
-    contiguous rows and range-narrowing bounds the touched fmap window.
-    Off-level points ride along with zero probability (their coordinates
-    are meaningless for the current sampled level; the kernel's validity
-    mask plus the zero weight removes them exactly), which keeps PAP-topk
-    dynamic point-to-level assignment supported."""
+    The grid spans (B x head-group x query-tile x sampled-level) with the
+    level axis innermost: each step stages only that level's
+    range-narrowed window and the partial sums accumulate into the output
+    block in-kernel, so level aggregation is fused instead of materialized
+    as L HBM-sized accumulators. Under FWP-compact the window is a slot
+    window of the compacted table addressed through ``pix2slot`` — the
+    dense (B, N_in, H, Dh) table is never built. Off-level points ride
+    along masked by the in-kernel ``lvl_of_pt == level`` test, which keeps
+    PAP-topk dynamic point-to-level assignment supported."""
+    from repro.core import fwp as fwp_lib
     from repro.kernels import ops as kernel_ops
     cfg = plan.cfg
     b, nq, h, k = probs.shape
-    assert nq == plan.n_in, (
-        "pallas_windowed needs raster-ordered encoder queries "
-        f"(Nq={nq} != N_in={plan.n_in}); plan a different backend")
-    assert cfg.range_narrow is not None
+    _require_raster(plan, nq)
+
+    g = plan.head_pack if (plan.lane_layout == "pack"
+                           and h % plan.head_pack == 0) else 1
+    caps = None
+    if pts.pix2slot is not None:
+        assert pts.keep_idx is not None, (
+            "FWP-compact windowed execution needs the raster-ordered "
+            "keep_idx (slot -> pixel map) threaded through SamplingPoints")
+        caps = fwp_lib.level_capacities(plan.level_shapes, cfg.fwp_capacity)
+    return kernel_ops.msgs_windowed_msp(
+        v, pts.x_px, pts.y_px, pts.lvl_of_pt,
+        probs, remap=pts.pix2slot, keep_idx=pts.keep_idx,
+        level_shapes=plan.level_shapes, ranges=cfg.range_narrow,
+        tile_q=plan.tile_q, head_pack=g, caps=caps)
+
+
+# --------------------------------------------------------------------------
+# pallas_windowed_loop — retired per-(query x sampled level) launch loop
+# --------------------------------------------------------------------------
+
+@register_backend("pallas_windowed_loop")
+def pallas_windowed_loop(plan, v: jnp.ndarray, pts: SamplingPoints,
+                         probs: jnp.ndarray) -> jnp.ndarray:
+    """RETIRED: L² Python loop of kernel launches, vmapped over B·H.
+
+    Kept one release as the numeric diff target for ``pallas_windowed``.
+    Under FWP-compact it DENSIFIES the value table back to
+    (B, N_in, H, Dh) — throwing away the compact footprint — which is
+    exactly what the single-launch kernel exists to avoid."""
+    from repro.kernels import ops as kernel_ops
+    cfg = plan.cfg
+    b, nq, h, k = probs.shape
+    _require_raster(plan, nq)
 
     if pts.pix2slot is not None:
         # Densify the FWP-compacted table: pruned pixels hit the zero
@@ -128,6 +185,7 @@ def pallas_windowed(plan, v: jnp.ndarray, pts: SamplingPoints,
     out_levels = []          # per-query-level accs; levels tile [0, Nq)
     for ql, (hq, wq_) in enumerate(plan.level_shapes):
         q_lo, nq_l = int(starts[ql]), hq * wq_
+        block_q = plan.block_q_levels[ql]
         xq = pts.x_px[:, q_lo:q_lo + nq_l]
         yq = pts.y_px[:, q_lo:q_lo + nq_l]
         lvl = pts.lvl_of_pt[:, q_lo:q_lo + nq_l]
@@ -143,7 +201,7 @@ def pallas_windowed(plan, v: jnp.ndarray, pts: SamplingPoints,
                     + int(math.ceil(0.5 * max(1.0, hs_ / hq))))
             run = lambda v2d, xx, yy, pp: kernel_ops.msgs_windowed(
                 v2d, xx, yy, pp, query_level_width=wq_, halo=halo,
-                block_q=plan.block_q)
+                block_q=block_q)
             vbh = v2.transpose(0, 3, 1, 2, 4).reshape(b * h, hs_, ws_, -1)
             xbh = xq.transpose(0, 2, 1, 3).reshape(b * h, nq_l, k)
             ybh = yq.transpose(0, 2, 1, 3).reshape(b * h, nq_l, k)

@@ -13,6 +13,12 @@ distributed wrapper, serving) one object to carry:
 
 ``block_stats`` accumulates the per-block DEFA statistics (PAP keep
 fraction, FWP keep fraction, value rows) when requested.
+
+Under ``fwp_mode="compact"`` the carried :class:`FWPState` is also the
+compact-table geometry for the next block's kernels: ``pix2slot`` (the
+pixel -> slot indirection) and the raster-ordered ``keep_idx`` (slot ->
+pixel), which the windowed backend searchsorts to locate per-level slot
+windows of the compacted table — sampling it directly, never densifying.
 """
 from __future__ import annotations
 

@@ -5,9 +5,15 @@ everything in it is Python-static so it can be closed over by jit'd code.
 The plan decides, ahead of execution:
 
   * **backend** — which registered kernel runs the fused gather+aggregate
-    step (``jnp_gather`` | ``pallas_fused`` | ``pallas_windowed``; the
-    ``auto`` policy picks by VMEM fit, mirroring the NPU follow-up work's
-    shape-specialized kernel selection);
+    step (``jnp_gather`` | ``pallas_fused`` | ``pallas_windowed`` |
+    ``pallas_windowed_loop``; the ``auto`` policy picks by VMEM fit,
+    mirroring the NPU follow-up work's shape-specialized kernel
+    selection);
+  * **query tiling** — a global ``block_q`` plus the per-level clamp
+    ``block_q_levels[l] = min(block_q, next_pow2(nq_l))`` and the
+    single-launch windowed kernel's uniform ``tile_q``, with the
+    windowed/compact staged-VMEM accounting (``window_bytes`` /
+    ``window_bytes_compact``);
   * **VMEM fit** — whether the whole per-(batch, head-group) value table
     fits the configured VMEM slab (fused whole-table kernel) or only a
     bounded window does (windowed kernel, needs range-narrowing);
@@ -33,6 +39,21 @@ from repro.core import fwp as fwp_lib
 DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
 
 _LANE_WIDTH = 128
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << (max(1, int(n)) - 1).bit_length()
+
+
+def block_q_for_levels(level_shapes: Sequence[Tuple[int, int]],
+                       block_q: int) -> Tuple[int, ...]:
+    """Per-query-level tile size: ``min(block_q, next_pow2(nq_l))``.
+
+    A global 128 tile would pad the (2, 3) level's 6 queries and the
+    (4, 5) level's 20 queries all the way to 128; clamping to the next
+    power of two keeps the tiny levels' tiles tiny."""
+    return tuple(min(block_q, next_pow2(h * w)) for h, w in level_shapes)
 
 
 def lane_layout(n_heads: int, head_dim: int) -> Tuple[str, int]:
@@ -79,16 +100,38 @@ class MSDAPlan:
     vmem_budget_bytes: int
     value_table_bytes: int       # staged (rows, lanes) slab for pallas_fused
     n_in: int                    # total flat pixels across levels
+    block_q_levels: Tuple[int, ...] = ()   # per-query-level tile size:
+    #   min(block_q, next_pow2(nq_l)) — the (2,3) level tiles 6 queries
+    #   as 8, not 128 (used by the pallas_windowed_loop per-level dispatch)
+    tile_q: int = 128            # uniform tile of the single-launch
+    #   multi-scale-parallel windowed kernel (= max(block_q_levels))
+    window_bytes: Optional[int] = None           # dense fmap window staged
+    #   per grid step by the windowed kernel (max over tile x level pairs)
+    window_bytes_compact: Optional[int] = None   # FWP-compact-native window:
+    #   slot window of the compacted table + the pix2slot window slice —
+    #   the VMEM the windowed kernel actually stages when fwp_mode=compact
 
     @property
     def fits_vmem(self) -> bool:
         return self.value_table_bytes <= self.vmem_budget_bytes
 
     def describe(self) -> str:
+        """One-line human summary of every static decision.
+
+        ``win=`` reports the windowed kernel's staged-VMEM accounting:
+        the dense per-step window, plus (when FWP-compact is on) the
+        compact-native window actually staged instead."""
+        win = ""
+        if self.window_bytes is not None:
+            win = f", win={self.window_bytes/1024:.0f}KB"
+            if self.window_bytes_compact is not None:
+                win += f"(compact {self.window_bytes_compact/1024:.0f}KB)"
         return (f"MSDAPlan(backend={self.backend}, block_q={self.block_q}, "
+                f"block_q_levels={self.block_q_levels}, "
                 f"lanes={self.lane_layout}x{self.head_pack}, "
                 f"table={self.value_table_bytes/1024:.0f}KB/"
-                f"{self.vmem_budget_bytes/1024:.0f}KB, n_in={self.n_in})")
+                f"{self.vmem_budget_bytes/1024:.0f}KB{win}, "
+                f"n_in={self.n_in})")
 
 
 def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
@@ -107,7 +150,12 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
     ``n_queries``: optional hint for auto-selection. The windowed kernel
     requires raster-ordered encoder queries (Nq == N_in); pass the query
     count for decoder-style workloads so ``auto`` never plans a backend
-    whose runtime precondition is already known to fail."""
+    whose runtime precondition is already known to fail.
+
+    NOTE: ``auto`` gates the windowed kernel on table-vs-budget only;
+    ``window_bytes`` / ``window_bytes_compact`` are accounting fields
+    (see ROADMAP: consulting them in the policy awaits real-TPU VMEM
+    calibration)."""
     from repro.msda import backends as backend_registry
 
     level_shapes = tuple((int(h), int(w)) for h, w in level_shapes)
@@ -137,14 +185,31 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
         raise ValueError(
             f"unknown MSDA backend {requested!r}; "
             f"available: {backend_registry.available_backends()}")
-    if requested == "pallas_windowed" and not windowed_eligible(cfg):
-        raise ValueError("pallas_windowed needs cfg.range_narrow set "
+    if requested.startswith("pallas_windowed") and not windowed_eligible(cfg):
+        raise ValueError(f"{requested} needs cfg.range_narrow set "
                          "(the bound IS what makes the fmap window finite)")
+
+    block_q_levels = block_q_for_levels(level_shapes, block_q)
+    tile_q = max(block_q_levels)
+    window_bytes = window_bytes_compact = None
+    if windowed_eligible(cfg):
+        from repro.kernels.msgs_windowed import window_geometry
+        geo = window_geometry(level_shapes,
+                              tuple(float(r) for r in cfg.range_narrow),
+                              tile_q)
+        window_bytes = geo.staged_bytes(lanes, itemsize)
+        if cfg.fwp_mode == "compact":
+            caps = fwp_lib.level_capacities(level_shapes, cfg.fwp_capacity)
+            window_bytes_compact = geo.staged_bytes(lanes, itemsize,
+                                                    caps=caps)
 
     return MSDAPlan(cfg=cfg, level_shapes=level_shapes, backend=requested,
                     block_q=block_q, lane_layout=layout, head_pack=pack,
                     vmem_budget_bytes=vmem_budget_bytes,
-                    value_table_bytes=table_bytes, n_in=n_in)
+                    value_table_bytes=table_bytes, n_in=n_in,
+                    block_q_levels=block_q_levels, tile_q=tile_q,
+                    window_bytes=window_bytes,
+                    window_bytes_compact=window_bytes_compact)
 
 
 @functools.lru_cache(maxsize=256)

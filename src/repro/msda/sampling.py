@@ -33,6 +33,9 @@ class SamplingPoints(NamedTuple):
     hl: jnp.ndarray          # int32 level height per point
     lvl_of_pt: jnp.ndarray   # int32 level index per point
     pix2slot: Optional[jnp.ndarray]   # (B, N_pix) FWP-compact indirection
+    keep_idx: Optional[jnp.ndarray] = None   # (B, cap) slot -> pixel map,
+    #   raster-ordered per level; the windowed kernel searchsorts it to
+    #   locate the compact slot window of a pixel window (no densify)
 
 
 def level_meta(level_shapes: Sequence[Tuple[int, int]]):
@@ -112,7 +115,8 @@ def select_points(params: dict, cfg, query: jnp.ndarray):
 def generate_points(params: dict, cfg, query: jnp.ndarray,
                     ref_points: jnp.ndarray,
                     level_shapes: Sequence[Tuple[int, int]],
-                    pix2slot: Optional[jnp.ndarray] = None):
+                    pix2slot: Optional[jnp.ndarray] = None,
+                    keep_idx: Optional[jnp.ndarray] = None):
     """Full point generation: PAP + offsets + flat-level geometry.
 
     Returns (sel: PAPSelection, pts: SamplingPoints)."""
@@ -126,5 +130,6 @@ def generate_points(params: dict, cfg, query: jnp.ndarray,
     x_px = ref_points[:, :, None, None, 0] * wl_f + offs_k[..., 0] - 0.5
     y_px = ref_points[:, :, None, None, 1] * hl_f + offs_k[..., 1] - 0.5
     pts = SamplingPoints(x_px=x_px, y_px=y_px, start=st, wl=wl, hl=hl,
-                         lvl_of_pt=lvl_of_pt, pix2slot=pix2slot)
+                         lvl_of_pt=lvl_of_pt, pix2slot=pix2slot,
+                         keep_idx=keep_idx)
     return sel, pts

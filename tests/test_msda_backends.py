@@ -21,7 +21,8 @@ LEVELS = ((16, 20), (8, 10), (4, 5), (2, 3))
 N_IN = sum(h * w for h, w in LEVELS)
 B, D = 1, 64
 RANGES = (6.0, 4.0, 3.0, 2.0)
-ALL_BACKENDS = ("jnp_gather", "pallas_fused", "pallas_windowed")
+ALL_BACKENDS = ("jnp_gather", "pallas_fused", "pallas_windowed",
+                "pallas_windowed_loop")
 
 
 @pytest.fixture(scope="module")
@@ -112,6 +113,93 @@ def test_backend_matches_jnp_pap_and_fwp_combined(setup, backend):
 
 
 # --------------------------------------------------------------------------
+# multi-scale-parallel windowed kernel: full pruning/layout matrix
+# --------------------------------------------------------------------------
+
+def _combo_setup(packed: bool):
+    """Geometry pair: packed (8 heads x Dh=32 -> 4-head lane groups) vs
+    genuinely unpacked (Dh=40 does not divide 128 -> pad layout, G=1)."""
+    d, heads = (256, 8) if packed else (80, 2)
+    cfg = MSDeformAttnConfig(d_model=d, n_heads=heads, range_narrow=RANGES)
+    key = jax.random.PRNGKey(11 if packed else 13)
+    params = init_msdeform_attn(key, cfg)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, N_IN, d))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (B, N_IN, d))
+    refs = jnp.broadcast_to(
+        nn.reference_points_for_levels(LEVELS)[None], (B, N_IN, 2))
+    return cfg, params, q, refs, x
+
+
+@pytest.mark.parametrize("packed", (False, True), ids=("padlane", "packed"))
+@pytest.mark.parametrize("pap", ("off", "topk"))
+@pytest.mark.parametrize("fwp", ("off", "mask", "compact"))
+def test_windowed_msp_matches_jnp_all_modes(fwp, pap, packed):
+    """Single-launch windowed kernel vs the jnp_gather oracle under every
+    combination of {FWP-compact, FWP-mask, PAP-topk, head-packed}."""
+    cfg, params, q, refs, x = _combo_setup(packed)
+    kw = {}
+    if pap == "topk":
+        kw.update(pap_mode="topk", pap_keep=8)
+    if fwp != "off":
+        kw.update(fwp_mode=fwp, fwp_k=1.0, fwp_capacity=0.6)
+    cfg2 = dataclasses.replace(cfg, **kw)
+    plan_j = msda.make_plan(cfg2, LEVELS, backend="jnp_gather", block_q=64)
+    plan_w = msda.make_plan(cfg2, LEVELS, backend="pallas_windowed",
+                            block_q=64)
+    if packed:
+        assert plan_w.lane_layout == "pack" and plan_w.head_pack == 4
+    else:
+        assert plan_w.lane_layout == "pad" and plan_w.head_pack == 1
+    state = None
+    if fwp != "off":            # block 1 builds the mask block 2 consumes
+        _, state = msda.msda_attention(params, plan_j, q, refs, x)
+        assert state.fwp is not None
+    want, _ = msda.msda_attention(params, plan_j, q, refs, x, state=state)
+    out, _ = msda.msda_attention(params, plan_w, q, refs, x, state=state)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+class _TakeAlongAxisSpy:
+    """Records every jnp.take_along_axis call's operand rank."""
+    def __init__(self):
+        self.ndims = []
+        self._real = jnp.take_along_axis
+
+    def __call__(self, arr, idx, axis=None, **kwargs):
+        self.ndims.append(arr.ndim)
+        return self._real(arr, idx, axis=axis, **kwargs)
+
+
+def _spy_densify(monkeypatch, setup_t, backend):
+    cfg, params, q, refs, x, _ = setup_t
+    kw = dict(fwp_mode="compact", fwp_k=1.0, fwp_capacity=0.6)
+    _, st1 = _run(setup_t, "jnp_gather", **kw)
+    spy = _TakeAlongAxisSpy()
+    monkeypatch.setattr(jnp, "take_along_axis", spy)
+    _run(setup_t, backend, state=st1, **kw)
+    monkeypatch.undo()
+    return spy
+
+
+def test_windowed_msp_never_densifies_compact_table(setup, monkeypatch):
+    """The single-launch windowed path must never materialize the
+    densified (B, N_in, H, Dh) table: no take_along_axis on the 4-D
+    value table is traced anywhere in the FWP-compact windowed execution
+    (5-D calls are the per-point offset selection, 3-D the compact value
+    projection — neither touches the staged table)."""
+    spy = _spy_densify(monkeypatch, setup, "pallas_windowed")
+    assert all(nd != 4 for nd in spy.ndims), spy.ndims
+
+
+def test_windowed_loop_densifies_compact_table(setup, monkeypatch):
+    """Positive control for the spy: the retired loop path DOES densify
+    (a 4-D take_along_axis on the value table)."""
+    spy = _spy_densify(monkeypatch, setup, "pallas_windowed_loop")
+    assert any(nd == 4 for nd in spy.ndims), spy.ndims
+
+
+# --------------------------------------------------------------------------
 # plan resolution
 # --------------------------------------------------------------------------
 
@@ -154,6 +242,32 @@ def test_plan_windowed_requires_range_narrowing(setup):
 def test_plan_unknown_backend_rejected(setup):
     with pytest.raises(ValueError):
         msda.make_plan(setup[0], LEVELS, backend="nope")
+
+
+def test_plan_block_q_clamped_per_level(setup):
+    """min(block_q, next_pow2(nq_l)): the (2,3) level's 6 queries tile as
+    8, not 128, and the (4,5) level's 20 queries as 32."""
+    plan = msda.make_plan(setup[0], LEVELS, backend="jnp_gather", block_q=128)
+    assert plan.block_q_levels == (128, 128, 32, 8)
+    assert plan.tile_q == 128
+    plan = msda.make_plan(setup[0], LEVELS, backend="jnp_gather", block_q=16)
+    assert plan.block_q_levels == (16, 16, 16, 8)
+
+
+def test_plan_describe_reports_window_accounting(setup):
+    """The windowed kernel's staged-VMEM accounting shows up in describe:
+    dense window always (range_narrow set), compact window when FWP
+    compaction shrinks what is actually staged."""
+    plan = msda.make_plan(setup[0], LEVELS, backend="pallas_windowed")
+    assert plan.window_bytes is not None and plan.window_bytes > 0
+    assert plan.window_bytes_compact is None
+    assert "win=" in plan.describe()
+    cfg2 = dataclasses.replace(setup[0], fwp_mode="compact",
+                               fwp_capacity=0.6)
+    plan2 = msda.make_plan(cfg2, LEVELS, backend="pallas_windowed")
+    assert plan2.window_bytes_compact is not None
+    assert plan2.window_bytes_compact < plan2.window_bytes
+    assert "compact" in plan2.describe()
 
 
 def test_plan_legacy_impl_mapping(setup):
