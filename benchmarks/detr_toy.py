@@ -15,13 +15,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.detector import (
-    DetectorConfig, detection_loss, detector_apply, init_detector)
+    DetectorConfig, decoder_detection_loss, detection_loss, detector_apply,
+    init_detector)
 from repro.core.encoder import EncoderConfig
 from repro.core.msdeform_attn import MSDeformAttnConfig
 from repro.data.detection import eval_detection_ap, synth_detection_batch
+from repro.msda import MSDADecoderConfig
 from repro.optim.adamw import OptConfig, adamw_init, adamw_update
 
 CKPT = "results/toy_detector.pkl"
+CKPT_DEC = "results/toy_decoder_detector.pkl"
 
 
 def toy_config(**attn_kw) -> DetectorConfig:
@@ -60,6 +63,54 @@ def train_toy_detector(steps: int = 80, batch: int = 8, seed: int = 0,
     os.makedirs("results", exist_ok=True)
     host = jax.tree.map(np.asarray, params)
     with open(CKPT, "wb") as f:
+        pickle.dump(host, f)
+    return cfg, host
+
+
+def toy_decoder_config(n_layers: int = 3, n_queries: int = 24,
+                       **attn_kw) -> DetectorConfig:
+    """Toy detector with the DETR-style decoder head (shared ValueCache)."""
+    cfg = toy_config(**attn_kw)
+    return dataclasses.replace(
+        cfg, decoder=MSDADecoderConfig(n_layers=n_layers,
+                                       n_queries=n_queries, d_ffn=128))
+
+
+def train_toy_decoder_detector(steps: int = 400, batch: int = 8,
+                               seed: int = 0, log=print, force: bool = False):
+    """Train the decoder-head toy detector (greedy set-prediction loss).
+
+    The decoder's deformable cross-attention samples ONE shared value
+    cache per forward (build-once, sample-everywhere). Checkpoint cached
+    under results/ so the AP benchmark and EXPERIMENTS.md share it."""
+    cfg = toy_decoder_config()
+    if os.path.exists(CKPT_DEC) and not force:
+        with open(CKPT_DEC, "rb") as f:
+            return cfg, pickle.load(f)
+    key = jax.random.PRNGKey(seed)
+    params = init_detector(key, cfg)
+    opt = adamw_init(params)
+    opt_cfg = OptConfig(lr=2e-3, warmup_steps=10, total_steps=steps,
+                        weight_decay=0.0)
+
+    @jax.jit
+    def step_fn(params, opt, img, gc, gb, ga):
+        (loss, extras), grads = jax.value_and_grad(
+            decoder_detection_loss, has_aux=True)(params, cfg, img,
+                                                  gc, gb, ga)
+        params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, loss
+
+    for i in range(steps):
+        img, _, _, gt = synth_detection_batch(
+            jax.random.fold_in(key, i), batch, cfg.img_size, cfg.level_shapes)
+        params, opt, loss = step_fn(params, opt, img, gt["cls"], gt["box"],
+                                    gt["active"])
+        if i % 20 == 0:
+            log(f"[toy-decoder] step {i} loss {float(loss):.4f}")
+    os.makedirs("results", exist_ok=True)
+    host = jax.tree.map(np.asarray, params)
+    with open(CKPT_DEC, "wb") as f:
         pickle.dump(host, f)
     return cfg, host
 

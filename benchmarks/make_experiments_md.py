@@ -48,37 +48,43 @@ def main() -> None:
 
     parts = [HEADER]
 
-    parts.append("\n## §Dry-run\n")
-    parts.append(DRYRUN_PREAMBLE)
-    n_single = len([r for r in base_rows if r['mesh'] == 'single'])
-    n_multi = len([r for r in base_rows if r['mesh'] == 'multi'])
-    parts.append(f"\nAll cells compile on BOTH meshes: "
-                 f"{n_single} single-pod (16x16=256 chips) + {n_multi} "
-                 f"multi-pod (2x16x16=512 chips) compilations succeed "
-                 f"(0 sharding/lowering failures). Per-cell "
-                 f"memory_analysis/cost_analysis JSON: results/dryrun/.\n")
-    # exemplar cell: memory analysis + collective schedule
-    ex_path = "results/dryrun/deepseek-7b__train_4k__multi.json"
-    if os.path.exists(ex_path):
-        with open(ex_path) as f:
-            ex = json.load(f)
-        m = ex["memory"]
-        cc = ex.get("collectives_corrected", {})
-        parts.append(
-            f"\nExemplar (deepseek-7b / train_4k / multi-pod): "
-            f"arguments {m['argument_bytes']/2**30:.2f} GiB/chip, temps "
-            f"{m['temp_bytes']/2**30:.2f} GiB/chip, HLO FLOPs "
-            f"{ex['cost']['flops']:.3e}/chip; per-layer collective schedule "
-            f"(1-layer compile): "
-            + ", ".join(f"{k}×{v['count']} ({v['bytes']/2**30:.2f} GiB)"
-                        for k, v in cc.get("by_kind_1l", {}).items())
-            + ". Full schedules per cell in the JSONs.\n")
+    if base_rows:
+        parts.append("\n## §Dry-run\n")
+        parts.append(DRYRUN_PREAMBLE)
+        n_single = len([r for r in base_rows if r['mesh'] == 'single'])
+        n_multi = len([r for r in base_rows if r['mesh'] == 'multi'])
+        parts.append(f"\nAll cells compile on BOTH meshes: "
+                     f"{n_single} single-pod (16x16=256 chips) + {n_multi} "
+                     f"multi-pod (2x16x16=512 chips) compilations succeed "
+                     f"(0 sharding/lowering failures). Per-cell "
+                     f"memory_analysis/cost_analysis JSON: results/dryrun/.\n")
+        # exemplar cell: memory analysis + collective schedule
+        ex_path = "results/dryrun/deepseek-7b__train_4k__multi.json"
+        if os.path.exists(ex_path):
+            with open(ex_path) as f:
+                ex = json.load(f)
+            m = ex["memory"]
+            cc = ex.get("collectives_corrected", {})
+            parts.append(
+                f"\nExemplar (deepseek-7b / train_4k / multi-pod): "
+                f"arguments {m['argument_bytes']/2**30:.2f} GiB/chip, temps "
+                f"{m['temp_bytes']/2**30:.2f} GiB/chip, HLO FLOPs "
+                f"{ex['cost']['flops']:.3e}/chip; per-layer collective "
+                f"schedule (1-layer compile): "
+                + ", ".join(f"{k}×{v['count']} ({v['bytes']/2**30:.2f} GiB)"
+                            for k, v in cc.get("by_kind_1l", {}).items())
+                + ". Full schedules per cell in the JSONs.\n")
 
-    parts.append("\n## §Roofline — baseline (single-pod, per chip)\n")
-    parts.append(ROOFLINE_PREAMBLE)
-    parts.append(markdown_table(base_rows, "single"))
-    parts.append("\n\n### Baseline, multi-pod (2 pods / 512 chips)\n")
-    parts.append(markdown_table(base_rows, "multi"))
+        parts.append("\n## §Roofline — baseline (single-pod, per chip)\n")
+        parts.append(ROOFLINE_PREAMBLE)
+        parts.append(markdown_table(base_rows, "single"))
+        parts.append("\n\n### Baseline, multi-pod (2 pods / 512 chips)\n")
+        parts.append(markdown_table(base_rows, "multi"))
+    else:
+        parts.append("\n(Dry-run/roofline sections omitted: no "
+                     "results/dryrun data in this checkout — regenerate "
+                     "with launch/dryrun.py on a machine with the virtual "
+                     "device pool.)\n")
 
     if opt_rows:
         parts.append("\n\n## §Perf — optimized vs baseline\n")
@@ -160,6 +166,34 @@ def main() -> None:
             f"sampling GEOMETRY rather than training sharpness, lands on "
             f"the paper's number); MSGS compute saved "
             f"{red['msgs_compute_saved_pct']:.0f}% (paper: >50%).\n")
+    if "decoder_head" in bench:
+        r = bench["decoder_head"]
+        reuse = bench.get("fmap_reuse_vmem", {})
+        parts.append(
+            f"\n**Decoder head (shared ValueCache)** — DETR-style decoder "
+            f"({r['n_layers']} layers × {r['n_queries']} learned queries) "
+            f"over the encoder memory, every layer sampling ONE build-once "
+            f"FWP-compactable value table: toy synthetic-task AP "
+            f"**{r['ap']:.3f}** (with the full DEFA stack — PAP-topk, "
+            f"FWP-compact, range-narrowing, INT12 — {r['ap_defa']:.3f}; "
+            f"greedy set-matching loss, no Hungarian matcher, so not "
+            f"comparable to the dense per-pixel head's AP above). ")
+        if "decoder_reuse_ratio" in reuse:
+            parts.append(
+                f"Staged-bytes accounting for the paper-scale 6-layer "
+                f"decoder: rebuild-per-layer "
+                f"{reuse['decoder_rebuild_kb']:.0f} KB vs build-once "
+                f"{reuse['decoder_cache_once_kb']:.0f} KB = "
+                f"**{reuse['decoder_reuse_ratio']:.1f}x** reduction — by "
+                f"construction (rebuild restages the identical table per "
+                f"layer); the measured evidence is the "
+                f"`msda_decoder6_cached` vs `msda_decoder6_rebuild` micro "
+                f"wall-time rows plus the spy-tested exactly-once "
+                f"projection, and the compact build "
+                f"({reuse['decoder_cache_once_kb']:.0f} KB vs dense "
+                f"{reuse['decoder_cache_dense_kb']:.0f} KB) is the part "
+                f"that can regress (benchmarks/fmap_reuse.py).")
+        parts.append("\n")
     if "fig9_table1" in bench and "baseline" in bench.get("fig9_table1", {}):
         r = bench["fig9_table1"]
         parts.append(

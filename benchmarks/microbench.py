@@ -48,22 +48,74 @@ def _msda_backend_rows() -> list[tuple[str, float, str]]:
         rows.append((f"msda_{name}", _time(lambda: fn(params, q, refs, x)),
                      f"planned block, lanes={plan.lane_layout}x{plan.head_pack}"))
 
-    # FWP-compact windowed pair: the single-launch kernel samples the
-    # compacted table directly (no densify); the retired loop densifies.
+    # FWP-compact windowed: the single-launch kernel samples the
+    # compacted table directly (no densify).
     import dataclasses
     cfg_c = dataclasses.replace(cfg, fwp_mode="compact", fwp_k=1.0,
                                 fwp_capacity=0.6)
     plan_j = msda.make_plan(cfg_c, levels, backend="jnp_gather", block_q=64)
     _, state = msda.msda_attention(params, plan_j, q, refs, x)
-    for name in ("pallas_windowed", "pallas_windowed_loop"):
-        plan = msda.make_plan(cfg_c, levels, backend=name, block_q=64)
-        fn = jax.jit(lambda p_, q_, r_, x_, plan=plan:
-                     msda.msda_attention(p_, plan, q_, r_, x_,
-                                         state=state)[0])
-        rows.append((f"msda_{name}_fwpcompact",
-                     _time(lambda: fn(params, q, refs, x)),
-                     "planned block, FWP-compact table"))
+    plan = msda.make_plan(cfg_c, levels, backend="pallas_windowed",
+                          block_q=64)
+    fn = jax.jit(lambda p_, q_, r_, x_, plan=plan:
+                 msda.msda_attention(p_, plan, q_, r_, x_, state=state)[0])
+    rows.append(("msda_pallas_windowed_fwpcompact",
+                 _time(lambda: fn(params, q, refs, x)),
+                 "planned block, FWP-compact table"))
+    rows.extend(_decoder_rows(cfg_c, params, levels, x, state))
     return rows
+
+
+def _decoder_rows(attn_cfg, attn_params, levels, memory, state):
+    """Decoder micro rows: 6 layers sampling ONE shared value cache vs the
+    per-layer rebuild (project + compact + stage every layer) the
+    monolithic flow would pay."""
+    import dataclasses
+
+    from repro import msda
+
+    dcfg = msda.MSDADecoderConfig(n_layers=6, n_queries=64, d_ffn=128)
+    dparams = msda.init_decoder(jax.random.PRNGKey(21), dcfg, attn_cfg)
+    plan = msda.make_plan(attn_cfg, levels, backend="jnp_gather",
+                          n_queries=dcfg.n_queries,
+                          n_consumers=dcfg.n_layers)
+
+    def cross_stack(p_, m_, per_layer_rebuild: bool):
+        # identical 6-layer cross-attention stack; the ONLY difference is
+        # where the value cache is built (once vs inside the layer loop)
+        q = jnp.broadcast_to(p_["tgt_embed"][None],
+                             (m_.shape[0],) + p_["tgt_embed"].shape)
+        refs = jax.nn.sigmoid(q[..., :2])
+        cache = None if per_layer_rebuild \
+            else msda.build_value_cache(p_["value"], plan, m_, state)
+        out = q
+        for layer in p_["layers"]:
+            # optimization_barrier keeps XLA from CSE-merging the per-layer
+            # rebuilds back into one projection (which would silently turn
+            # the baseline into the cached variant)
+            c = msda.build_value_cache(
+                p_["value"], plan, jax.lax.optimization_barrier(m_), state) \
+                if per_layer_rebuild else cache
+            o, _ = msda.msda_attention_cached(
+                layer["cross"], plan, out, refs, c, update_fwp=False)
+            out = out + o
+        return out
+
+    cached = jax.jit(lambda p_, m_: cross_stack(p_, m_, False))
+    rebuild = jax.jit(lambda p_, m_: cross_stack(p_, m_, True))
+    full = jax.jit(lambda p_, m_: msda.decoder_apply(
+        p_, dcfg, plan, m_, state)[0])
+    return [
+        ("msda_decoder6_cached",
+         _time(lambda: cached(dparams, memory)),
+         "6 cross-attn layers, ONE shared ValueCache (build-once)"),
+        ("msda_decoder6_rebuild",
+         _time(lambda: rebuild(dparams, memory)),
+         "6 cross-attn layers rebuilding the value table per layer"),
+        ("msda_decoder6_full",
+         _time(lambda: full(dparams, memory)),
+         "full decoder (self-attn+cross+ffn+refine), shared cache"),
+    ]
 
 
 def run(log=print) -> list[tuple[str, float, str]]:

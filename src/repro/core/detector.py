@@ -3,19 +3,31 @@
 COCO is not available offline, so the paper's accuracy experiments (Fig. 6a)
 are reproduced on a synthetic rectangle-detection task (see
 repro/data/detection.py): a conv backbone builds a 4-level pyramid, the
-DEFA encoder refines it, and a per-query head predicts class + box. The
-pruning/quant AP deltas are measured on this task (EXPERIMENTS.md compares
-*relative* AP drops against the paper's COCO numbers)."""
+DEFA encoder refines it, and a head predicts class + box. Two heads exist:
+
+  * the seed's dense per-pixel head (one prediction per encoder query) —
+    the default, used by the dense-assignment accuracy experiments;
+  * a deformable-DETR-style DECODER head (``DetectorConfig.decoder``):
+    N_q learned queries cross-attend against the encoder memory through
+    ONE shared :class:`repro.msda.MSDAValueCache` — the paper's
+    feature-map-reusing decoder workload (build-once, sample-everywhere;
+    see repro/msda/decoder.py).
+
+The pruning/quant AP deltas are measured on this task (EXPERIMENTS.md
+compares *relative* AP drops against the paper's COCO numbers)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import nn
 from repro.core.encoder import EncoderConfig, init_encoder, encoder_apply, encoder_logical_axes
+from repro.msda.decoder import (MSDADecoderConfig, decoder_apply,
+                                decoder_logical_axes, init_decoder)
+from repro.msda.plan import make_plan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,6 +37,9 @@ class DetectorConfig:
     n_classes: int = 4                     # + background
     backbone_width: int = 32
     dtype: Any = jnp.float32
+    # None => the seed's dense per-pixel head; set => DETR-style decoder
+    # head over a shared value cache (build-once, sample-everywhere)
+    decoder: Optional[MSDADecoderConfig] = None
 
     @property
     def level_shapes(self) -> Tuple[Tuple[int, int], ...]:
@@ -39,7 +54,7 @@ class DetectorConfig:
 def init_detector(key: jax.Array, cfg: DetectorConfig) -> dict:
     keys = jax.random.split(key, 10)
     w, d = cfg.backbone_width, cfg.d_model
-    return {
+    params = {
         "stem": nn.conv_init(keys[0], 3, 3, w, cfg.dtype),         # stride 2
         "c1": nn.conv_init(keys[1], 3, w, w, cfg.dtype),           # stride 2 -> /4
         "c2": nn.conv_init(keys[2], 3, w, w, cfg.dtype),           # stride 2 -> /8
@@ -51,17 +66,39 @@ def init_detector(key: jax.Array, cfg: DetectorConfig) -> dict:
                                    d, cfg.n_classes + 1, cfg.dtype),
         "box_head": nn.linear_init(jax.random.fold_in(key, 102), d, 4, cfg.dtype),
     }
+    if cfg.decoder is not None:
+        params["decoder"] = init_decoder(jax.random.fold_in(key, 103),
+                                         cfg.decoder, cfg.encoder.attn)
+    return params
 
 
 def detector_logical_axes(cfg: DetectorConfig) -> dict:
     conv_ax = {"w": (None, None, None, None), "b": (None,)}
     lin_ax = {"w": ("embed", None), "b": (None,)}
-    return {
+    axes = {
         "stem": conv_ax, "c1": conv_ax, "c2": conv_ax, "c3": conv_ax, "c4": conv_ax,
         "proj": [{"w": (None, "embed"), "b": (None,)} for _ in range(4)],
         "encoder": encoder_logical_axes(cfg.encoder),
         "cls_head": lin_ax, "box_head": lin_ax,
     }
+    if cfg.decoder is not None:
+        axes["decoder"] = decoder_logical_axes(cfg.decoder)
+    return axes
+
+
+def decoder_plan(cfg: DetectorConfig, backend: Optional[str] = None):
+    """The decode-shaped MSDAPlan for this detector's decoder head.
+
+    Single source of the windowed-backend fallback: the windowed kernel
+    has no decode-shaped launch, so an explicit (or config-level)
+    ``pallas_windowed`` request degrades to ``auto`` for the decoder."""
+    assert cfg.decoder is not None, "decoder head required"
+    dec_backend = backend or getattr(cfg.encoder.attn, "backend", None)
+    if dec_backend is not None and dec_backend.startswith("pallas_windowed"):
+        dec_backend = "auto"
+    return make_plan(cfg.encoder.attn, cfg.level_shapes, backend=dec_backend,
+                     n_queries=cfg.decoder.n_queries,
+                     n_consumers=cfg.decoder.n_layers)
 
 
 def _pyramid(params, cfg: DetectorConfig, images: jnp.ndarray):
@@ -77,10 +114,14 @@ def _pyramid(params, cfg: DetectorConfig, images: jnp.ndarray):
 def detector_apply(params: dict, cfg: DetectorConfig, images: jnp.ndarray,
                    *, collect_stats: bool = False,
                    backend: str | None = None):
-    """Returns (cls_logits (B,N_in,C+1), boxes (B,N_in,4 cxcywh), aux).
+    """Returns (cls_logits (B,Nq,C+1), boxes (B,Nq,4 cxcywh), aux).
 
-    ``backend`` overrides the encoder's MSDA backend ("auto" lets the
-    plan pick by VMEM fit; see repro/msda/plan.py)."""
+    Nq is N_in (per-pixel head) or ``cfg.decoder.n_queries`` (decoder
+    head). ``backend`` overrides the MSDA backend ("auto" lets the plan
+    pick by VMEM fit; see repro/msda/plan.py). With the decoder head,
+    ``aux["decoder_blocks"]`` carries the per-layer decoder stats and
+    the decoder samples ONE shared value cache built from the encoder
+    memory under the encoder chain's final FWP compaction."""
     feats = _pyramid(params, cfg, images)
     flat = []
     for f, proj in zip(feats, params["proj"]):
@@ -92,17 +133,34 @@ def detector_apply(params: dict, cfg: DetectorConfig, images: jnp.ndarray,
     pos = jnp.concatenate(
         [nn.sine_pos_embed_2d(h, w, cfg.d_model) for h, w in level_shapes], axis=0)
     refs = nn.reference_points_for_levels(level_shapes)
-    enc, aux = encoder_apply(params["encoder"], cfg.encoder, x_flat, pos, refs,
-                             level_shapes, collect_stats=collect_stats,
-                             backend=backend)
-    cls_logits = nn.linear(params["cls_head"], enc)
-    boxes = jax.nn.sigmoid(nn.linear(params["box_head"], enc))
+    enc, aux, state = encoder_apply(
+        params["encoder"], cfg.encoder, x_flat, pos, refs, level_shapes,
+        collect_stats=collect_stats, backend=backend, return_state=True)
+
+    if cfg.decoder is None:
+        cls_logits = nn.linear(params["cls_head"], enc)
+        boxes = jax.nn.sigmoid(nn.linear(params["box_head"], enc))
+        return cls_logits, boxes, aux
+
+    # ---- decoder head: build-once shared cache, N_q learned queries ------
+    plan = decoder_plan(cfg, backend)
+    hs, dec_refs, dstate = decoder_apply(params["decoder"], cfg.decoder,
+                                         plan, enc, state,
+                                         collect_stats=collect_stats)
+    cls_logits = nn.linear(params["cls_head"], hs)
+    raw = nn.linear(params["box_head"], hs)
+    # centers refine the decoder's reference points (deformable-DETR)
+    cxy = jax.nn.sigmoid(raw[..., :2] + nn.inverse_sigmoid(dec_refs))
+    wh = jax.nn.sigmoid(raw[..., 2:])
+    boxes = jnp.concatenate([cxy, wh], axis=-1)
+    aux = dict(aux)
+    aux["decoder_blocks"] = list(dstate.block_stats)
     return cls_logits, boxes, aux
 
 
 def detection_loss(params: dict, cfg: DetectorConfig, images: jnp.ndarray,
                    tgt_cls: jnp.ndarray, tgt_box: jnp.ndarray):
-    """Dense per-query assignment loss.
+    """Dense per-query assignment loss (per-pixel head).
 
     tgt_cls: (B, N_in) int — class index, n_classes == background.
     tgt_box: (B, N_in, 4) — cxcywh of owning box (zeros for background)."""
@@ -115,4 +173,46 @@ def detection_loss(params: dict, cfg: DetectorConfig, images: jnp.ndarray,
     cls_loss = jnp.sum(ce * w) / jnp.sum(w)
     l1 = jnp.sum(jnp.abs(boxes - tgt_box), axis=-1)
     box_loss = jnp.sum(l1 * pos) / jnp.maximum(jnp.sum(pos), 1.0)
+    return cls_loss + box_loss, {"cls_loss": cls_loss, "box_loss": box_loss}
+
+
+def decoder_detection_loss(params: dict, cfg: DetectorConfig,
+                           images: jnp.ndarray, gt_cls: jnp.ndarray,
+                           gt_box: jnp.ndarray, gt_active: jnp.ndarray):
+    """Set-prediction loss for the decoder head (greedy matching).
+
+    A Hungarian matcher is overkill for the toy task (≤3 boxes/image):
+    each ACTIVE ground-truth box greedily claims the query whose predicted
+    box is closest in L1 (assignment under ``stop_gradient``); matched
+    queries learn class + box, the rest learn background. The class
+    targets are derived query-side (no duplicate-index scatter), so an
+    inactive GT slot can never claim a query and a collision between two
+    active GTs resolves deterministically to the lowest GT index.
+
+    gt_cls (B, M) int, gt_box (B, M, 4) cxcywh, gt_active (B, M) bool."""
+    assert cfg.decoder is not None, "decoder head required"
+    cls_logits, boxes, _ = detector_apply(params, cfg, images)
+    b, nq, _ = cls_logits.shape
+
+    cost = jnp.sum(jnp.abs(boxes[:, None] - gt_box[:, :, None]), -1)  # (B,M,Nq)
+    owner = jax.lax.stop_gradient(jnp.argmin(cost, axis=-1))          # (B,M)
+
+    # query-side targets: query q is positive iff some ACTIVE gt owns it
+    claimed = (owner[:, :, None] == jnp.arange(nq)[None, None]) \
+        & gt_active[:, :, None]                                       # (B,M,Nq)
+    matched = jnp.any(claimed, axis=1)                                # (B,Nq)
+    first_m = jnp.argmax(claimed, axis=1)                             # (B,Nq)
+    cls_of = jnp.take_along_axis(gt_cls.astype(jnp.int32), first_m, axis=1)
+    tgt_cls = jnp.where(matched, cls_of, cfg.n_classes)
+
+    logp = jax.nn.log_softmax(cls_logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, tgt_cls[..., None], axis=-1)[..., 0]
+    pos = (tgt_cls < cfg.n_classes).astype(jnp.float32)
+    w = jnp.where(pos > 0, 5.0, 1.0)
+    cls_loss = jnp.sum(ce * w) / jnp.sum(w)
+
+    matched_box = jnp.take_along_axis(boxes, owner[..., None], axis=1)  # (B,M,4)
+    l1 = jnp.sum(jnp.abs(matched_box - gt_box), axis=-1)
+    act = gt_active.astype(jnp.float32)
+    box_loss = jnp.sum(l1 * act) / jnp.maximum(jnp.sum(act), 1.0)
     return cls_loss + box_loss, {"cls_loss": cls_loss, "box_loss": box_loss}

@@ -69,8 +69,15 @@ def encoder_apply(
     *,
     collect_stats: bool = False,
     backend: Optional[str] = None,         # msda backend override (or "auto")
+    return_state: bool = False,
 ):
-    """Returns (features (B,N_in,D), aux with per-block DEFA stats)."""
+    """Returns (features (B,N_in,D), aux with per-block DEFA stats).
+
+    ``aux["blocks"]`` has one aligned entry per block (``None`` when that
+    block didn't collect). With ``return_state=True`` the final
+    :class:`MSDAPipelineState` is returned as a third value — the decoder
+    consumes it so its shared value cache inherits the LAST encoder
+    block's FWP compaction."""
     b = x_flat.shape[0]
     if ref_points.ndim == 2:
         ref_points = jnp.broadcast_to(ref_points[None], (b,) + ref_points.shape)
@@ -87,4 +94,7 @@ def encoder_apply(
         h = nn.layer_norm(blk["ln1"], h + attn_out)
         ff = nn.linear(blk["ffn2"], jax.nn.relu(nn.linear(blk["ffn1"], h)))
         h = nn.layer_norm(blk["ln2"], h + ff)
-    return h, {"blocks": list(state.block_stats)}
+    aux = {"blocks": list(state.block_stats)}
+    if return_state:
+        return h, aux, state
+    return h, aux

@@ -38,6 +38,12 @@ def conv2d(p, x, stride=1, padding="SAME"):
     return y + p["b"][None, :, None, None]
 
 
+def inverse_sigmoid(x, eps: float = 1e-5):
+    """logit(x) with clamping — the reference-point refinement inverse."""
+    x = jnp.clip(x, eps, 1.0 - eps)
+    return jnp.log(x) - jnp.log1p(-x)
+
+
 def sine_pos_embed_2d(h: int, w: int, d: int, temperature: float = 10000.0):
     """(H*W, D) 2-D sine position embedding (DETR-style)."""
     assert d % 4 == 0

@@ -5,8 +5,6 @@ window of the fmap around a query tile's reference points can ever be
 touched; neighbouring tiles' windows overlap and the overlap is reused
 on-chip (paper Fig. 4).
 
-Two generations of the idea live here:
-
 ``msgs_windowed_msp_pallas`` — the **multi-scale-parallel** kernel (paper
 C5 at the launch level): ONE ``pallas_call`` whose grid spans
 
@@ -31,12 +29,11 @@ the densified (B, N_in, H, Dh) table is never built. Dynamic window
 starts ride in as scalar-prefetch arguments so the BlockSpec index maps
 can DMA the right slab.
 
-``msgs_windowed_pallas`` — the retired per-(query-level x sampled-level)
-single-launch-per-pair kernel, kept one release for the
-``pallas_windowed_loop`` backend so the parity suite can diff the two
-numerically. It receives fmap rows [row0(t) − R, row0(t) + tile_rows + R]
-per query tile t via an element-offset BlockSpec (``pl.Element`` on
-jax >= 0.5, ``indexing_mode=pl.Unblocked`` before).
+(The first generation — ``msgs_windowed_pallas``, one launch per
+(query-level x sampled-level) pair — served its one release as the
+``pallas_windowed_loop`` numeric diff target and is deleted; the parity
+suite now diffs the multi-scale-parallel kernel against the ``jnp_gather``
+oracle directly.)
 """
 from __future__ import annotations
 
@@ -383,105 +380,3 @@ def msgs_windowed_msp_pallas(
     )(*scalars, *inputs)
     return unpack_queries(geo, out)
 
-
-# ==========================================================================
-# Retired per-(query-level x sampled-level) kernel (pallas_windowed_loop)
-# ==========================================================================
-
-def _make_kernel(tile_q: int, w_query: int, halo: int, window_rows: int,
-                 h_level: int, rows_scale: float):
-    def kernel(x_ref, y_ref, p_ref, v_ref, o_ref):
-        t = pl.program_id(0)
-        # first reference row of this query tile (query-level rows), scaled
-        # to the sampled level
-        q_row0 = (t * tile_q) // w_query
-        row0 = jnp.clip((q_row0 * rows_scale).astype(jnp.int32) - halo,
-                        0, max(0, h_level - window_rows))
-        w_fmap = v_ref.shape[1]           # sampled level's width (!= w_query
-        #                                   when query and fmap levels differ)
-        v = v_ref[...].reshape(window_rows * w_fmap, v_ref.shape[2])
-        x = x_ref[...]                    # (TQ, K) absolute pixel coords
-        y = y_ref[...]
-        probs = p_ref[...]
-
-        x0 = jnp.floor(x)
-        y0 = jnp.floor(y)
-        t1 = (x - x0)[..., None]
-        t0 = (y - y0)[..., None]
-        x0i = x0.astype(jnp.int32)
-        y0i = y0.astype(jnp.int32)
-
-        def corner(dx, dy):
-            cx = x0i + dx
-            cy = y0i + dy
-            valid = ((cx >= 0) & (cx < w_fmap) & (cy >= 0) & (cy < h_level)
-                     & (cy >= row0) & (cy < row0 + window_rows))
-            ly = jnp.clip(cy - row0, 0, window_rows - 1)
-            idx = ly * w_fmap + jnp.clip(cx, 0, w_fmap - 1)
-            g = jnp.take(v, idx.reshape(-1), axis=0).reshape(idx.shape + (v.shape[-1],))
-            return g * valid[..., None]
-
-        n0 = corner(0, 0)
-        n1 = corner(1, 0)
-        n2 = corner(0, 1)
-        n3 = corner(1, 1)
-        s = n0 + (n2 - n0) * t0 + ((n1 - n0) + (n3 - n2 - n1 + n0) * t0) * t1
-        o_ref[...] = jnp.sum(s * probs[..., None], axis=1)
-    return kernel
-
-
-@functools.partial(jax.jit, static_argnames=(
-    "query_level_width", "halo", "block_q", "interpret"))
-def msgs_windowed_pallas(
-    v2d: jnp.ndarray,       # (Hl, Wl, Dh) — the sampled level
-    x_px: jnp.ndarray,      # (Nq, K) absolute pixel x (|offset| ≤ halo)
-    y_px: jnp.ndarray,      # (Nq, K)
-    probs: jnp.ndarray,     # (Nq, K)
-    *,
-    query_level_width: int,          # Wq of the level the queries live on
-    halo: int,                        # R: the range-narrowing bound (pixels)
-    block_q: int = 128,
-    interpret: bool = False,
-) -> jnp.ndarray:
-    hl, wl, dh = v2d.shape
-    nq, k = x_px.shape
-    tq = min(block_q, nq)
-    pad = (-nq) % tq
-    if pad:
-        x_px = jnp.pad(x_px, ((0, pad), (0, 0)))
-        y_px = jnp.pad(y_px, ((0, pad), (0, 0)))
-        probs = jnp.pad(probs, ((0, pad), (0, 0)))
-    nq_p = nq + pad
-
-    # rows of the sampled level per query row (cross-level scaling)
-    h_query = max(1, (nq + query_level_width - 1) // query_level_width)
-    rows_scale = hl / h_query
-    tile_rows = math.ceil(tq / query_level_width * rows_scale) + 1
-    window_rows = min(hl, tile_rows + 2 * halo + 2)
-
-    grid = (nq_p // tq,)
-    tile_q = tq
-
-    def v_index(t):
-        q_row0 = (t * tile_q) // query_level_width
-        row0 = jnp.clip((q_row0 * rows_scale).astype(jnp.int32) - halo,
-                        0, max(0, hl - window_rows))
-        return (row0, 0, 0)
-
-    if hasattr(pl, "Element"):           # jax >= 0.5 spelling
-        v_spec = pl.BlockSpec((pl.Element(window_rows), wl, dh), v_index)
-    else:                                # 0.4.x spelling
-        v_spec = pl.BlockSpec((window_rows, wl, dh), v_index,
-                              indexing_mode=pl.Unblocked())
-    pt_spec = pl.BlockSpec((tq, k), lambda t: (t, 0))
-    out_spec = pl.BlockSpec((tq, dh), lambda t: (t, 0))
-
-    kernel = _make_kernel(tq, query_level_width, halo, window_rows, hl, rows_scale)
-    out = pl.pallas_call(
-        kernel, grid=grid,
-        in_specs=[pt_spec, pt_spec, pt_spec, v_spec],
-        out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((nq_p, dh), v2d.dtype),
-        interpret=interpret, name="msgs_windowed",
-    )(x_px, y_px, probs, v2d)
-    return out[:nq] if pad else out

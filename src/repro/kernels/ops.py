@@ -12,8 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.msgs_fused import msgs_fused_pallas, msgs_fused_packed_pallas
-from repro.kernels.msgs_windowed import (msgs_windowed_msp_pallas,
-                                         msgs_windowed_pallas)
+from repro.kernels.msgs_windowed import msgs_windowed_msp_pallas
 from repro.kernels.matmul import matmul_pallas
 
 
@@ -64,16 +63,6 @@ def msgs_windowed_msp(v, x_px, y_px, lvl_of_pt, probs,
         head_pack=head_pack,
         caps=None if caps is None else tuple(int(c) for c in caps),
         interpret=interp)
-
-
-def msgs_windowed(v2d, x_px, y_px, probs, *, query_level_width: int,
-                  halo: int, block_q: int = 128,
-                  interpret: Optional[bool] = None):
-    """Windowed (range-narrowed, fmap-reusing) grid-sample + aggregation."""
-    interp = _interpret_default() if interpret is None else interpret
-    return msgs_windowed_pallas(v2d, x_px, y_px, probs,
-                                query_level_width=query_level_width,
-                                halo=halo, block_q=block_q, interpret=interp)
 
 
 def matmul(x, w, w_scale=None, *, bm: int = 128, bn: int = 128, bk: int = 128,

@@ -87,21 +87,6 @@ def msgs_unfused_ref(v, x_px, y_px, start, wl, hl, probs, remap=None):
     return jnp.sum(sampled * probs[..., None], axis=3)
 
 
-def msgs_windowed_ref(v2d, x_px, y_px, probs):
-    """Single-level windowed oracle.
-
-    v2d: (Hl, Wl, Dh); x/y: (Nq, K) absolute px; probs: (Nq, K) -> (Nq, Dh)."""
-    hl, wl, dh = v2d.shape
-    ones = jnp.ones_like(x_px, dtype=jnp.int32)
-    out = msgs_fused_ref(
-        v2d.reshape(1, hl * wl, 1, dh),
-        x_px[None, :, None, :], y_px[None, :, None, :],
-        jnp.zeros_like(ones)[None, :, None, :],
-        (ones * wl)[None, :, None, :], (ones * hl)[None, :, None, :],
-        probs[None, :, None, :])
-    return out[0, :, 0, :]
-
-
 def matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
                w_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """x (M,K) @ w (K,N); if w is int8, dequantize with per-column w_scale."""

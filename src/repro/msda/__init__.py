@@ -1,43 +1,63 @@
 """repro.msda — the layered MSDeformAttn subsystem.
 
-Three layers, one seam for every future backend:
+Four layers, one seam for every future backend:
 
   * :mod:`repro.msda.plan` — static :class:`MSDAPlan` resolved once per
-    (config, level_shapes): backend choice, query tiling, VMEM fit,
-    TPU lane layout (pad Dh -> 128 vs. pack 128/Dh heads per lane group);
+    (config, level_shapes): backend choice, query tiling (raster AND
+    decode-shaped), VMEM fit, TPU lane layout (pad Dh -> 128 vs. pack
+    128/Dh heads per lane group);
+  * :mod:`repro.msda.cache` — :class:`MSDAValueCache`, the projected,
+    head-laid-out, optionally FWP-compacted value table built ONCE per
+    memory (:func:`build_value_cache`) and sampled by every consumer —
+    build-once, sample-everywhere;
   * :mod:`repro.msda.backends` — named-backend registry (``jnp_gather``,
     ``pallas_fused``, ``pallas_windowed`` — the single-launch
-    multi-scale-parallel windowed kernel — and the retired
-    ``pallas_windowed_loop`` diff target, plus the ``auto`` policy) with
+    multi-scale-parallel windowed kernel — plus the ``auto`` policy) with
     a uniform ``(plan, v, pts, probs) -> out`` contract;
-  * :mod:`repro.msda.pipeline` / :mod:`repro.msda.attention` — the
-    planned block execution threading explicit
-    :class:`MSDAPipelineState` (FWP mask chain + stats) across blocks.
+  * :mod:`repro.msda.pipeline` / :mod:`repro.msda.attention` /
+    :mod:`repro.msda.decoder` — the planned block execution threading an
+    explicit :class:`MSDAPipelineState` (FWP mask chain + stats + shared
+    cache) across encoder blocks and decoder layers.
 
 Quickstart::
 
     from repro import msda
     plan = msda.make_plan(cfg, level_shapes, backend="auto")
     state = msda.MSDAPipelineState.initial()
+    # encoder block (memory changes every block -> build + sample):
     out, state = msda.msda_attention(params, plan, q, refs, x, state=state)
+    # decoder (one memory, many layers -> build once, sample everywhere):
+    cache = msda.build_value_cache(params_value, plan_dec, memory, state)
+    out, st = msda.msda_attention_cached(layer_params, plan_dec, q, refs,
+                                         cache, update_fwp=False)
 """
-from repro.msda.attention import msda_attention, project_values
+from repro.msda.attention import (msda_attention, msda_attention_cached,
+                                  project_values)
 from repro.msda.backends import (available_backends, get_backend,
                                  register_backend)
+from repro.msda.cache import MSDAValueCache, build_value_cache
+from repro.msda.decoder import (MSDADecoderConfig, decoder_apply,
+                                decoder_logical_axes, init_decoder)
 from repro.msda.pipeline import MSDAPipelineState
-from repro.msda.plan import (DEFAULT_VMEM_BUDGET, MSDAPlan,
+from repro.msda.plan import (DEFAULT_VMEM_BUDGET,
+                             DEFAULT_WINDOW_STAGING_BUDGET, MSDAPlan,
                              block_q_for_levels, lane_layout, make_plan,
-                             next_pow2, plan_for, windowed_eligible)
+                             next_pow2, plan_for, window_staging_budget,
+                             windowed_eligible)
 from repro.msda.sampling import (SamplingPoints, corner_data,
                                  flat_gather_heads, generate_points,
                                  level_meta, select_points)
 
 __all__ = [
-    "msda_attention", "project_values",
+    "msda_attention", "msda_attention_cached", "project_values",
     "available_backends", "get_backend", "register_backend",
+    "MSDAValueCache", "build_value_cache",
+    "MSDADecoderConfig", "decoder_apply", "decoder_logical_axes",
+    "init_decoder",
     "MSDAPipelineState",
-    "DEFAULT_VMEM_BUDGET", "MSDAPlan", "block_q_for_levels", "lane_layout",
-    "make_plan", "next_pow2", "plan_for", "windowed_eligible",
+    "DEFAULT_VMEM_BUDGET", "DEFAULT_WINDOW_STAGING_BUDGET", "MSDAPlan",
+    "block_q_for_levels", "lane_layout", "make_plan", "next_pow2",
+    "plan_for", "window_staging_budget", "windowed_eligible",
     "SamplingPoints", "corner_data", "flat_gather_heads",
     "generate_points", "level_meta", "select_points",
 ]

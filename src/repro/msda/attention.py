@@ -1,10 +1,19 @@
 """Planned MSDA execution — the algorithm level of the DEFA dataflow.
 
-``msda_attention`` runs the five paper steps (PAP'd probabilities, masked
-sampling-point generation, FWP-pruned value projection, backend-dispatched
-fused MSGS+aggregation, frequency counting for the next block) against a
-static :class:`~repro.msda.plan.MSDAPlan`. The gather+aggregate step is a
-registry lookup — backends never leak into this file.
+Two entry points, one seam:
+
+  * :func:`msda_attention_cached` — the sample-everywhere half: PAP'd
+    probabilities, masked sampling-point generation, backend-dispatched
+    fused MSGS+aggregation, and (optionally) FWP frequency counting, all
+    against a prebuilt :class:`~repro.msda.cache.MSDAValueCache`.
+  * :func:`msda_attention` — the legacy monolithic block, now a thin
+    build-cache-then-sample wrapper: it builds a fresh cache from
+    ``x_flat`` and immediately samples it. Encoder blocks use this (their
+    memory changes every block); decoder layers call the cached form
+    against ONE shared cache (see ``repro/msda/decoder.py``).
+
+The gather+aggregate step is a registry lookup — backends never leak into
+this file.
 """
 from __future__ import annotations
 
@@ -15,81 +24,57 @@ import jax.numpy as jnp
 from repro.core import fwp as fwp_lib
 from repro.core.quant import maybe_fake_quant
 from repro.msda import backends as backend_registry
+from repro.msda.cache import MSDAValueCache, build_value_cache, project_values
 from repro.msda.pipeline import MSDAPipelineState
 from repro.msda.plan import MSDAPlan
-from repro.msda.sampling import SamplingPoints, corner_data, generate_points
+from repro.msda.sampling import corner_data, generate_points
+
+__all__ = ["msda_attention", "msda_attention_cached", "project_values"]
 
 
-def project_values(params: dict, cfg, x_flat: jnp.ndarray,
-                   fwp_state: Optional[fwp_lib.FWPState]):
-    """FWP-pruned value projection V = X W^V.
-
-    Returns (v (B, N_rows, H, Dh), pix2slot or None, n_rows)."""
-    b = x_flat.shape[0]
-    h, dh = cfg.n_heads, cfg.head_dim
-    n_in = x_flat.shape[1]
-    wq = lambda w: maybe_fake_quant(w, cfg.weight_bits)
-    if fwp_state is not None and cfg.fwp_mode == "compact":
-        cap = fwp_state.keep_idx.shape[1]
-        x_kept = jnp.take_along_axis(x_flat, fwp_state.keep_idx[..., None], axis=1)
-        v = jnp.einsum("bnd,dhk->bnhk", x_kept, wq(params["value_w"])) \
-            + params["value_b"]
-        v = jnp.concatenate([v, jnp.zeros((b, 1, h, dh), v.dtype)], axis=1)
-        pix2slot = fwp_state.pix2slot                    # (B, N_in)
-        n_rows = cap + 1
-    elif fwp_state is not None and cfg.fwp_mode == "mask":
-        xm = x_flat * fwp_state.keep_mask[..., None].astype(x_flat.dtype)
-        v = jnp.einsum("bnd,dhk->bnhk", xm, wq(params["value_w"])) \
-            + params["value_b"]
-        # masked pixels must contribute EXACT zero (bias would leak):
-        v = v * fwp_state.keep_mask[..., None, None].astype(v.dtype)
-        pix2slot = None
-        n_rows = n_in
-    else:
-        v = jnp.einsum("bnd,dhk->bnhk", x_flat, wq(params["value_w"])) \
-            + params["value_b"]
-        pix2slot = None
-        n_rows = n_in
-    return maybe_fake_quant(v, cfg.act_bits), pix2slot, n_rows
-
-
-def msda_attention(
+def msda_attention_cached(
     params: dict,
     plan: MSDAPlan,
     query: jnp.ndarray,                 # (B, Nq, D)
     ref_points: jnp.ndarray,            # (B, Nq, 2) normalized
-    x_flat: jnp.ndarray,                # (B, N_in, D) raw fmap features
+    cache: MSDAValueCache,              # prebuilt shared value table
     state: Optional[MSDAPipelineState] = None,
     *,
     collect_stats: bool = False,
+    update_fwp: bool = True,
 ) -> Tuple[jnp.ndarray, MSDAPipelineState]:
-    """One planned MSDA block. Returns (out (B, Nq, D), next state)."""
+    """One planned MSDA sampling pass against a prebuilt value cache.
+
+    ``params`` needs the per-layer sampling weights (``attn_w``/``attn_b``,
+    ``offs_w``/``offs_b``, ``out_w``/``out_b``) but NOT the value
+    projection — that lives in the cache. ``update_fwp=False`` (decoder
+    layers, any repeated sampling of one fixed memory) skips the frequency
+    count and carries the existing FWP chain link through unchanged: the
+    cache's compaction is fixed, so re-deriving a mask per layer would be
+    wasted work. Returns (out (B, Nq, D), next state)."""
     cfg = plan.cfg
     b, nq, _ = query.shape
-    assert x_flat.shape[1] == plan.n_in, (x_flat.shape, plan.n_in)
     if state is None:
         state = MSDAPipelineState.initial()
     wq = lambda w: maybe_fake_quant(w, cfg.weight_bits)
 
     # ---- 1+2. PAP'd probabilities + masked point generation --------------
-    v, pix2slot, n_rows = project_values(params, cfg, x_flat, state.fwp)
     # compact-table geometry rides along with the point geometry: the
     # windowed kernel locates slot windows by searchsorting keep_idx
-    keep_idx = state.fwp.keep_idx if pix2slot is not None else None
     sel, pts = generate_points(params, cfg, query, ref_points,
-                               plan.level_shapes, pix2slot=pix2slot,
-                               keep_idx=keep_idx)
+                               plan.level_shapes, pix2slot=cache.pix2slot,
+                               keep_idx=cache.keep_idx)
 
     # ---- 3. backend-dispatched fused MSGS + aggregation ------------------
     backend = backend_registry.get_backend(plan.backend)
-    out_h = backend(plan, v, pts, sel.probs)             # (B, Nq, H, Dh)
+    out_h = backend(plan, cache.v, pts, sel.probs)       # (B, Nq, H, Dh)
 
     out = jnp.einsum("bnhk,hkd->bnd", out_h, wq(params["out_w"])) \
         + params["out_b"]
 
     # ---- 4. FWP frequency counting for the NEXT block --------------------
-    need_freq = cfg.fwp_mode != "off"
-    next_fwp = None
+    need_freq = update_fwp and cfg.fwp_mode != "off"
+    next_fwp = None if update_fwp else state.fwp
     stats = None
     if need_freq or collect_stats:
         pt_alive = (sel.probs > 0).astype(jnp.float32)   # pruned pts don't count
@@ -108,8 +93,32 @@ def msda_attention(
                 "freq": freq,
                 "pap_keep_frac": sel.keep_frac,
                 "point_alive_frac": jnp.mean(pt_alive),
-                "value_rows": n_rows,
+                "value_rows": cache.n_rows,
+                "cache_table_bytes": cache.table_bytes,
             }
-            if next_fwp is not None:
+            if update_fwp and next_fwp is not None:
                 stats["fwp_keep_frac"] = 1.0 - fwp_lib.fwp_sparsity(next_fwp)
     return out, state.advance(next_fwp, stats)
+
+
+def msda_attention(
+    params: dict,
+    plan: MSDAPlan,
+    query: jnp.ndarray,                 # (B, Nq, D)
+    ref_points: jnp.ndarray,            # (B, Nq, 2) normalized
+    x_flat: jnp.ndarray,                # (B, N_in, D) raw fmap features
+    state: Optional[MSDAPipelineState] = None,
+    *,
+    collect_stats: bool = False,
+) -> Tuple[jnp.ndarray, MSDAPipelineState]:
+    """One planned MSDA block: build the value cache, then sample it.
+
+    Thin wrapper over :func:`~repro.msda.cache.build_value_cache` +
+    :func:`msda_attention_cached` for callers whose memory changes every
+    call (encoder blocks). Returns (out (B, Nq, D), next state)."""
+    assert x_flat.shape[1] == plan.n_in, (x_flat.shape, plan.n_in)
+    if state is None:
+        state = MSDAPipelineState.initial()
+    cache = build_value_cache(params, plan, x_flat, state)
+    return msda_attention_cached(params, plan, query, ref_points, cache,
+                                 state, collect_stats=collect_stats)

@@ -26,19 +26,18 @@ once, in ``plan.make_plan`` — never inside the hot path.
                                FWP-compacted table directly through the
                                pix2slot indirection — never densifies.
                                Needs raster-ordered encoder queries
-                               (Nq == N_in) and range-narrowing.
-  * ``pallas_windowed_loop`` — the retired L² launch loop (one kernel per
-                               query-level x sampled-level pair, vmapped
-                               over B·H). Kept one release as the numeric
-                               diff target for the single-launch kernel;
-                               under FWP-compact it densifies the table.
+                               (Nq == N_in) and range-narrowing — no
+                               decode-shaped launch; decoder workloads
+                               plan ``jnp_gather`` or ``pallas_fused``.
+
+(``pallas_windowed_loop``, the L² launch loop kept one release as the
+single-launch kernel's numeric diff target, is retired: the parity matrix
+now diffs ``pallas_windowed`` against the ``jnp_gather`` oracle directly.)
 """
 from __future__ import annotations
 
-import math
 from typing import Callable, Dict, List
 
-import jax
 import jax.numpy as jnp
 
 from repro.msda.sampling import SamplingPoints, corner_data, flat_gather_heads
@@ -152,61 +151,3 @@ def pallas_windowed(plan, v: jnp.ndarray, pts: SamplingPoints,
         probs, remap=pts.pix2slot, keep_idx=pts.keep_idx,
         level_shapes=plan.level_shapes, ranges=cfg.range_narrow,
         tile_q=plan.tile_q, head_pack=g, caps=caps)
-
-
-# --------------------------------------------------------------------------
-# pallas_windowed_loop — retired per-(query x sampled level) launch loop
-# --------------------------------------------------------------------------
-
-@register_backend("pallas_windowed_loop")
-def pallas_windowed_loop(plan, v: jnp.ndarray, pts: SamplingPoints,
-                         probs: jnp.ndarray) -> jnp.ndarray:
-    """RETIRED: L² Python loop of kernel launches, vmapped over B·H.
-
-    Kept one release as the numeric diff target for ``pallas_windowed``.
-    Under FWP-compact it DENSIFIES the value table back to
-    (B, N_in, H, Dh) — throwing away the compact footprint — which is
-    exactly what the single-launch kernel exists to avoid."""
-    from repro.kernels import ops as kernel_ops
-    cfg = plan.cfg
-    b, nq, h, k = probs.shape
-    _require_raster(plan, nq)
-
-    if pts.pix2slot is not None:
-        # Densify the FWP-compacted table: pruned pixels hit the zero
-        # sentinel row, reproducing mask semantics inside the window.
-        idx = pts.pix2slot[:, :, None, None]
-        idx = jnp.broadcast_to(idx, (b, plan.n_in) + v.shape[2:])
-        v = jnp.take_along_axis(v, idx, axis=1)
-
-    from repro.core.fwp import level_starts
-    starts, _ = level_starts(plan.level_shapes)
-
-    out_levels = []          # per-query-level accs; levels tile [0, Nq)
-    for ql, (hq, wq_) in enumerate(plan.level_shapes):
-        q_lo, nq_l = int(starts[ql]), hq * wq_
-        block_q = plan.block_q_levels[ql]
-        xq = pts.x_px[:, q_lo:q_lo + nq_l]
-        yq = pts.y_px[:, q_lo:q_lo + nq_l]
-        lvl = pts.lvl_of_pt[:, q_lo:q_lo + nq_l]
-        pq = probs[:, q_lo:q_lo + nq_l]
-        acc = jnp.zeros((b, nq_l, h, v.shape[-1]), v.dtype)
-        for sl, (hs_, ws_) in enumerate(plan.level_shapes):
-            v2 = v[:, int(starts[sl]):int(starts[sl]) + hs_ * ws_]
-            v2 = v2.reshape(b, hs_, ws_, h, v.shape[-1])
-            on = (lvl == sl).astype(pq.dtype)
-            # cross-level row scaling can shift the window estimate by up
-            # to half a sampled-level row per query row — widen the halo
-            halo = (int(math.ceil(cfg.range_narrow[sl])) + 2
-                    + int(math.ceil(0.5 * max(1.0, hs_ / hq))))
-            run = lambda v2d, xx, yy, pp: kernel_ops.msgs_windowed(
-                v2d, xx, yy, pp, query_level_width=wq_, halo=halo,
-                block_q=block_q)
-            vbh = v2.transpose(0, 3, 1, 2, 4).reshape(b * h, hs_, ws_, -1)
-            xbh = xq.transpose(0, 2, 1, 3).reshape(b * h, nq_l, k)
-            ybh = yq.transpose(0, 2, 1, 3).reshape(b * h, nq_l, k)
-            pbh = (pq * on).transpose(0, 2, 1, 3).reshape(b * h, nq_l, k)
-            o = jax.vmap(run)(vbh, xbh, ybh, pbh)            # (B*H, nq_l, Dh)
-            acc = acc + o.reshape(b, h, nq_l, -1).transpose(0, 2, 1, 3)
-        out_levels.append(acc)
-    return jnp.concatenate(out_levels, axis=1)

@@ -1,0 +1,115 @@
+"""MSDAValueCache — build-once, sample-everywhere compacted value tables.
+
+DEFA's architecture level wins not only by multi-scale parallelism but by
+**feature-map reusing**: the same (pruned) value table is sampled by many
+attention layers, so it should be projected, FWP-compacted, and staged
+*once* and then reused. The cache is that staged table plus everything a
+backend needs to sample it:
+
+  * ``v``        — the projected, head-laid-out value table
+                   (B, N_rows, H, Dh); under ``fwp_mode="compact"`` the
+                   table is the compacted slot buffer + zero sentinel row;
+  * ``pix2slot`` — the pixel -> compact-slot indirection (None when dense);
+  * ``keep_idx`` — the raster-ordered slot -> pixel map the windowed
+                   kernel searchsorts for its slot windows (None when dense);
+  * ``slot_windows`` — static per-level slot-window extents (compact mode);
+  * ``table_bytes`` — staged-bytes accounting per (batch, head-group):
+                   the VMEM/HBM cost of staging this table ONCE, the unit
+                   the decoder's build-once-vs-rebuild-per-layer comparison
+                   is measured in.
+
+Consumers: every encoder block builds its own cache (its memory changes
+block to block — only the FWP *compaction* is reused, via the pipeline
+state), while the decoder builds ONE cache from the encoder memory and
+every decoder layer samples it (``repro/msda/decoder.py``). All backends
+keep the existing ``(plan, v, pts, probs)`` contract — the cache simply
+carries ``v`` and its geometry between the build and the samples.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import fwp as fwp_lib
+from repro.core.quant import maybe_fake_quant
+
+
+class MSDAValueCache(NamedTuple):
+    """Projected (optionally FWP-compacted) value table + sampling geometry."""
+    v: jnp.ndarray                      # (B, N_rows, H, Dh) staged table
+    pix2slot: Optional[jnp.ndarray]     # (B, N_in) pixel -> slot (or None)
+    keep_idx: Optional[jnp.ndarray]     # (B, cap) slot -> pixel, raster-ordered
+    n_rows: int                         # static row count of ``v``
+    slot_windows: Tuple[int, ...]       # static per-level slot windows
+    #   (compact mode; () when dense) — what a windowed consumer may stage
+    table_bytes: int                    # bytes staged per (batch, head-group)
+    #   to build this table once: rows x lanes x itemsize (+ the int32
+    #   pix2slot indirection in compact mode). This is the ACTUAL built
+    #   table (dense when no FWP link exists yet); the static plan-side
+    #   estimate that assumes compaction is ``MSDAPlan.cache_table_bytes``.
+    #   Surfaced per block via the collect_stats "cache_table_bytes" entry.
+
+
+def project_values(params: dict, cfg, x_flat: jnp.ndarray,
+                   fwp_state: Optional[fwp_lib.FWPState]):
+    """FWP-pruned value projection V = X W^V.
+
+    Returns (v (B, N_rows, H, Dh), pix2slot or None, n_rows)."""
+    b = x_flat.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+    n_in = x_flat.shape[1]
+    wq = lambda w: maybe_fake_quant(w, cfg.weight_bits)
+    if fwp_state is not None and cfg.fwp_mode == "compact":
+        cap = fwp_state.keep_idx.shape[1]
+        x_kept = jnp.take_along_axis(x_flat, fwp_state.keep_idx[..., None], axis=1)
+        v = jnp.einsum("bnd,dhk->bnhk", x_kept, wq(params["value_w"])) \
+            + params["value_b"]
+        v = jnp.concatenate([v, jnp.zeros((b, 1, h, dh), v.dtype)], axis=1)
+        pix2slot = fwp_state.pix2slot                    # (B, N_in)
+        n_rows = cap + 1
+    elif fwp_state is not None and cfg.fwp_mode == "mask":
+        xm = x_flat * fwp_state.keep_mask[..., None].astype(x_flat.dtype)
+        v = jnp.einsum("bnd,dhk->bnhk", xm, wq(params["value_w"])) \
+            + params["value_b"]
+        # masked pixels must contribute EXACT zero (bias would leak):
+        v = v * fwp_state.keep_mask[..., None, None].astype(v.dtype)
+        pix2slot = None
+        n_rows = n_in
+    else:
+        v = jnp.einsum("bnd,dhk->bnhk", x_flat, wq(params["value_w"])) \
+            + params["value_b"]
+        pix2slot = None
+        n_rows = n_in
+    return maybe_fake_quant(v, cfg.act_bits), pix2slot, n_rows
+
+
+def build_value_cache(params: dict, plan, x_flat: jnp.ndarray,
+                      state=None) -> MSDAValueCache:
+    """Build the shared value cache for one memory ``x_flat``.
+
+    ``params`` needs only the value projection (``value_w``/``value_b``);
+    ``state`` is the :class:`~repro.msda.pipeline.MSDAPipelineState` whose
+    FWP chain link decides the compaction (None / no link => dense table).
+    Called ONCE per memory; every sampler (encoder block body, all decoder
+    layers) then consumes the result through
+    :func:`repro.msda.attention.msda_attention_cached`."""
+    cfg = plan.cfg
+    fwp_state = getattr(state, "fwp", None)
+    v, pix2slot, n_rows = project_values(params, cfg, x_flat, fwp_state)
+    keep_idx = fwp_state.keep_idx if pix2slot is not None else None
+
+    table_bytes = plan.table_bytes_for_rows(
+        n_rows, with_indirection=pix2slot is not None)
+    slot_windows: Tuple[int, ...] = ()
+    if pix2slot is not None:
+        # geometry for windowed consumers of a compact cache (the raster
+        # kernel derives its own via WindowGeometry; a decode-shaped
+        # windowed kernel — ROADMAP — would stage these per level). The
+        # bound excludes the zero sentinel row: it is addressable but
+        # never part of a level's slot range.
+        caps = fwp_lib.level_capacities(plan.level_shapes, cfg.fwp_capacity)
+        slot_windows = tuple(min(int(c), n_rows - 1) for c in caps)
+    return MSDAValueCache(v=v, pix2slot=pix2slot, keep_idx=keep_idx,
+                          n_rows=n_rows, slot_windows=slot_windows,
+                          table_bytes=table_bytes)

@@ -4,7 +4,7 @@ The DEFA dataflow is stateful *across* encoder blocks: block k counts how
 often MSGS touched each fmap pixel and block k+1 prunes its value
 projection with the result (FWP, paper §3.1). The seed threaded this
 through an ad-hoc ``aux["fwp_state"]`` dict; ``MSDAPipelineState`` makes
-the chain explicit and gives every consumer (encoder, detector,
+the chain explicit and gives every consumer (encoder, detector, decoder,
 distributed wrapper, serving) one object to carry:
 
     state = MSDAPipelineState.initial()
@@ -12,13 +12,24 @@ distributed wrapper, serving) one object to carry:
         out, state = msda_attention(params, plan, q, refs, x, state=state)
 
 ``block_stats`` accumulates the per-block DEFA statistics (PAP keep
-fraction, FWP keep fraction, value rows) when requested.
+fraction, FWP keep fraction, value rows) when requested. An entry is
+appended for EVERY executed block — ``None`` when that block did not
+collect — so ``block_stats[i]`` is always block i's entry and the indices
+stay aligned with ``block_index`` even when ``collect_stats`` is toggled
+mid-chain.
 
 Under ``fwp_mode="compact"`` the carried :class:`FWPState` is also the
 compact-table geometry for the next block's kernels: ``pix2slot`` (the
 pixel -> slot indirection) and the raster-ordered ``keep_idx`` (slot ->
 pixel), which the windowed backend searchsorts to locate per-level slot
 windows of the compacted table — sampling it directly, never densifying.
+
+The state also carries the shared :class:`~repro.msda.cache.MSDAValueCache`
+when one memory is sampled by many layers (the decoder): the cache is built
+once via :func:`~repro.msda.cache.build_value_cache`, attached with
+:meth:`with_cache`, and every layer's
+:func:`~repro.msda.attention.msda_attention_cached` call consumes it —
+build-once, sample-everywhere.
 """
 from __future__ import annotations
 
@@ -26,6 +37,7 @@ import dataclasses
 from typing import Optional, Tuple
 
 from repro.core.fwp import FWPState
+from repro.msda.cache import MSDAValueCache
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,7 +45,10 @@ class MSDAPipelineState:
     """State produced by block k, consumed by block k+1."""
     fwp: Optional[FWPState] = None       # mask/keep-list for the NEXT block
     block_index: int = 0                 # how many blocks have executed
-    block_stats: Tuple[dict, ...] = ()   # per-block stats (collect_stats)
+    block_stats: Tuple[Optional[dict], ...] = ()   # per-block stats; entry
+    #   i belongs to block i (None when that block didn't collect)
+    cache: Optional[MSDAValueCache] = None   # shared value cache (decoder /
+    #   any build-once-sample-everywhere consumer); advance() preserves it
 
     @classmethod
     def initial(cls) -> "MSDAPipelineState":
@@ -42,8 +57,19 @@ class MSDAPipelineState:
 
     def advance(self, fwp: Optional[FWPState],
                 stats: Optional[dict]) -> "MSDAPipelineState":
-        """State after one block: new FWP chain link, stats appended."""
+        """State after one block: new FWP chain link, stats appended.
+
+        Stats are appended unconditionally (``None`` when the block did not
+        collect) so ``block_stats`` indices track ``block_index`` exactly."""
         return MSDAPipelineState(
             fwp=fwp, block_index=self.block_index + 1,
-            block_stats=self.block_stats + ((stats,) if stats is not None
-                                            else ()))
+            block_stats=self.block_stats + (stats,),
+            cache=self.cache)
+
+    def with_cache(self, cache: Optional[MSDAValueCache]) -> "MSDAPipelineState":
+        """Attach (or clear) the shared value cache, keeping the chain."""
+        return dataclasses.replace(self, cache=cache)
+
+    def collected_stats(self) -> Tuple[dict, ...]:
+        """Only the blocks that actually collected (drops the Nones)."""
+        return tuple(s for s in self.block_stats if s is not None)

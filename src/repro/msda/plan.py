@@ -5,15 +5,19 @@ everything in it is Python-static so it can be closed over by jit'd code.
 The plan decides, ahead of execution:
 
   * **backend** — which registered kernel runs the fused gather+aggregate
-    step (``jnp_gather`` | ``pallas_fused`` | ``pallas_windowed`` |
-    ``pallas_windowed_loop``; the ``auto`` policy picks by VMEM fit,
-    mirroring the NPU follow-up work's shape-specialized kernel
-    selection);
+    step (``jnp_gather`` | ``pallas_fused`` | ``pallas_windowed``; the
+    ``auto`` policy picks by VMEM fit, mirroring the NPU follow-up work's
+    shape-specialized kernel selection — including the windowed kernel's
+    co-resident staged-window sum vs. the ``REPRO_MSDA_VMEM_BUDGET``
+    staging budget);
   * **query tiling** — a global ``block_q`` plus the per-level clamp
     ``block_q_levels[l] = min(block_q, next_pow2(nq_l))`` and the
     single-launch windowed kernel's uniform ``tile_q``, with the
     windowed/compact staged-VMEM accounting (``window_bytes`` /
-    ``window_bytes_compact``);
+    ``window_bytes_compact``). Decode-shaped workloads (N_q learned
+    queries instead of N_in raster queries — pass ``n_queries``) clamp
+    ``block_q`` to ``next_pow2(N_q)``: a 300-query decoder launch must
+    not tile as if it had 20k encoder queries;
   * **VMEM fit** — whether the whole per-(batch, head-group) value table
     fits the configured VMEM slab (fused whole-table kernel) or only a
     bounded window does (windowed kernel, needs range-narrowing);
@@ -27,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import os
 from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -38,7 +43,22 @@ from repro.core import fwp as fwp_lib
 #: point/output tiles and the rest of the program.
 DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
 
+#: Conservative default budget for the windowed kernel's co-resident staged
+#: window sum (all L level windows live in VMEM at once, next to the
+#: double-buffered point/output tiles). Override with the
+#: ``REPRO_MSDA_VMEM_BUDGET`` env var (bytes) once a real-TPU Mosaic run
+#: has calibrated what actually fits.
+DEFAULT_WINDOW_STAGING_BUDGET = 4 * 1024 * 1024
+
 _LANE_WIDTH = 128
+
+
+def window_staging_budget() -> int:
+    """The windowed kernel's staged-window budget (env-overridable)."""
+    env = os.environ.get("REPRO_MSDA_VMEM_BUDGET")
+    if env:
+        return int(env)
+    return DEFAULT_WINDOW_STAGING_BUDGET
 
 
 def next_pow2(n: int) -> int:
@@ -102,7 +122,7 @@ class MSDAPlan:
     n_in: int                    # total flat pixels across levels
     block_q_levels: Tuple[int, ...] = ()   # per-query-level tile size:
     #   min(block_q, next_pow2(nq_l)) — the (2,3) level tiles 6 queries
-    #   as 8, not 128 (used by the pallas_windowed_loop per-level dispatch)
+    #   as 8, not 128 (raster-query launches only)
     tile_q: int = 128            # uniform tile of the single-launch
     #   multi-scale-parallel windowed kernel (= max(block_q_levels))
     window_bytes: Optional[int] = None           # dense fmap window staged
@@ -110,27 +130,78 @@ class MSDAPlan:
     window_bytes_compact: Optional[int] = None   # FWP-compact-native window:
     #   slot window of the compacted table + the pix2slot window slice —
     #   the VMEM the windowed kernel actually stages when fwp_mode=compact
+    n_queries: Optional[int] = None   # decode-shaped launches: the learned
+    #   query count (None => raster encoder queries, Nq == n_in)
+    n_consumers: int = 1          # attention layers sharing ONE built value
+    #   cache (decoder: n_layers); drives the build-once staged-bytes
+    #   accounting in describe()
 
     @property
     def fits_vmem(self) -> bool:
         return self.value_table_bytes <= self.vmem_budget_bytes
+
+    @property
+    def decode_shaped(self) -> bool:
+        """True for learned-query (decoder-style) launches."""
+        return self.n_queries is not None and self.n_queries != self.n_in
+
+    def table_bytes_for_rows(self, n_rows: int,
+                             with_indirection: bool) -> int:
+        """Bytes staged per (batch, head-group) for an ``n_rows`` value
+        table under this plan's lane layout, plus the int32 ``pix2slot``
+        indirection when the table is compacted. The ONE formula behind
+        both the static plan estimate (:attr:`cache_table_bytes`) and the
+        built cache's actual accounting (``MSDAValueCache.table_bytes``)."""
+        itemsize = jnp.dtype(self.cfg.dtype).itemsize
+        lanes = self.cfg.head_dim if self.lane_layout == "native" \
+            else _LANE_WIDTH
+        b = n_rows * lanes * itemsize
+        if with_indirection:
+            b += self.n_in * 4
+        return b
+
+    @property
+    def cache_table_bytes(self) -> int:
+        """STATIC estimate of the bytes staged per (batch, head-group) to
+        build the value cache once. Assumes the FWP compaction is in
+        effect; the actually-built table's accounting is
+        ``MSDAValueCache.table_bytes`` (dense until the first FWP link
+        exists)."""
+        if self.cfg.fwp_mode == "compact":
+            caps = fwp_lib.level_capacities(self.level_shapes,
+                                            self.cfg.fwp_capacity)
+            return self.table_bytes_for_rows(sum(caps) + 1,
+                                             with_indirection=True)
+        return self.table_bytes_for_rows(self.n_in, with_indirection=False)
 
     def describe(self) -> str:
         """One-line human summary of every static decision.
 
         ``win=`` reports the windowed kernel's staged-VMEM accounting:
         the dense per-step window, plus (when FWP-compact is on) the
-        compact-native window actually staged instead."""
+        compact-native window actually staged instead. Decode-shaped
+        plans report ``q=decode(Nq)`` and the build-once value-cache
+        accounting: staging the cache ONCE vs. rebuilding it for each of
+        the ``n_consumers`` layers."""
         win = ""
         if self.window_bytes is not None:
             win = f", win={self.window_bytes/1024:.0f}KB"
             if self.window_bytes_compact is not None:
                 win += f"(compact {self.window_bytes_compact/1024:.0f}KB)"
+        q = ""
+        if self.decode_shaped:
+            cb = self.cache_table_bytes
+            q = (f", q=decode({self.n_queries}), "
+                 f"cache={cb/1024:.0f}KB build-once")
+            if self.n_consumers > 1:
+                q += (f" (vs {self.n_consumers}-layer rebuild "
+                      f"{self.n_consumers*cb/1024:.0f}KB, "
+                      f"{float(self.n_consumers):.1f}x)")
         return (f"MSDAPlan(backend={self.backend}, block_q={self.block_q}, "
                 f"block_q_levels={self.block_q_levels}, "
                 f"lanes={self.lane_layout}x{self.head_pack}, "
                 f"table={self.value_table_bytes/1024:.0f}KB/"
-                f"{self.vmem_budget_bytes/1024:.0f}KB{win}, "
+                f"{self.vmem_budget_bytes/1024:.0f}KB{win}{q}, "
                 f"n_in={self.n_in})")
 
 
@@ -138,24 +209,30 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
               backend: Optional[str] = None,
               block_q: int = 128,
               vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
-              n_queries: Optional[int] = None) -> MSDAPlan:
+              n_queries: Optional[int] = None,
+              n_consumers: int = 1) -> MSDAPlan:
     """Resolve the static plan.
 
     Backend precedence: explicit ``backend`` arg > ``cfg.backend`` >
     the legacy ``cfg.impl`` string ("pallas" -> pallas_fused, "jnp" ->
     jnp_gather). Any of them may be ``"auto"``: fused whole-table kernel
-    when the staged value table fits the VMEM budget, else the windowed
-    kernel when range-narrowing bounds the window, else the jnp gather.
+    when the staged value table fits the VMEM budget; else the windowed
+    kernel when range-narrowing bounds the window AND the worst-case
+    co-resident staged window sum — ``max(window_bytes,
+    window_bytes_compact)``, since block 1 of a compact chain stages the
+    dense windows — fits the staging budget (env-overridable
+    ``REPRO_MSDA_VMEM_BUDGET``, default ``DEFAULT_WINDOW_STAGING_BUDGET``);
+    else the jnp gather.
 
-    ``n_queries``: optional hint for auto-selection. The windowed kernel
-    requires raster-ordered encoder queries (Nq == N_in); pass the query
-    count for decoder-style workloads so ``auto`` never plans a backend
-    whose runtime precondition is already known to fail.
+    ``n_queries``: the query count for decode-shaped workloads (learned
+    queries, Nq != N_in). It (a) keeps ``auto`` from planning the windowed
+    kernel, whose raster-query precondition is already known to fail, and
+    (b) clamps ``block_q`` to ``next_pow2(n_queries)`` — N_q≈300 decoder
+    launches are a different tiling regime than N_in≈20k encoder launches.
 
-    NOTE: ``auto`` gates the windowed kernel on table-vs-budget only;
-    ``window_bytes`` / ``window_bytes_compact`` are accounting fields
-    (see ROADMAP: consulting them in the policy awaits real-TPU VMEM
-    calibration)."""
+    ``n_consumers``: how many attention layers will sample ONE built value
+    cache (decoder: n_layers). Accounting only — surfaced by
+    ``describe()`` and the fmap-reuse benchmark."""
     from repro.msda import backends as backend_registry
 
     level_shapes = tuple((int(h), int(w)) for h, w in level_shapes)
@@ -164,6 +241,30 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
     itemsize = jnp.dtype(cfg.dtype).itemsize
     lanes = cfg.head_dim if layout == "native" else _LANE_WIDTH
     table_bytes = value_rows(level_shapes) * lanes * itemsize
+
+    decode_shaped = n_queries is not None and n_queries != n_in
+    if decode_shaped:
+        block_q = min(block_q, next_pow2(n_queries))
+        block_q_levels = (block_q,)
+        tile_q = block_q
+    else:
+        block_q_levels = block_q_for_levels(level_shapes, block_q)
+        tile_q = max(block_q_levels)
+
+    # Windowed staged-window accounting (raster launches only: the windowed
+    # kernel has no decode-shaped mode). Needed BEFORE backend selection —
+    # the auto policy consults it.
+    window_bytes = window_bytes_compact = None
+    if windowed_eligible(cfg) and not decode_shaped:
+        from repro.kernels.msgs_windowed import window_geometry
+        geo = window_geometry(level_shapes,
+                              tuple(float(r) for r in cfg.range_narrow),
+                              tile_q)
+        window_bytes = geo.staged_bytes(lanes, itemsize)
+        if cfg.fwp_mode == "compact":
+            caps = fwp_lib.level_capacities(level_shapes, cfg.fwp_capacity)
+            window_bytes_compact = geo.staged_bytes(lanes, itemsize,
+                                                    caps=caps)
 
     requested = backend
     if requested is None:
@@ -174,9 +275,18 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
 
     if requested == "auto":
         raster_ok = n_queries is None or n_queries == n_in
+        # WORST-CASE co-resident staged sum across the chain: block 1 of a
+        # compact chain has no FWP link yet, so it stages the DENSE level
+        # windows — the compact number only holds from block 2 onward
+        # (same argument as value_rows() for the fused table). Both
+        # accounting fields are consulted; the max is what must fit.
+        staged = None if window_bytes is None \
+            else max(window_bytes, window_bytes_compact or 0)
+        windowed_fits = staged is not None \
+            and staged <= window_staging_budget()
         if table_bytes <= vmem_budget_bytes:
             requested = "pallas_fused"
-        elif windowed_eligible(cfg) and raster_ok:
+        elif windowed_eligible(cfg) and raster_ok and windowed_fits:
             requested = "pallas_windowed"
         else:
             requested = "jnp_gather"
@@ -188,20 +298,11 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
     if requested.startswith("pallas_windowed") and not windowed_eligible(cfg):
         raise ValueError(f"{requested} needs cfg.range_narrow set "
                          "(the bound IS what makes the fmap window finite)")
-
-    block_q_levels = block_q_for_levels(level_shapes, block_q)
-    tile_q = max(block_q_levels)
-    window_bytes = window_bytes_compact = None
-    if windowed_eligible(cfg):
-        from repro.kernels.msgs_windowed import window_geometry
-        geo = window_geometry(level_shapes,
-                              tuple(float(r) for r in cfg.range_narrow),
-                              tile_q)
-        window_bytes = geo.staged_bytes(lanes, itemsize)
-        if cfg.fwp_mode == "compact":
-            caps = fwp_lib.level_capacities(level_shapes, cfg.fwp_capacity)
-            window_bytes_compact = geo.staged_bytes(lanes, itemsize,
-                                                    caps=caps)
+    if requested.startswith("pallas_windowed") and decode_shaped:
+        raise ValueError(
+            f"{requested} needs raster encoder queries (Nq == N_in); "
+            f"decode-shaped launches (n_queries={n_queries}) must plan "
+            "jnp_gather or pallas_fused")
 
     return MSDAPlan(cfg=cfg, level_shapes=level_shapes, backend=requested,
                     block_q=block_q, lane_layout=layout, head_pack=pack,
@@ -209,12 +310,23 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
                     value_table_bytes=table_bytes, n_in=n_in,
                     block_q_levels=block_q_levels, tile_q=tile_q,
                     window_bytes=window_bytes,
-                    window_bytes_compact=window_bytes_compact)
+                    window_bytes_compact=window_bytes_compact,
+                    n_queries=n_queries, n_consumers=n_consumers)
 
 
-@functools.lru_cache(maxsize=256)
 def plan_for(cfg, level_shapes: Tuple[Tuple[int, int], ...],
              backend: Optional[str] = None,
              n_queries: Optional[int] = None) -> MSDAPlan:
-    """Memoized make_plan for hot call sites (the compat shim)."""
+    """Memoized make_plan for hot call sites (the compat shim).
+
+    The ``auto`` policy reads the env-overridable staging budget, so the
+    resolved budget is part of the memo key — changing
+    ``REPRO_MSDA_VMEM_BUDGET`` mid-process must not serve a stale plan."""
+    return _plan_for_cached(cfg, level_shapes, backend, n_queries,
+                            window_staging_budget())
+
+
+@functools.lru_cache(maxsize=256)
+def _plan_for_cached(cfg, level_shapes, backend, n_queries,
+                     _staging_budget: int) -> MSDAPlan:
     return make_plan(cfg, level_shapes, backend=backend, n_queries=n_queries)

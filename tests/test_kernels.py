@@ -70,31 +70,6 @@ def test_msgs_fused_zero_probs_prune_exactly():
                                rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("hl_wl_halo", [((32, 16), 3), ((16, 16), 2), ((64, 8), 5)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_msgs_windowed_sweep(hl_wl_halo, dtype):
-    (hl, wl), halo = hl_wl_halo
-    k, dh = 8, 16
-    key = jax.random.PRNGKey(hl)
-    v2 = jax.random.normal(key, (hl, wl, dh)).astype(dtype)
-    nq = hl * wl
-    ys, xs = np.meshgrid(np.arange(hl) + 0.5, np.arange(wl) + 0.5, indexing="ij")
-    offx = jax.random.uniform(jax.random.fold_in(key, 1), (nq, k),
-                              minval=-halo, maxval=halo)
-    offy = jax.random.uniform(jax.random.fold_in(key, 2), (nq, k),
-                              minval=-halo, maxval=halo)
-    xq = (jnp.asarray(xs.reshape(-1))[:, None] + offx - 0.5).astype(dtype)
-    yq = (jnp.asarray(ys.reshape(-1))[:, None] + offy - 0.5).astype(dtype)
-    p = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 3), (nq, k)),
-                       axis=-1).astype(dtype)
-    out = ops.msgs_windowed(v2, xq, yq, p, query_level_width=wl, halo=halo,
-                            block_q=64)
-    want = ref.msgs_windowed_ref(v2, xq, yq, p)
-    tol = 1e-5 if dtype == jnp.float32 else 3e-2
-    np.testing.assert_allclose(np.asarray(out, np.float32),
-                               np.asarray(want, np.float32), rtol=tol, atol=tol)
-
-
 @pytest.mark.parametrize("m,k,n", [(70, 90, 50), (128, 128, 128), (33, 257, 65)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_matmul_sweep(m, k, n, dtype):

@@ -21,8 +21,7 @@ LEVELS = ((16, 20), (8, 10), (4, 5), (2, 3))
 N_IN = sum(h * w for h, w in LEVELS)
 B, D = 1, 64
 RANGES = (6.0, 4.0, 3.0, 2.0)
-ALL_BACKENDS = ("jnp_gather", "pallas_fused", "pallas_windowed",
-                "pallas_windowed_loop")
+ALL_BACKENDS = ("jnp_gather", "pallas_fused", "pallas_windowed")
 
 
 @pytest.fixture(scope="module")
@@ -192,10 +191,28 @@ def test_windowed_msp_never_densifies_compact_table(setup, monkeypatch):
     assert all(nd != 4 for nd in spy.ndims), spy.ndims
 
 
-def test_windowed_loop_densifies_compact_table(setup, monkeypatch):
-    """Positive control for the spy: the retired loop path DOES densify
-    (a 4-D take_along_axis on the value table)."""
-    spy = _spy_densify(monkeypatch, setup, "pallas_windowed_loop")
+def test_densify_spy_positive_control(setup, monkeypatch):
+    """The spy must catch a real backend that densifies, through the SAME
+    execution path the negative tests use. (The old positive control was
+    the retired pallas_windowed_loop backend; this registers a probe
+    backend that densifies the compact table exactly as the loop did —
+    pix2slot broadcast + 4-D take_along_axis — then gathers.)"""
+    from repro.msda import backends as backend_registry
+
+    @msda.register_backend("densify_probe")
+    def densify_probe(plan, v, pts, probs):
+        if pts.pix2slot is not None:
+            idx = pts.pix2slot[:, :, None, None]
+            idx = jnp.broadcast_to(idx, (v.shape[0], plan.n_in) + v.shape[2:])
+            v = jnp.take_along_axis(v, idx, axis=1)   # the densify the
+            #   single-launch kernel exists to avoid
+            pts = pts._replace(pix2slot=None, keep_idx=None)
+        return backend_registry.jnp_gather(plan, v, pts, probs)
+
+    try:
+        spy = _spy_densify(monkeypatch, setup, "densify_probe")
+    finally:
+        backend_registry._REGISTRY.pop("densify_probe", None)
     assert any(nd == 4 for nd in spy.ndims), spy.ndims
 
 
@@ -225,6 +242,58 @@ def test_plan_auto_respects_query_count_hint(setup):
     plan = msda.make_plan(setup[0], LEVELS, backend="auto",
                           vmem_budget_bytes=1024, n_queries=N_IN)
     assert plan.backend == "pallas_windowed"
+
+
+def test_plan_auto_respects_window_staging_budget(setup, monkeypatch):
+    """The auto policy consults the co-resident staged window sum against
+    the REPRO_MSDA_VMEM_BUDGET staging budget: when the sum of the L
+    level windows can't co-reside, the windowed kernel would blow VMEM,
+    so auto must fall back to jnp_gather."""
+    plan = msda.make_plan(setup[0], LEVELS, backend="auto",
+                          vmem_budget_bytes=1024)
+    assert plan.backend == "pallas_windowed"       # fits the default budget
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", "1000")
+    assert msda.window_staging_budget() == 1000
+    plan = msda.make_plan(setup[0], LEVELS, backend="auto",
+                          vmem_budget_bytes=1024)
+    assert plan.backend == "jnp_gather"
+    # block 1 of a compact chain has no FWP link yet and stages the DENSE
+    # windows, so the gate must enforce the worst case: a budget between
+    # the compact and dense sums is NOT enough for the windowed kernel
+    cfg_c = dataclasses.replace(setup[0], fwp_mode="compact",
+                                fwp_capacity=0.6)
+    probe = msda.make_plan(cfg_c, LEVELS, backend="jnp_gather")
+    assert probe.window_bytes_compact < probe.window_bytes
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET",
+                       str(probe.window_bytes_compact))
+    plan = msda.make_plan(cfg_c, LEVELS, backend="auto",
+                          vmem_budget_bytes=1024)
+    assert plan.backend == "jnp_gather"
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", str(probe.window_bytes))
+    plan = msda.make_plan(cfg_c, LEVELS, backend="auto",
+                          vmem_budget_bytes=1024)
+    assert plan.backend == "pallas_windowed"
+
+
+def test_plan_decode_shaped_tiling(setup):
+    """N_q learned queries are a different block_q regime: the tile clamps
+    to next_pow2(N_q), the windowed kernel is rejected, and describe()
+    surfaces the build-once cache accounting."""
+    plan = msda.make_plan(setup[0], LEVELS, backend="jnp_gather",
+                          n_queries=40, n_consumers=6)
+    assert plan.decode_shaped
+    assert plan.block_q == 64                      # next_pow2(40), not 128
+    assert plan.tile_q == 64
+    assert plan.window_bytes is None               # no raster windows
+    assert "q=decode(40)" in plan.describe()
+    assert "build-once" in plan.describe()
+    with pytest.raises(ValueError):
+        msda.make_plan(setup[0], LEVELS, backend="pallas_windowed",
+                       n_queries=40)
+    # raster query count hint is NOT decode-shaped
+    plan = msda.make_plan(setup[0], LEVELS, backend="jnp_gather",
+                          n_queries=N_IN)
+    assert not plan.decode_shaped
 
 
 def test_plan_auto_falls_to_jnp_without_range_narrowing(setup):
@@ -334,3 +403,25 @@ def test_pipeline_state_threads_fwp_chain(setup):
                                    collect_stats=True)
     assert state.block_index == 2 and len(state.block_stats) == 2
     assert "fwp_keep_frac" in state.block_stats[1]
+
+
+def test_pipeline_block_stats_stay_aligned_when_toggled(setup):
+    """Toggling collect_stats mid-chain must NOT silently drop entries:
+    block_stats[i] is block i's entry (None when it didn't collect), so
+    indices track block_index exactly."""
+    cfg, params, q, refs, x, _ = setup
+    cfg2 = dataclasses.replace(cfg, fwp_mode="compact", fwp_k=1.0,
+                               fwp_capacity=0.8)
+    plan = msda.make_plan(cfg2, LEVELS, backend="jnp_gather")
+    state = msda.MSDAPipelineState.initial()
+    for collect in (False, True, False, True):
+        _, state = msda.msda_attention(params, plan, q, refs, x,
+                                       state=state, collect_stats=collect)
+    assert state.block_index == 4
+    assert len(state.block_stats) == 4             # aligned, not compacted
+    assert state.block_stats[0] is None and state.block_stats[2] is None
+    assert state.block_stats[1] is not None and state.block_stats[3] is not None
+    # block 1 consumed block 0's FWP mask: its stats must say so
+    assert int(state.block_stats[1]["value_rows"]) < N_IN
+    assert state.collected_stats() == (state.block_stats[1],
+                                       state.block_stats[3])

@@ -1,0 +1,248 @@
+"""Decoder + shared-ValueCache tests: build-once spy, cross-attention
+backend parity (packed + pad-lane geometries, FWP off/compact), grads
+through the decoder stack, and the detector/serving integration."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import msda
+from repro.core import nn
+from repro.core.msdeform_attn import MSDeformAttnConfig, init_msdeform_attn
+from repro.msda import cache as cache_mod
+
+LEVELS = ((16, 20), (8, 10), (4, 5), (2, 3))
+N_IN = sum(h * w for h, w in LEVELS)
+B = 2
+RANGES = (6.0, 4.0, 3.0, 2.0)
+DEC_BACKENDS = ("jnp_gather", "pallas_fused")    # decode-shaped launches
+
+
+def _geometry(packed: bool):
+    """packed: 8 heads x Dh=32 -> 4-head lane groups; pad-lane: Dh=40."""
+    d, heads = (256, 8) if packed else (80, 2)
+    return MSDeformAttnConfig(d_model=d, n_heads=heads, range_narrow=RANGES)
+
+
+def _setup(packed: bool, **cfg_kw):
+    cfg = dataclasses.replace(_geometry(packed), **cfg_kw)
+    key = jax.random.PRNGKey(5 if packed else 7)
+    mem = jax.random.normal(key, (B, N_IN, cfg.d_model))
+    dcfg = msda.MSDADecoderConfig(n_layers=3, n_queries=20, d_ffn=64)
+    dparams = msda.init_decoder(jax.random.fold_in(key, 1), dcfg, cfg)
+    state = None
+    if cfg.fwp_mode != "off":
+        # one raster encoder pass builds the FWP link the cache compacts by
+        eparams = init_msdeform_attn(jax.random.fold_in(key, 2), cfg)
+        eplan = msda.make_plan(cfg, LEVELS, backend="jnp_gather")
+        refs = jnp.broadcast_to(
+            nn.reference_points_for_levels(LEVELS)[None], (B, N_IN, 2))
+        _, state = msda.msda_attention(eparams, eplan, mem, refs, mem)
+        assert state.fwp is not None
+    return cfg, dcfg, dparams, mem, state
+
+
+# --------------------------------------------------------------------------
+# decoder cross-attention parity across backends
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("packed", (False, True), ids=("padlane", "packed"))
+@pytest.mark.parametrize("fwp", ("off", "compact"))
+def test_decoder_backend_parity(packed, fwp):
+    """The full decoder stack must be numerically identical through the
+    jnp_gather oracle and the pallas_fused kernel, in both lane layouts,
+    dense and FWP-compacted."""
+    kw = {} if fwp == "off" else dict(fwp_mode="compact", fwp_k=1.0,
+                                      fwp_capacity=0.6)
+    cfg, dcfg, dparams, mem, state = _setup(packed, **kw)
+    outs = {}
+    for be in DEC_BACKENDS:
+        plan = msda.make_plan(cfg, LEVELS, backend=be,
+                              n_queries=dcfg.n_queries,
+                              n_consumers=dcfg.n_layers)
+        if packed:
+            assert plan.lane_layout == "pack" and plan.head_pack == 4
+        else:
+            assert plan.lane_layout == "pad" and plan.head_pack == 1
+        h, refs, _ = msda.decoder_apply(dparams, dcfg, plan, mem, state)
+        outs[be] = (np.asarray(h), np.asarray(refs))
+    np.testing.assert_allclose(outs["pallas_fused"][0],
+                               outs["jnp_gather"][0], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(outs["pallas_fused"][1],
+                               outs["jnp_gather"][1], rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# build-once spy: ONE value projection serves every decoder layer
+# --------------------------------------------------------------------------
+
+class _ProjectionSpy:
+    def __init__(self):
+        self.calls = 0
+        self._real = cache_mod.project_values
+
+    def __call__(self, *args, **kwargs):
+        self.calls += 1
+        return self._real(*args, **kwargs)
+
+
+def test_decoder_builds_value_cache_exactly_once(monkeypatch):
+    """6 decoder layers, ONE value projection: the shared cache is built
+    once and every layer samples it — no re-projection."""
+    cfg, _, _, mem, state = _setup(True, fwp_mode="compact", fwp_k=1.0,
+                                   fwp_capacity=0.6)
+    dcfg = msda.MSDADecoderConfig(n_layers=6, n_queries=20, d_ffn=64)
+    dparams = msda.init_decoder(jax.random.PRNGKey(3), dcfg, cfg)
+    plan = msda.make_plan(cfg, LEVELS, backend="jnp_gather",
+                          n_queries=dcfg.n_queries,
+                          n_consumers=dcfg.n_layers)
+    spy = _ProjectionSpy()
+    monkeypatch.setattr(cache_mod, "project_values", spy)
+    h, _, dstate = msda.decoder_apply(dparams, dcfg, plan, mem, state,
+                                      collect_stats=True)
+    monkeypatch.undo()
+    assert spy.calls == 1, f"value projection ran {spy.calls}x for 6 layers"
+    assert len(dstate.block_stats) == dcfg.n_layers
+    # the cache's geometry contract: per-level slot windows are the level
+    # capacities, bounded by the table rows EXCLUDING the sentinel
+    from repro.core.fwp import level_capacities
+    caps = level_capacities(LEVELS, cfg.fwp_capacity)
+    assert dstate.cache.slot_windows == tuple(
+        min(int(c), dstate.cache.n_rows - 1) for c in caps)
+    assert sum(caps) + 1 == dstate.cache.n_rows
+    # every layer sampled the SAME compacted table
+    assert dstate.cache is not None
+    assert all(int(s["value_rows"]) == dstate.cache.n_rows
+               for s in dstate.block_stats)
+    assert bool(jnp.all(jnp.isfinite(h)))
+
+
+def test_decoder_never_densifies_compact_cache(monkeypatch):
+    """Under fwp_mode="compact" no decoder layer may densify the shared
+    table back to (B, N_in, H, Dh): no 4-D take_along_axis anywhere in
+    the decoder forward."""
+    cfg, dcfg, dparams, mem, state = _setup(True, fwp_mode="compact",
+                                            fwp_k=1.0, fwp_capacity=0.6)
+    plan = msda.make_plan(cfg, LEVELS, backend="pallas_fused",
+                          n_queries=dcfg.n_queries,
+                          n_consumers=dcfg.n_layers)
+    ndims = []
+    real = jnp.take_along_axis
+
+    def spy(arr, idx, axis=None, **kw):
+        ndims.append(arr.ndim)
+        return real(arr, idx, axis=axis, **kw)
+
+    monkeypatch.setattr(jnp, "take_along_axis", spy)
+    msda.decoder_apply(dparams, dcfg, plan, mem, state)
+    monkeypatch.undo()
+    assert all(nd != 4 for nd in ndims), ndims
+
+
+# --------------------------------------------------------------------------
+# fwp chain semantics through the decoder
+# --------------------------------------------------------------------------
+
+def test_decoder_carries_fwp_link_without_rebuilding():
+    """update_fwp=False semantics: the decoder samples a FIXED memory, so
+    its state keeps the encoder's FWP link unchanged instead of deriving
+    a new mask per layer."""
+    cfg, dcfg, dparams, mem, state = _setup(True, fwp_mode="compact",
+                                            fwp_k=1.0, fwp_capacity=0.6)
+    plan = msda.make_plan(cfg, LEVELS, backend="jnp_gather",
+                          n_queries=dcfg.n_queries)
+    _, _, dstate = msda.decoder_apply(dparams, dcfg, plan, mem, state)
+    assert dstate.fwp is state.fwp                 # same link, not rebuilt
+    assert dstate.block_index == dcfg.n_layers
+
+
+# --------------------------------------------------------------------------
+# gradients through the decoder stack
+# --------------------------------------------------------------------------
+
+def test_grad_through_decoder_smoke():
+    cfg, dcfg, dparams, mem, state = _setup(False, fwp_mode="compact",
+                                            fwp_k=1.0, fwp_capacity=0.6)
+    plan = msda.make_plan(cfg, LEVELS, backend="jnp_gather",
+                          n_queries=dcfg.n_queries)
+
+    def loss(p):
+        h, refs, _ = msda.decoder_apply(p, dcfg, plan, mem, state)
+        return jnp.mean(jnp.square(h)) + jnp.mean(refs)
+
+    val, grads = jax.value_and_grad(loss)(dparams)
+    assert np.isfinite(float(val))
+    leaves = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in leaves)
+    # the build-once value projection must receive gradient from ALL layers
+    assert float(np.abs(np.asarray(grads["value"]["value_w"])).sum()) > 0
+    # and the per-layer sampling weights train too
+    assert float(np.abs(np.asarray(
+        grads["layers"][0]["cross"]["offs_w"])).sum()) > 0
+    # the reference refinement head must be trainable: only the INCOMING
+    # refs are detached, the per-layer delta stays live (a fully detached
+    # update would freeze the zero-init weights forever)
+    for layer in grads["layers"]:
+        assert float(np.abs(np.asarray(layer["ref_delta"]["w"])).sum()) > 0
+
+
+# --------------------------------------------------------------------------
+# detector + serving integration
+# --------------------------------------------------------------------------
+
+def _tiny_decoder_detector():
+    from repro.core.detector import DetectorConfig
+    from repro.core.encoder import EncoderConfig
+    attn = MSDeformAttnConfig(d_model=32, n_heads=2, n_levels=4, n_points=2,
+                              fwp_mode="compact", fwp_k=1.0,
+                              fwp_capacity=0.6,
+                              range_narrow=(8.0, 6.0, 4.0, 3.0))
+    return DetectorConfig(
+        encoder=EncoderConfig(attn=attn, n_blocks=2, d_ffn=64),
+        img_size=32, n_classes=4, backbone_width=16,
+        decoder=msda.MSDADecoderConfig(n_layers=2, n_queries=12, d_ffn=64))
+
+
+def test_detector_decoder_head_end_to_end():
+    from repro.core.detector import (decoder_detection_loss, detector_apply,
+                                     init_detector)
+    from repro.data.detection import synth_detection_batch
+    cfg = _tiny_decoder_detector()
+    key = jax.random.PRNGKey(0)
+    params = init_detector(key, cfg)
+    img, _, _, gt = synth_detection_batch(key, 2, cfg.img_size,
+                                          cfg.level_shapes)
+    cls, box, aux = jax.jit(
+        lambda p, i: detector_apply(p, cfg, i, collect_stats=True))(params, img)
+    assert cls.shape == (2, 12, cfg.n_classes + 1)
+    assert box.shape == (2, 12, 4)
+    assert len(aux["decoder_blocks"]) == 2
+    assert bool(jnp.all(jnp.isfinite(cls))) and bool(jnp.all((box >= 0)
+                                                             & (box <= 1)))
+    (l, _), grads = jax.value_and_grad(decoder_detection_loss, has_aux=True)(
+        params, cfg, img, gt["cls"], gt["box"], gt["active"])
+    assert np.isfinite(float(l))
+    assert all(np.all(np.isfinite(np.asarray(g)))
+               for g in jax.tree.leaves(grads))
+
+
+def test_detr_serve_engine_decoder_head():
+    from repro.core.detector import init_detector
+    from repro.data.detection import synth_detection_batch
+    from repro.serve.engine import DetrRequest, DetrServeEngine
+    cfg = _tiny_decoder_detector()
+    params = init_detector(jax.random.PRNGKey(1), cfg)
+    engine = DetrServeEngine(cfg, params, max_batch=2)
+    assert "build-once" in engine.describe()
+    img, _, _, _ = synth_detection_batch(jax.random.PRNGKey(2), 3,
+                                         cfg.img_size, cfg.level_shapes)
+    for i in range(3):                    # 3 requests -> 2 steps (pad lane)
+        engine.submit(DetrRequest(rid=i, image=np.asarray(img[i])))
+    done = engine.run_until_drained()
+    assert len(done) == 3 and all(r.done for r in done)
+    for r in done:
+        assert r.cls_probs.shape == (12, cfg.n_classes + 1)
+        assert r.boxes.shape == (12, 4)
+        assert np.all(np.isfinite(r.cls_probs)) and np.all(np.isfinite(r.boxes))
