@@ -2,11 +2,17 @@
 
 Compares the ``micro`` section of a freshly produced benchmark JSON
 (``benchmarks/run.py --only micro --json <path>``) against the committed
-``results/benchmarks.json`` baseline and fails (exit 1) when any
-``msda_*`` backend row is more than ``--threshold`` times slower than
-its baseline. Rows without a baseline entry (new backends) are reported
-but never fail; interpret-mode wall time is structural, so the default
-threshold is a generous 1.5x.
+``results/benchmarks.json`` baseline and fails (exit 1) when:
+
+  * any gated (``msda_*``) row is more than ``--threshold`` times slower
+    than its baseline (interpret-mode wall time is structural, so the
+    default threshold is a generous 1.5x);
+  * a gated row in the current run has NO baseline entry — a new backend
+    row must be committed to ``results/benchmarks.json`` (at the
+    baseline's machine-speed scale) in the same change that adds it, or
+    it would ride ungated forever;
+  * a gated baseline row is MISSING from the current run — a renamed or
+    silently-dropped benchmark must update the baseline, not evaporate.
 
 Usage:
     python benchmarks/check_regression.py \
@@ -43,12 +49,15 @@ def main() -> int:
         cur = _micro_rows(json.load(f))
 
     failures = []
+    missing_baseline = []
     for name, row in sorted(cur.items()):
         if not name.startswith(args.prefix):
             continue
         us = float(row["us_per_call"])
         if name not in base:
-            print(f"[check] {name}: {us:.1f} us (no baseline — skipped)")
+            print(f"[check] {name}: {us:.1f} us — NO baseline entry "
+                  f"(gated rows must be committed to {args.baseline})")
+            missing_baseline.append(name)
             continue
         ref = float(base[name]["us_per_call"])
         ratio = us / ref if ref > 0 else float("inf")
@@ -58,12 +67,32 @@ def main() -> int:
         if ratio > args.threshold:
             failures.append((name, ratio))
 
+    missing_current = sorted(
+        n for n in base if n.startswith(args.prefix) and n not in cur)
+
+    ok = True
     if failures:
         print(f"[check] {len(failures)} backend row(s) regressed "
               f">{args.threshold}x: "
               + ", ".join(f"{n} ({r:.2f}x)" for n, r in failures))
+        ok = False
+    if missing_baseline:
+        print(f"[check] {len(missing_baseline)} gated row(s) missing from "
+              f"the committed baseline ({args.baseline}): "
+              + ", ".join(missing_baseline)
+              + " — add them (scaled to the baseline's machine speed) in "
+              "the change that introduces them")
+        ok = False
+    if missing_current:
+        print(f"[check] {len(missing_current)} gated baseline row(s) "
+              f"missing from the current run: "
+              + ", ".join(missing_current)
+              + " — a dropped/renamed benchmark must update the baseline, "
+              "not silently pass")
+        ok = False
+    if not ok:
         return 1
-    print("[check] all backend rows within threshold")
+    print("[check] all backend rows present and within threshold")
     return 0
 
 

@@ -78,7 +78,9 @@ def toy_decoder_config(n_layers: int = 3, n_queries: int = 24,
 
 def train_toy_decoder_detector(steps: int = 400, batch: int = 8,
                                seed: int = 0, log=print, force: bool = False):
-    """Train the decoder-head toy detector (greedy set-prediction loss).
+    """Train the decoder-head toy detector (set-prediction loss;
+    Hungarian matching when scipy is installed, greedy fallback — see
+    repro.core.detector.match_queries).
 
     The decoder's deformable cross-attention samples ONE shared value
     cache per forward (build-once, sample-everywhere). Checkpoint cached

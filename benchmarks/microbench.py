@@ -42,6 +42,8 @@ def _msda_backend_rows() -> list[tuple[str, float, str]]:
 
     rows = []
     for name in msda.available_backends():
+        if msda.backend_info(name).decode_only:
+            continue       # decode-shaped backends get their own rows below
         plan = msda.make_plan(cfg, levels, backend=name, block_q=64)
         fn = jax.jit(lambda p_, q_, r_, x_, plan=plan:
                      msda.msda_attention(p_, plan, q_, r_, x_)[0])
@@ -69,9 +71,8 @@ def _msda_backend_rows() -> list[tuple[str, float, str]]:
 def _decoder_rows(attn_cfg, attn_params, levels, memory, state):
     """Decoder micro rows: 6 layers sampling ONE shared value cache vs the
     per-layer rebuild (project + compact + stage every layer) the
-    monolithic flow would pay."""
-    import dataclasses
-
+    monolithic flow would pay, plus the persistent decode kernel
+    (table STAGED once per memory, all layers launch against it)."""
     from repro import msda
 
     dcfg = msda.MSDADecoderConfig(n_layers=6, n_queries=64, d_ffn=128)
@@ -79,8 +80,11 @@ def _decoder_rows(attn_cfg, attn_params, levels, memory, state):
     plan = msda.make_plan(attn_cfg, levels, backend="jnp_gather",
                           n_queries=dcfg.n_queries,
                           n_consumers=dcfg.n_layers)
+    plan_p = msda.make_plan(attn_cfg, levels, backend="pallas_decode",
+                            n_queries=dcfg.n_queries,
+                            n_consumers=dcfg.n_layers)
 
-    def cross_stack(p_, m_, per_layer_rebuild: bool):
+    def cross_stack(p_, m_, per_layer_rebuild: bool, plan=plan):
         # identical 6-layer cross-attention stack; the ONLY difference is
         # where the value cache is built (once vs inside the layer loop)
         q = jnp.broadcast_to(p_["tgt_embed"][None],
@@ -103,18 +107,67 @@ def _decoder_rows(attn_cfg, attn_params, levels, memory, state):
 
     cached = jax.jit(lambda p_, m_: cross_stack(p_, m_, False))
     rebuild = jax.jit(lambda p_, m_: cross_stack(p_, m_, True))
+    persistent = jax.jit(lambda p_, m_: cross_stack(p_, m_, False,
+                                                    plan=plan_p))
     full = jax.jit(lambda p_, m_: msda.decoder_apply(
         p_, dcfg, plan, m_, state)[0])
     return [
         ("msda_decoder6_cached",
          _time(lambda: cached(dparams, memory)),
          "6 cross-attn layers, ONE shared ValueCache (build-once)"),
+        ("msda_decoder6_persistent",
+         _time(lambda: persistent(dparams, memory)),
+         "6 cross-attn layers, pallas_decode vs the ONCE-staged table"),
         ("msda_decoder6_rebuild",
          _time(lambda: rebuild(dparams, memory)),
          "6 cross-attn layers rebuilding the value table per layer"),
         ("msda_decoder6_full",
          _time(lambda: full(dparams, memory)),
          "full decoder (self-attn+cross+ffn+refine), shared cache"),
+    ] + _decode_launch_rows(attn_cfg, levels, memory, state, plan_p, dparams)
+
+
+def _decode_launch_rows(attn_cfg, levels, memory, state, plan_p, dparams):
+    """Stacked-vs-per-layer launch comparison on IDENTICAL precomputed
+    sampling points: 6 single-layer persistent launches vs ONE stacked
+    launch whose grid keeps the staged table resident across the whole
+    (query-tile x layer) sweep of each (batch, head-group)."""
+    from repro import msda
+    from repro.kernels import ops as kernel_ops
+    from repro.msda.sampling import generate_points
+
+    n_layers = 6
+    cache = msda.build_value_cache(dparams["value"], plan_p, memory, state)
+    key = jax.random.PRNGKey(33)
+    nq = plan_p.n_queries
+    qs = jax.random.normal(key, (n_layers, memory.shape[0], nq,
+                                 attn_cfg.d_model))
+    refs = jax.random.uniform(jax.random.fold_in(key, 1),
+                              (memory.shape[0], nq, 2),
+                              minval=0.1, maxval=0.9)
+    layer0 = dparams["layers"][0]["cross"]
+    stack = []
+    for li in range(n_layers):
+        sel, pts = generate_points(layer0, attn_cfg, qs[li], refs,
+                                   plan_p.level_shapes,
+                                   pix2slot=cache.pix2slot,
+                                   keep_idx=cache.keep_idx)
+        stack.append((pts.x_px, pts.y_px, pts.start, pts.wl, pts.hl,
+                      sel.probs))
+    stacked = [jnp.stack([s[i] for s in stack], axis=1) for i in range(6)]
+
+    per_layer = jax.jit(lambda c, st: sum(
+        kernel_ops.msgs_decode(c.staged, *s, block_q=plan_p.block_q).sum()
+        for s in st))
+    one_launch = jax.jit(lambda c, sk: kernel_ops.msgs_decode_layers(
+        c.staged, *sk, block_q=plan_p.block_q).sum())
+    return [
+        ("msda_decode6_perlayer_launches",
+         _time(lambda: per_layer(cache, stack)),
+         "6 single-layer persistent decode launches, shared staged table"),
+        ("msda_decode6_stacked_launch",
+         _time(lambda: one_launch(cache, stacked)),
+         "ONE launch, layer axis innermost, table resident per (b, group)"),
     ]
 
 

@@ -22,8 +22,14 @@ from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import nn
+
+try:                                       # optional dep (scipy)
+    from scipy.optimize import linear_sum_assignment as _linear_sum_assignment
+except ImportError:                        # pragma: no cover - env-dependent
+    _linear_sum_assignment = None
 from repro.core.encoder import EncoderConfig, init_encoder, encoder_apply, encoder_logical_axes
 from repro.msda.decoder import (MSDADecoderConfig, decoder_apply,
                                 decoder_logical_axes, init_decoder)
@@ -89,16 +95,31 @@ def detector_logical_axes(cfg: DetectorConfig) -> dict:
 def decoder_plan(cfg: DetectorConfig, backend: Optional[str] = None):
     """The decode-shaped MSDAPlan for this detector's decoder head.
 
-    Single source of the windowed-backend fallback: the windowed kernel
-    has no decode-shaped launch, so an explicit (or config-level)
-    ``pallas_windowed`` request degrades to ``auto`` for the decoder."""
+    Single source of the raster-only-backend fallback: raster-only
+    kernels (the windowed kernel) have no decode-shaped launch, so an
+    explicit (or config-level) request for one degrades to ``auto`` for
+    the decoder (which may then pick the persistent decode kernel)."""
+    from repro.msda import backend_info
     assert cfg.decoder is not None, "decoder head required"
     dec_backend = backend or getattr(cfg.encoder.attn, "backend", None)
-    if dec_backend is not None and dec_backend.startswith("pallas_windowed"):
+    if dec_backend is not None and dec_backend != "auto" \
+            and backend_info(dec_backend).raster_only:
         dec_backend = "auto"
     return make_plan(cfg.encoder.attn, cfg.level_shapes, backend=dec_backend,
                      n_queries=cfg.decoder.n_queries,
                      n_consumers=cfg.decoder.n_layers)
+
+
+def encoder_backend(backend: Optional[str]) -> Optional[str]:
+    """The mirror fallback for the raster ENCODER: decode-only backends
+    (``pallas_decode``) have no raster launch, so such a request degrades
+    to ``auto`` for the encoder while staying in force for the decoder
+    (``examples/detr_serve.py --backend pallas_decode``)."""
+    from repro.msda import backend_info
+    if backend is not None and backend != "auto" \
+            and backend_info(backend).decode_only:
+        return "auto"
+    return backend
 
 
 def _pyramid(params, cfg: DetectorConfig, images: jnp.ndarray):
@@ -135,7 +156,8 @@ def detector_apply(params: dict, cfg: DetectorConfig, images: jnp.ndarray,
     refs = nn.reference_points_for_levels(level_shapes)
     enc, aux, state = encoder_apply(
         params["encoder"], cfg.encoder, x_flat, pos, refs, level_shapes,
-        collect_stats=collect_stats, backend=backend, return_state=True)
+        collect_stats=collect_stats, backend=encoder_backend(backend),
+        return_state=True)
 
     if cfg.decoder is None:
         cls_logits = nn.linear(params["cls_head"], enc)
@@ -176,18 +198,73 @@ def detection_loss(params: dict, cfg: DetectorConfig, images: jnp.ndarray,
     return cls_loss + box_loss, {"cls_loss": cls_loss, "box_loss": box_loss}
 
 
+_INACTIVE_COST = 1e6
+
+
+def _hungarian_owners_host(cost: np.ndarray) -> np.ndarray:
+    """Host-side optimal assignment per batch element: owner[b, m] is the
+    query column assigned to gt row m (rows than columns or fewer)."""
+    owner = np.zeros(cost.shape[:2], np.int32)
+    for b in range(cost.shape[0]):
+        row, col = _linear_sum_assignment(cost[b])
+        owner[b, row] = col.astype(np.int32)
+    return owner
+
+
+def match_queries(cost: jnp.ndarray, gt_active: jnp.ndarray,
+                  matcher: Optional[str] = None) -> jnp.ndarray:
+    """gt -> query assignment for the set-prediction loss.
+
+    ``cost`` (B, M, Nq) is consumed under ``stop_gradient`` (the
+    assignment is a discrete decision; gradients flow through the matched
+    boxes, not the matching). Matchers:
+
+      * ``"hungarian"`` — ``scipy.optimize.linear_sum_assignment`` via
+        ``jax.pure_callback`` (jit-safe): globally optimal, every active
+        gt gets a DISTINCT query. Inactive gt rows are flattened to a
+        constant cost so they take leftover queries without disturbing
+        the active rows' optimum (they are masked out of the loss anyway).
+      * ``"greedy"`` — the seed matcher: per-gt argmin, collisions
+        allowed. The fallback when scipy is absent (optional dep) or the
+        gt count exceeds the query count.
+
+    ``matcher=None`` auto-selects hungarian when scipy is available."""
+    if matcher is None:
+        matcher = "hungarian" if _linear_sum_assignment is not None \
+            else "greedy"
+    if matcher not in ("hungarian", "greedy"):
+        raise ValueError(f"unknown matcher {matcher!r}")
+    cost = jax.lax.stop_gradient(cost)
+    b, m, nq = cost.shape
+    if matcher == "greedy" or _linear_sum_assignment is None or m > nq:
+        return jnp.argmin(cost, axis=-1).astype(jnp.int32)
+    cost = jnp.where(gt_active[:, :, None], cost, _INACTIVE_COST)
+    # a diverged step (NaN/inf boxes) must degrade to a garbage-but-valid
+    # assignment and a detectable NaN loss, like the greedy argmin does —
+    # linear_sum_assignment raises on non-finite entries
+    cost = jnp.nan_to_num(cost, nan=_INACTIVE_COST, posinf=_INACTIVE_COST,
+                          neginf=-_INACTIVE_COST)
+    return jax.pure_callback(
+        _hungarian_owners_host,
+        jax.ShapeDtypeStruct((b, m), jnp.int32), cost)
+
+
 def decoder_detection_loss(params: dict, cfg: DetectorConfig,
                            images: jnp.ndarray, gt_cls: jnp.ndarray,
-                           gt_box: jnp.ndarray, gt_active: jnp.ndarray):
-    """Set-prediction loss for the decoder head (greedy matching).
+                           gt_box: jnp.ndarray, gt_active: jnp.ndarray,
+                           matcher: Optional[str] = None):
+    """Set-prediction loss for the decoder head (Hungarian matching).
 
-    A Hungarian matcher is overkill for the toy task (≤3 boxes/image):
-    each ACTIVE ground-truth box greedily claims the query whose predicted
-    box is closest in L1 (assignment under ``stop_gradient``); matched
-    queries learn class + box, the rest learn background. The class
-    targets are derived query-side (no duplicate-index scatter), so an
-    inactive GT slot can never claim a query and a collision between two
-    active GTs resolves deterministically to the lowest GT index.
+    Each ACTIVE ground-truth box is assigned the query whose predicted
+    box is closest in L1 — optimally via :func:`match_queries`
+    (``linear_sum_assignment``; greedy per-gt argmin fallback when scipy
+    is missing or ``matcher="greedy"``). The assignment happens under
+    ``stop_gradient``; matched queries learn class + box, the rest learn
+    background. The class targets are derived query-side (no
+    duplicate-index scatter), so an inactive GT slot can never claim a
+    query; under the greedy fallback a collision between two active GTs
+    resolves deterministically to the lowest GT index (Hungarian
+    assignments are collision-free by construction).
 
     gt_cls (B, M) int, gt_box (B, M, 4) cxcywh, gt_active (B, M) bool."""
     assert cfg.decoder is not None, "decoder head required"
@@ -195,7 +272,7 @@ def decoder_detection_loss(params: dict, cfg: DetectorConfig,
     b, nq, _ = cls_logits.shape
 
     cost = jnp.sum(jnp.abs(boxes[:, None] - gt_box[:, :, None]), -1)  # (B,M,Nq)
-    owner = jax.lax.stop_gradient(jnp.argmin(cost, axis=-1))          # (B,M)
+    owner = match_queries(cost, gt_active, matcher)                   # (B,M)
 
     # query-side targets: query q is positive iff some ACTIVE gt owns it
     claimed = (owner[:, :, None] == jnp.arange(nq)[None, None]) \

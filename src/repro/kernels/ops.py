@@ -11,6 +11,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import msgs_decode as msgs_decode_kernel
 from repro.kernels.msgs_fused import msgs_fused_pallas, msgs_fused_packed_pallas
 from repro.kernels.msgs_windowed import msgs_windowed_msp_pallas
 from repro.kernels.matmul import matmul_pallas
@@ -63,6 +64,35 @@ def msgs_windowed_msp(v, x_px, y_px, lvl_of_pt, probs,
         head_pack=head_pack,
         caps=None if caps is None else tuple(int(c) for c in caps),
         interpret=interp)
+
+
+def stage_decode_table(v, remap=None, *, head_pack: int = 1):
+    """Stage the value table ONCE in the decode launch layout (see
+    kernels/msgs_decode.py). Routed through the module attribute so the
+    staging-spy tests can count stagings per memory."""
+    return msgs_decode_kernel.stage_decode_table(v, remap,
+                                                 head_pack=head_pack)
+
+
+def msgs_decode(staged, x_px, y_px, start, wl, hl, probs, *,
+                block_q: int = 128, interpret: Optional[bool] = None):
+    """Per-layer persistent decode sampling against a pre-staged table.
+    Differentiable (custom_vjp backward = exact jnp reference)."""
+    interp = _interpret_default() if interpret is None else interpret
+    return msgs_decode_kernel.msgs_decode_pallas(
+        staged, x_px, y_px, start, wl, hl, probs,
+        block_q=block_q, interpret=interp)
+
+
+def msgs_decode_layers(staged, x_px, y_px, start, wl, hl, probs, *,
+                       block_q: int = 128,
+                       interpret: Optional[bool] = None):
+    """Stacked multi-layer persistent decode: one launch, all layers'
+    points, table staged once per (batch, head-group)."""
+    interp = _interpret_default() if interpret is None else interpret
+    return msgs_decode_kernel.msgs_decode_layers_pallas(
+        staged, x_px, y_px, start, wl, hl, probs,
+        block_q=block_q, interpret=interp)
 
 
 def matmul(x, w, w_scale=None, *, bm: int = 128, bn: int = 128, bk: int = 128,

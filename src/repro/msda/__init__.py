@@ -12,8 +12,10 @@ Four layers, one seam for every future backend:
     build-once, sample-everywhere;
   * :mod:`repro.msda.backends` — named-backend registry (``jnp_gather``,
     ``pallas_fused``, ``pallas_windowed`` — the single-launch
-    multi-scale-parallel windowed kernel — plus the ``auto`` policy) with
-    a uniform ``(plan, v, pts, probs) -> out`` contract;
+    multi-scale-parallel windowed kernel — and ``pallas_decode`` — the
+    persistent-cache decode kernel sampling a table staged ONCE per
+    memory — plus the ``auto`` policy) with a uniform
+    ``(plan, v, pts, probs, cache=None) -> out`` contract;
   * :mod:`repro.msda.pipeline` / :mod:`repro.msda.attention` /
     :mod:`repro.msda.decoder` — the planned block execution threading an
     explicit :class:`MSDAPipelineState` (FWP mask chain + stats + shared
@@ -33,7 +35,8 @@ Quickstart::
 """
 from repro.msda.attention import (msda_attention, msda_attention_cached,
                                   project_values)
-from repro.msda.backends import (available_backends, get_backend,
+from repro.msda.backends import (BackendInfo, available_backends,
+                                 backend_info, get_backend,
                                  register_backend)
 from repro.msda.cache import MSDAValueCache, build_value_cache
 from repro.msda.decoder import (MSDADecoderConfig, decoder_apply,
@@ -50,7 +53,8 @@ from repro.msda.sampling import (SamplingPoints, corner_data,
 
 __all__ = [
     "msda_attention", "msda_attention_cached", "project_values",
-    "available_backends", "get_backend", "register_backend",
+    "BackendInfo", "available_backends", "backend_info", "get_backend",
+    "register_backend",
     "MSDAValueCache", "build_value_cache",
     "MSDADecoderConfig", "decoder_apply", "decoder_logical_axes",
     "init_decoder",

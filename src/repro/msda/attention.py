@@ -66,8 +66,11 @@ def msda_attention_cached(
                                keep_idx=cache.keep_idx)
 
     # ---- 3. backend-dispatched fused MSGS + aggregation ------------------
+    # the cache rides along as a kwarg: backends that consume build-once
+    # artifacts (pallas_decode's pre-staged table) find them there,
+    # everyone else ignores it
     backend = backend_registry.get_backend(plan.backend)
-    out_h = backend(plan, cache.v, pts, sel.probs)       # (B, Nq, H, Dh)
+    out_h = backend(plan, cache.v, pts, sel.probs, cache=cache)
 
     out = jnp.einsum("bnhk,hkd->bnd", out_h, wq(params["out_w"])) \
         + params["out_b"]

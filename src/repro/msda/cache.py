@@ -49,6 +49,11 @@ class MSDAValueCache(NamedTuple):
     #   table (dense when no FWP link exists yet); the static plan-side
     #   estimate that assumes compaction is ``MSDAPlan.cache_table_bytes``.
     #   Surfaced per block via the collect_stats "cache_table_bytes" entry.
+    staged: Optional[object] = None     # DecodeStagedTable when the plan's
+    #   backend is the persistent decode kernel: ``v`` re-laid-out ONCE
+    #   per memory into the decode launch layout (kernels/msgs_decode.py);
+    #   every consumer launch then reuses it — one staging per
+    #   (batch, head-group) per memory, never per layer.
 
 
 def project_values(params: dict, cfg, x_flat: jnp.ndarray,
@@ -110,6 +115,17 @@ def build_value_cache(params: dict, plan, x_flat: jnp.ndarray,
         # never part of a level's slot range.
         caps = fwp_lib.level_capacities(plan.level_shapes, cfg.fwp_capacity)
         slot_windows = tuple(min(int(c), n_rows - 1) for c in caps)
+
+    staged = None
+    if plan.backend == "pallas_decode":
+        # The plan-keyed staging decision: lay the table out in the decode
+        # launch layout ONCE, here, per memory — every consumer layer's
+        # launch reuses the staged block (kernels/msgs_decode.py). Routed
+        # through the module attribute so the staging-spy tests can count
+        # stagings per memory.
+        from repro.kernels import msgs_decode as msgs_decode_kernel
+        staged = msgs_decode_kernel.stage_decode_table(
+            v, pix2slot, head_pack=plan.decode_head_pack)
     return MSDAValueCache(v=v, pix2slot=pix2slot, keep_idx=keep_idx,
                           n_rows=n_rows, slot_windows=slot_windows,
-                          table_bytes=table_bytes)
+                          table_bytes=table_bytes, staged=staged)

@@ -20,6 +20,17 @@ the build-once seam. The launch is decode-shaped: ``make_plan(...,
 n_queries=N_q, n_consumers=n_layers)`` clamps the query tiling to the
 learned-query regime and keeps ``auto`` off the raster-only windowed
 kernel.
+
+With the persistent decode backend (``pallas_decode``, the ``auto``
+pick when the compact table fits the staging budget) the build-once
+seam extends from projection to *staging*: ``build_value_cache`` lays
+the table out in the decode launch layout exactly once per memory
+(``cache.staged``) and every layer's launch reuses it — one staging per
+(batch, head-group) per memory, not per layer. The layers still launch
+one at a time (layer l's sampling coordinates only exist after layer
+l-1's self-attn/FFN), which is why the stacked single-launch variant in
+kernels/msgs_decode.py is reserved for coords-precomputed workloads;
+the interleaved forward ships the per-layer persistent launches.
 """
 from __future__ import annotations
 
@@ -150,6 +161,12 @@ def decoder_apply(
 
     # ---- build ONCE: the shared, optionally FWP-compacted value table ----
     cache = build_value_cache(params["value"], plan, memory, state)
+    if plan.backend == "pallas_decode":
+        # the persistent decode contract: the table was staged HERE, once
+        # per memory — a missing staged block would silently degrade every
+        # layer to a per-launch restage
+        assert cache.staged is not None, \
+            "pallas_decode plan produced an unstaged cache"
     dstate = MSDAPipelineState(
         fwp=getattr(state, "fwp", None)).with_cache(cache)
 

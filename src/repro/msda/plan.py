@@ -108,6 +108,18 @@ def windowed_eligible(cfg) -> bool:
     return cfg.range_narrow is not None
 
 
+def _table_bytes(n_rows: int, lanes: int, itemsize: int, n_in: int,
+                 with_indirection: bool) -> int:
+    """THE value-table staging formula: rows x lanes x itemsize, plus the
+    int32 pix2slot indirection when compacted. Single source for
+    ``MSDAPlan.table_bytes_for_rows``/``cache_table_bytes`` AND the auto
+    policy's pre-construction decode gate — they must never diverge."""
+    b = n_rows * lanes * itemsize
+    if with_indirection:
+        b += n_in * 4
+    return b
+
+
 @dataclasses.dataclass(frozen=True)
 class MSDAPlan:
     """Static per-(config, level_shapes) execution plan. Hashable."""
@@ -135,6 +147,10 @@ class MSDAPlan:
     n_consumers: int = 1          # attention layers sharing ONE built value
     #   cache (decoder: n_layers); drives the build-once staged-bytes
     #   accounting in describe()
+    decode_operand_bytes: Optional[int] = None   # persistent decode kernel:
+    #   per-layer point/probability/output blocks staged per
+    #   (batch, head-group) launch step — the part that IS per-layer even
+    #   when the table is staged once (stacked n_consumers x in describe())
 
     @property
     def fits_vmem(self) -> bool:
@@ -144,6 +160,14 @@ class MSDAPlan:
     def decode_shaped(self) -> bool:
         """True for learned-query (decoder-style) launches."""
         return self.n_queries is not None and self.n_queries != self.n_in
+
+    @property
+    def decode_head_pack(self) -> int:
+        """Heads per lane group for the persistent decode staging — THE
+        single source for every consumer (cache staging, backend
+        fallback): the staged layout and the kernel BlockSpecs sized
+        against it must always agree."""
+        return self.head_pack if self.lane_layout == "pack" else 1
 
     def table_bytes_for_rows(self, n_rows: int,
                              with_indirection: bool) -> int:
@@ -155,10 +179,8 @@ class MSDAPlan:
         itemsize = jnp.dtype(self.cfg.dtype).itemsize
         lanes = self.cfg.head_dim if self.lane_layout == "native" \
             else _LANE_WIDTH
-        b = n_rows * lanes * itemsize
-        if with_indirection:
-            b += self.n_in * 4
-        return b
+        return _table_bytes(n_rows, lanes, itemsize, self.n_in,
+                            with_indirection)
 
     @property
     def cache_table_bytes(self) -> int:
@@ -197,6 +219,17 @@ class MSDAPlan:
                 q += (f" (vs {self.n_consumers}-layer rebuild "
                       f"{self.n_consumers*cb/1024:.0f}KB, "
                       f"{float(self.n_consumers):.1f}x)")
+            if self.backend == "pallas_decode" \
+                    and self.decode_operand_bytes is not None:
+                # persistent decode staging: the table is staged ONCE per
+                # (batch, head-group) per memory; only the stacked
+                # per-layer operands scale with the layer count — vs. the
+                # n_consumers x table restage a per-layer fused launch pays
+                ob = self.decode_operand_bytes
+                q += (f", staged=1x{cb/1024:.0f}KB table + "
+                      f"{self.n_consumers}x{ob/1024:.0f}KB operands "
+                      f"(vs {self.n_consumers}x table restage "
+                      f"{self.n_consumers*cb/1024:.0f}KB)")
         return (f"MSDAPlan(backend={self.backend}, block_q={self.block_q}, "
                 f"block_q_levels={self.block_q_levels}, "
                 f"lanes={self.lane_layout}x{self.head_pack}, "
@@ -226,9 +259,13 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
 
     ``n_queries``: the query count for decode-shaped workloads (learned
     queries, Nq != N_in). It (a) keeps ``auto`` from planning the windowed
-    kernel, whose raster-query precondition is already known to fail, and
+    kernel, whose raster-query precondition is already known to fail,
     (b) clamps ``block_q`` to ``next_pow2(n_queries)`` — N_q≈300 decoder
-    launches are a different tiling regime than N_in≈20k encoder launches.
+    launches are a different tiling regime than N_in≈20k encoder launches
+    — and (c) lets ``auto`` plan the persistent-cache decode kernel
+    (``pallas_decode``) when the once-staged compact table plus one
+    layer's operand blocks fit both the VMEM budget and the
+    ``REPRO_MSDA_VMEM_BUDGET`` staging budget.
 
     ``n_consumers``: how many attention layers will sample ONE built value
     cache (decoder: n_layers). Accounting only — surfaced by
@@ -243,10 +280,31 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
     table_bytes = value_rows(level_shapes) * lanes * itemsize
 
     decode_shaped = n_queries is not None and n_queries != n_in
+    decode_operand_bytes = None
+    cache_bytes = None
     if decode_shaped:
         block_q = min(block_q, next_pow2(n_queries))
         block_q_levels = (block_q,)
         tile_q = block_q
+        # Persistent decode staging accounting (the ``_table_bytes``
+        # formula behind table_bytes_for_rows/cache_table_bytes, computed
+        # pre-construction because the auto policy consults it): the
+        # compact table + pix2slot staged ONCE, plus the per-layer point
+        # operand blocks (x/y/probs + int32 st/wl/hl + the output tile)
+        # staged per (batch, head-group) launch step. The gate uses the
+        # WORST CASE — a decoder fed no FWP link (state=None, or fwp off)
+        # stages the DENSE n_in-row table (same argument as value_rows()
+        # and the windowed branch's max(dense, compact) rule below).
+        cache_bytes = _table_bytes(n_in, lanes, itemsize, n_in, False)
+        if cfg.fwp_mode == "compact":
+            caps = fwp_lib.level_capacities(level_shapes, cfg.fwp_capacity)
+            cache_bytes = max(cache_bytes,
+                              _table_bytes(sum(caps) + 1, lanes, itemsize,
+                                           n_in, True))
+        g = pack if layout == "pack" else 1
+        decode_operand_bytes = (block_q * g * cfg.n_lp
+                                * (3 * itemsize + 3 * 4)
+                                + block_q * g * cfg.head_dim * itemsize)
     else:
         block_q_levels = block_q_for_levels(level_shapes, block_q)
         tile_q = max(block_q_levels)
@@ -274,35 +332,55 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
         requested = legacy.get(cfg.impl, cfg.impl)
 
     if requested == "auto":
-        raster_ok = n_queries is None or n_queries == n_in
-        # WORST-CASE co-resident staged sum across the chain: block 1 of a
-        # compact chain has no FWP link yet, so it stages the DENSE level
-        # windows — the compact number only holds from block 2 onward
-        # (same argument as value_rows() for the fused table). Both
-        # accounting fields are consulted; the max is what must fit.
-        staged = None if window_bytes is None \
-            else max(window_bytes, window_bytes_compact or 0)
-        windowed_fits = staged is not None \
-            and staged <= window_staging_budget()
-        if table_bytes <= vmem_budget_bytes:
-            requested = "pallas_fused"
-        elif windowed_eligible(cfg) and raster_ok and windowed_fits:
-            requested = "pallas_windowed"
+        if decode_shaped:
+            # Persistent decode gate (extends the REPRO_MSDA_VMEM_BUDGET
+            # gate): the once-staged compact table + one layer's operand
+            # blocks must co-reside in the staging slab AND fit the
+            # kernel's VMEM budget. When they do, the decode kernel is
+            # strictly better than re-staging the table per layer.
+            staged_decode = cache_bytes + decode_operand_bytes
+            if staged_decode <= min(vmem_budget_bytes,
+                                    window_staging_budget()):
+                requested = "pallas_decode"
+            elif table_bytes <= vmem_budget_bytes:
+                requested = "pallas_fused"
+            else:
+                requested = "jnp_gather"
         else:
-            requested = "jnp_gather"
+            # WORST-CASE co-resident staged sum across the chain: block 1
+            # of a compact chain has no FWP link yet, so it stages the
+            # DENSE level windows — the compact number only holds from
+            # block 2 onward (same argument as value_rows() for the fused
+            # table). Both accounting fields are consulted; the max is
+            # what must fit.
+            staged = None if window_bytes is None \
+                else max(window_bytes, window_bytes_compact or 0)
+            windowed_fits = staged is not None \
+                and staged <= window_staging_budget()
+            if table_bytes <= vmem_budget_bytes:
+                requested = "pallas_fused"
+            elif windowed_eligible(cfg) and windowed_fits:
+                requested = "pallas_windowed"
+            else:
+                requested = "jnp_gather"
 
     if requested not in backend_registry.available_backends():
         raise ValueError(
             f"unknown MSDA backend {requested!r}; "
             f"available: {backend_registry.available_backends()}")
+    info = backend_registry.backend_info(requested)
     if requested.startswith("pallas_windowed") and not windowed_eligible(cfg):
         raise ValueError(f"{requested} needs cfg.range_narrow set "
                          "(the bound IS what makes the fmap window finite)")
-    if requested.startswith("pallas_windowed") and decode_shaped:
+    if info.raster_only and decode_shaped:
         raise ValueError(
             f"{requested} needs raster encoder queries (Nq == N_in); "
             f"decode-shaped launches (n_queries={n_queries}) must plan "
-            "jnp_gather or pallas_fused")
+            "jnp_gather, pallas_fused, or pallas_decode")
+    if info.decode_only and not decode_shaped:
+        raise ValueError(
+            f"{requested} is a decode-shaped backend (N_q learned "
+            f"queries): pass n_queries != N_in, or plan a raster backend")
 
     return MSDAPlan(cfg=cfg, level_shapes=level_shapes, backend=requested,
                     block_q=block_q, lane_layout=layout, head_pack=pack,
@@ -311,7 +389,8 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
                     block_q_levels=block_q_levels, tile_q=tile_q,
                     window_bytes=window_bytes,
                     window_bytes_compact=window_bytes_compact,
-                    n_queries=n_queries, n_consumers=n_consumers)
+                    n_queries=n_queries, n_consumers=n_consumers,
+                    decode_operand_bytes=decode_operand_bytes)
 
 
 def plan_for(cfg, level_shapes: Tuple[Tuple[int, int], ...],

@@ -183,7 +183,13 @@ class DetrServeEngine:
                            backend=backend)
 
     def describe(self) -> str:
-        return self._plan.describe()
+        d = self._plan.describe()
+        if self._plan.backend == "pallas_decode":
+            # the serving-relevant consequence of the persistent decode
+            # plan: every request batch stages the compact table once and
+            # all decoder layers sample the staged block
+            d += " [persistent decode: table staged once per memory]"
+        return d
 
     def submit(self, req: DetrRequest):
         self.queue.append(req)

@@ -17,6 +17,11 @@ jax.config.update("jax_enable_x64", False)
 # property tests skip cleanly and everything else still runs.
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    # CI leg: deterministic, capped example count. Selected with
+    # `pytest --hypothesis-profile=ci` (.github/workflows/ci.yml).
+    settings.register_profile("ci", max_examples=25, deadline=None,
+                              derandomize=True)
 except ImportError:
     import pytest  # noqa: E402
 

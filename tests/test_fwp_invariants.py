@@ -1,0 +1,192 @@
+"""Property-based invariants of the FWP compact-table geometry.
+
+The whole compact execution path (windowed slot windows, decode staging,
+pix2slot corner remap) leans on three structural guarantees of
+``build_fwp_state(mode="compact")``:
+
+  1. **raster order** — within each level, the compact slots are sorted
+     by pixel index (and level segments are concatenated in level order),
+     so the full ``keep_idx`` row is strictly increasing: a spatial pixel
+     window maps to ONE contiguous slot range.
+  2. **slot windows** — the slot range of any pixel window ``[lo, hi)``
+     is exactly ``searchsorted(keep_idx, lo) .. searchsorted(keep_idx,
+     hi)`` and never holds more than ``min(window_pixels, cap_l)`` slots
+     — the static bound the windowed kernel stages by.
+  3. **pix2slot round-trip** — ``pix2slot[keep_idx[s]] == s`` for every
+     surviving slot; every non-sentinel ``pix2slot`` entry points back at
+     its own pixel; pruned pixels hit the zero-sentinel row.
+
+Each invariant runs as a hypothesis property (when installed — the
+``test`` extra) AND as a fixed-seed sweep that always runs, so the
+invariants stay exercised in hypothesis-free environments.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+# given/settings/st skip property tests cleanly when hypothesis is absent
+from conftest import given, settings, st
+
+from repro.core.fwp import (build_fwp_state, level_capacities, level_starts)
+
+LEVEL_POOL = (
+    ((8, 10), (4, 5), (2, 3)),
+    ((16, 20), (8, 10), (4, 5), (2, 3)),
+    ((5, 7), (3, 3)),
+    ((2, 3),),
+)
+
+
+def _state_for(seed: int, level_shapes, capacity: float, k: float,
+               batch: int = 2):
+    """Random frequency field (with exact zeros, like real FWP counts)
+    -> compact FWPState."""
+    _, n_in = level_starts(level_shapes)
+    key = jax.random.PRNGKey(seed)
+    freq = jax.random.uniform(key, (batch, n_in), maxval=10.0)
+    alive = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.7,
+                                 (batch, n_in))
+    freq = freq * alive.astype(jnp.float32)
+    return build_fwp_state(freq, level_shapes, k=k, mode="compact",
+                           capacity=capacity)
+
+
+# --------------------------------------------------------------------------
+# invariant checkers (shared by the hypothesis and fixed-seed entries)
+# --------------------------------------------------------------------------
+
+def _check_raster_order(state, level_shapes, capacity):
+    """Slots are raster-ordered per level and level-segmented, so the
+    full keep_idx row is strictly increasing and each level's slots stay
+    inside that level's flat pixel range."""
+    starts, _ = level_starts(level_shapes)
+    caps = level_capacities(level_shapes, capacity)
+    ki = np.asarray(state.keep_idx)
+    assert ki.shape[1] == sum(caps)
+    # strictly increasing across the whole row (level segments ordered)
+    assert (np.diff(ki, axis=1) > 0).all(), "keep_idx not raster-ordered"
+    off = 0
+    for (h, w), s, c in zip(level_shapes, starts, caps):
+        seg = ki[:, off:off + c]
+        assert (seg >= s).all() and (seg < s + h * w).all(), \
+            f"level slots escape the level range (start={s}, n={h*w})"
+        off += c
+
+
+def _check_pix2slot_roundtrip(state):
+    """pix2slot and keep_idx are inverse maps on the surviving slots;
+    everything else lands on the sentinel."""
+    ki = np.asarray(state.keep_idx)
+    p2s = np.asarray(state.pix2slot)
+    mask = np.asarray(state.keep_mask)
+    b, cap_total = ki.shape
+    sentinel = cap_total
+    surviving = np.take_along_axis(mask, ki, axis=1)          # (B, cap)
+    for bi in range(b):
+        # surviving slot s -> its pixel -> back to s
+        s_idx = np.nonzero(surviving[bi])[0]
+        np.testing.assert_array_equal(p2s[bi, ki[bi, s_idx]], s_idx)
+        # every non-sentinel entry points back at its own pixel AND that
+        # pixel survived the threshold
+        pix = np.nonzero(p2s[bi] != sentinel)[0]
+        slots = p2s[bi, pix]
+        np.testing.assert_array_equal(ki[bi, slots], pix)
+        assert mask[bi, pix].all()
+        # pruned pixels (below threshold) always hit the sentinel
+        assert (p2s[bi, ~mask[bi]] == sentinel).all()
+
+
+def _check_slot_windows(state, level_shapes, capacity, seed: int):
+    """searchsorted(keep_idx)-derived slot windows of random pixel
+    windows: the window is exactly the contiguous [s0, s1) slot range
+    and covers at most min(window_pixels, cap_l) slots — and the
+    kernel's clipped static window keeps every kept slot addressable."""
+    starts, _ = level_starts(level_shapes)
+    caps = level_capacities(level_shapes, capacity)
+    ki = np.asarray(state.keep_idx)
+    b, n_rows_nosent = ki.shape
+    rng = np.random.default_rng(seed)
+    for li, ((h, w), s, cap_l) in enumerate(zip(level_shapes, starts, caps)):
+        n_l = h * w
+        for _ in range(4):
+            # random row-aligned pixel window inside level li (the kernel
+            # windows whole rows: wp = n_rows * w)
+            r0 = int(rng.integers(0, h))
+            r1 = int(rng.integers(r0, h)) + 1
+            lo = s + r0 * w
+            hi = s + r1 * w
+            wp = hi - lo
+            for bi in range(b):
+                s0 = int(np.searchsorted(ki[bi], lo))
+                s1 = int(np.searchsorted(ki[bi], hi))
+                in_window = ((ki[bi] >= lo) & (ki[bi] < hi))
+                # the slot range is exactly the window's kept pixels...
+                assert in_window.sum() == s1 - s0
+                if s1 > s0:
+                    assert in_window[s0:s1].all()
+                # ...and never exceeds the static staging bound
+                wext = min(wp, cap_l)
+                assert s1 - s0 <= wext, (s1 - s0, wext)
+                # kernel clipping: start = clip(s0, 0, n_rows - wext)
+                # (n_rows includes the sentinel) only ever moves the
+                # start DOWN, keeping every kept slot covered
+                start_clipped = min(s0, (n_rows_nosent + 1) - wext)
+                assert start_clipped <= s0
+                assert s1 <= start_clipped + wext
+
+
+def _check_all(seed, level_shapes, capacity, k):
+    state = _state_for(seed, level_shapes, capacity, k)
+    _check_raster_order(state, level_shapes, capacity)
+    _check_pix2slot_roundtrip(state)
+    _check_slot_windows(state, level_shapes, capacity, seed)
+
+
+# --------------------------------------------------------------------------
+# hypothesis properties (skip cleanly when hypothesis is absent)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**16), st.integers(0, len(LEVEL_POOL) - 1),
+       st.floats(0.1, 1.0), st.floats(0.0, 2.0))
+def test_fwp_compact_invariants_property(seed, pool_idx, capacity, k):
+    _check_all(seed, LEVEL_POOL[pool_idx], capacity, k)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**16), st.floats(0.1, 1.0))
+def test_fwp_slot_windows_cover_all_kept_pixels_property(seed, capacity):
+    """Dedicated window property on the DETR-ish 4-level pyramid: every
+    kept pixel of every row-aligned window is reachable through the
+    searchsorted slot window (what the windowed kernel's no-densify
+    execution relies on)."""
+    level_shapes = LEVEL_POOL[1]
+    state = _state_for(seed, level_shapes, capacity, k=1.0)
+    _check_slot_windows(state, level_shapes, capacity, seed)
+
+
+# --------------------------------------------------------------------------
+# fixed-seed fallback — ALWAYS runs, hypothesis or not
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pool_idx", range(len(LEVEL_POOL)))
+def test_fwp_compact_invariants_fixed_seeds(pool_idx):
+    """Seeded sweep of the same invariants: keeps the geometry contract
+    exercised when hypothesis isn't installed (it is only the `test`
+    extra), and pins a deterministic regression surface either way."""
+    for seed in range(5):
+        for capacity in (0.25, 0.6, 1.0):
+            _check_all(seed, LEVEL_POOL[pool_idx], capacity, k=1.0)
+
+
+def test_fwp_compact_invariants_threshold_extremes():
+    """k=0 keeps every pixel (capacity permitting); a huge k prunes all:
+    the geometry invariants must hold at both extremes."""
+    level_shapes = LEVEL_POOL[0]
+    for k in (0.0, 100.0):
+        _check_all(7, level_shapes, 0.6, k)
+    # k=0, full capacity: every pixel survives and round-trips
+    state = _state_for(11, level_shapes, 1.0, 0.0)
+    assert bool(np.asarray(state.keep_mask).all())
+    p2s = np.asarray(state.pix2slot)
+    assert (p2s != state.keep_idx.shape[1]).all()   # no sentinel hits

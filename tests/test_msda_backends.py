@@ -21,6 +21,8 @@ LEVELS = ((16, 20), (8, 10), (4, 5), (2, 3))
 N_IN = sum(h * w for h, w in LEVELS)
 B, D = 1, 64
 RANGES = (6.0, 4.0, 3.0, 2.0)
+# raster-query backends (pallas_decode is decode-shaped only: its parity
+# matrix lives in the "persistent decode" section below)
 ALL_BACKENDS = ("jnp_gather", "pallas_fused", "pallas_windowed")
 
 
@@ -200,7 +202,7 @@ def test_densify_spy_positive_control(setup, monkeypatch):
     from repro.msda import backends as backend_registry
 
     @msda.register_backend("densify_probe")
-    def densify_probe(plan, v, pts, probs):
+    def densify_probe(plan, v, pts, probs, cache=None):
         if pts.pix2slot is not None:
             idx = pts.pix2slot[:, :, None, None]
             idx = jnp.broadcast_to(idx, (v.shape[0], plan.n_in) + v.shape[2:])
@@ -214,6 +216,152 @@ def test_densify_spy_positive_control(setup, monkeypatch):
     finally:
         backend_registry._REGISTRY.pop("densify_probe", None)
     assert any(nd == 4 for nd in spy.ndims), spy.ndims
+
+
+# --------------------------------------------------------------------------
+# persistent decode kernel: parity matrix, staging spy, gradients
+# --------------------------------------------------------------------------
+
+N_DEC_Q = 20
+
+
+def _decode_setup(packed: bool, fwp: str):
+    """Decode-shaped workload (N_q learned queries) with an optional
+    encoder pass to build the FWP link the cache prunes by."""
+    cfg, params, q, refs, x = _combo_setup(packed)
+    if fwp != "off":
+        cfg = dataclasses.replace(cfg, fwp_mode=fwp, fwp_k=1.0,
+                                  fwp_capacity=0.6)
+    key = jax.random.PRNGKey(17 if packed else 19)
+    dq = jax.random.normal(key, (B, N_DEC_Q, cfg.d_model))
+    drefs = jax.random.uniform(jax.random.fold_in(key, 1), (B, N_DEC_Q, 2),
+                               minval=0.05, maxval=0.95)
+    state = None
+    if fwp != "off":
+        plan_e = msda.make_plan(cfg, LEVELS, backend="jnp_gather")
+        _, state = msda.msda_attention(params, plan_e, q, refs, x)
+        assert state.fwp is not None
+    return cfg, params, dq, drefs, x, state
+
+
+@pytest.mark.parametrize("packed", (False, True), ids=("padlane", "packed"))
+@pytest.mark.parametrize("fwp", ("off", "mask", "compact"))
+def test_decode_backend_matches_jnp_all_modes(fwp, packed):
+    """pallas_decode vs the jnp_gather oracle on decode-shaped launches
+    across {FWP off/mask/compact} x {packed/pad-lane}."""
+    cfg, params, dq, drefs, x, state = _decode_setup(packed, fwp)
+    outs = {}
+    for be in ("jnp_gather", "pallas_decode"):
+        plan = msda.make_plan(cfg, LEVELS, backend=be, n_queries=N_DEC_Q,
+                              n_consumers=6)
+        if packed:
+            assert plan.lane_layout == "pack" and plan.head_pack == 4
+        else:
+            assert plan.lane_layout == "pad" and plan.head_pack == 1
+        out, _ = msda.msda_attention(params, plan, dq, drefs, x, state=state)
+        outs[be] = np.asarray(out)
+    np.testing.assert_allclose(outs["pallas_decode"], outs["jnp_gather"],
+                               rtol=2e-5, atol=2e-5)
+
+
+class _StagingSpy:
+    """Counts calls of the once-per-memory decode staging op."""
+    def __init__(self):
+        self.calls = 0
+        self.staged_shapes = []
+        from repro.kernels import msgs_decode
+        self._real = msgs_decode.stage_decode_table
+
+    def __call__(self, *args, **kwargs):
+        self.calls += 1
+        out = self._real(*args, **kwargs)
+        self.staged_shapes.append(tuple(out.v.shape))
+        return out
+
+
+def test_decode_stages_table_once_per_memory_not_per_layer(monkeypatch):
+    """THE persistent-decode contract: a full 6-layer decode against one
+    memory stages the compact table exactly ONCE — the single staged
+    array covers every (batch, head-group) block — never once per
+    layer."""
+    from repro.kernels import msgs_decode
+    cfg, params, _, _, x, state = _decode_setup(True, "compact")
+    dcfg = msda.MSDADecoderConfig(n_layers=6, n_queries=N_DEC_Q, d_ffn=64)
+    dparams = msda.init_decoder(jax.random.PRNGKey(23), dcfg, cfg)
+    plan = msda.make_plan(cfg, LEVELS, backend="pallas_decode",
+                          n_queries=dcfg.n_queries,
+                          n_consumers=dcfg.n_layers)
+    spy = _StagingSpy()
+    monkeypatch.setattr(msgs_decode, "stage_decode_table", spy)
+    h, _, dstate = msda.decoder_apply(dparams, dcfg, plan, x, state)
+    monkeypatch.undo()
+    assert spy.calls == 1, \
+        f"table staged {spy.calls}x for {dcfg.n_layers} layers"
+    # the ONE staging covers all (batch, head-group) blocks of the memory
+    b, n_groups, n_rows, gdh = spy.staged_shapes[0]
+    assert (b, n_groups) == (B, cfg.n_heads // plan.head_pack)
+    assert n_rows == dstate.cache.n_rows
+    assert gdh == plan.head_pack * cfg.head_dim
+    assert dstate.cache.staged is not None
+    assert len(dstate.block_stats) == dcfg.n_layers
+    assert bool(jnp.all(jnp.isfinite(h)))
+
+
+def test_decode_staging_spy_positive_control(monkeypatch):
+    """The spy must catch per-layer restaging through the same execution
+    path: sampling a cache built WITHOUT the staged block (a jnp_gather
+    plan's cache) through pallas_decode pays the fallback staging on
+    every layer — n_layers spy calls, which is exactly what the
+    persistent path eliminates."""
+    from repro.kernels import msgs_decode
+    cfg, params, dq, drefs, x, state = _decode_setup(True, "compact")
+    plan_j = msda.make_plan(cfg, LEVELS, backend="jnp_gather",
+                            n_queries=N_DEC_Q)
+    plan_d = msda.make_plan(cfg, LEVELS, backend="pallas_decode",
+                            n_queries=N_DEC_Q)
+    cache = msda.build_value_cache(params, plan_j, x, state)
+    assert cache.staged is None
+    spy = _StagingSpy()
+    monkeypatch.setattr(msgs_decode, "stage_decode_table", spy)
+    for _ in range(3):
+        msda.msda_attention_cached(params, plan_d, dq, drefs, cache,
+                                   state, update_fwp=False)
+    monkeypatch.undo()
+    assert spy.calls == 3, spy.calls
+
+
+def test_decode_grad_parity_through_full_decoder():
+    """Gradient-parity smoke through the FULL 6-layer decode: the
+    pallas_decode custom_vjp (backward = exact jnp reference) must
+    produce the same loss and parameter gradients as the all-jnp oracle
+    stack — the first trainable Pallas backend."""
+    cfg, params, _, _, x, state = _decode_setup(False, "compact")
+    dcfg = msda.MSDADecoderConfig(n_layers=6, n_queries=N_DEC_Q, d_ffn=64)
+    dparams = msda.init_decoder(jax.random.PRNGKey(29), dcfg, cfg)
+
+    def loss_for(backend):
+        plan = msda.make_plan(cfg, LEVELS, backend=backend,
+                              n_queries=dcfg.n_queries,
+                              n_consumers=dcfg.n_layers)
+
+        def loss(p):
+            h, refs, _ = msda.decoder_apply(p, dcfg, plan, x, state)
+            return jnp.mean(jnp.square(h)) + jnp.mean(refs)
+        return jax.value_and_grad(loss)(dparams)
+
+    val_j, grads_j = loss_for("jnp_gather")
+    val_d, grads_d = loss_for("pallas_decode")
+    np.testing.assert_allclose(float(val_d), float(val_j),
+                               rtol=1e-4, atol=1e-5)
+    flat_j = jax.tree.leaves(grads_j)
+    flat_d = jax.tree.leaves(grads_d)
+    assert len(flat_j) == len(flat_d)
+    for gj, gd in zip(flat_j, flat_d):
+        np.testing.assert_allclose(np.asarray(gd), np.asarray(gj),
+                                   rtol=1e-3, atol=1e-4)
+    # the shared value projection receives gradient through the STAGED
+    # table's custom_vjp (transpose-aware backward)
+    assert float(np.abs(np.asarray(grads_d["value"]["value_w"])).sum()) > 0
 
 
 # --------------------------------------------------------------------------
@@ -296,6 +444,60 @@ def test_plan_decode_shaped_tiling(setup):
     assert not plan.decode_shaped
 
 
+def test_plan_auto_selects_persistent_decode(setup, monkeypatch):
+    """Decode-shaped auto prefers the persistent decode kernel when the
+    once-staged table + one layer's operands fit the staging budget
+    (REPRO_MSDA_VMEM_BUDGET gate, extended with the decode operand
+    accounting); degraded budgets fall back fused -> jnp."""
+    cfg_c = dataclasses.replace(setup[0], fwp_mode="compact",
+                                fwp_capacity=0.6)
+    plan = msda.make_plan(cfg_c, LEVELS, backend="auto", n_queries=40,
+                          n_consumers=6)
+    assert plan.backend == "pallas_decode"
+    assert plan.decode_operand_bytes is not None
+    assert "staged=1x" in plan.describe()
+    assert f"{plan.n_consumers}x table restage" in plan.describe()
+    # a staging budget too small for table+operands rejects the decode
+    # kernel; the whole-table slab still fits the default VMEM budget
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", "1000")
+    plan = msda.make_plan(cfg_c, LEVELS, backend="auto", n_queries=40)
+    assert plan.backend == "pallas_fused"
+    # WORST-CASE rule: a decoder fed no FWP link stages the DENSE table
+    # (build_value_cache's documented fallback), so a budget between the
+    # compact and dense footprints must ALSO reject the decode kernel —
+    # same argument as value_rows() and the windowed max(dense, compact)
+    dense = plan.n_in * 128 * jnp.dtype(cfg_c.dtype).itemsize
+    assert plan.cache_table_bytes < dense
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", str(dense - 1))
+    plan = msda.make_plan(cfg_c, LEVELS, backend="auto", n_queries=40)
+    assert plan.backend == "pallas_fused"
+    # and with the VMEM slab gone too, the oracle path remains
+    plan = msda.make_plan(cfg_c, LEVELS, backend="auto", n_queries=40,
+                          vmem_budget_bytes=1024)
+    assert plan.backend == "jnp_gather"
+
+
+def test_plan_decode_only_backend_rejected_for_raster(setup):
+    """pallas_decode needs a decode-shaped plan: raster launches (no
+    n_queries, or n_queries == N_in) must be rejected at plan time."""
+    with pytest.raises(ValueError):
+        msda.make_plan(setup[0], LEVELS, backend="pallas_decode")
+    with pytest.raises(ValueError):
+        msda.make_plan(setup[0], LEVELS, backend="pallas_decode",
+                       n_queries=N_IN)
+
+
+def test_backend_registry_metadata():
+    """The planner consults registry metadata, not name prefixes: the
+    windowed kernel is raster-only, the decode kernel decode-only, and
+    unregistered probes default to geometry-neutral."""
+    assert msda.backend_info("pallas_windowed").raster_only
+    assert not msda.backend_info("pallas_windowed").decode_only
+    assert msda.backend_info("pallas_decode").decode_only
+    assert not msda.backend_info("jnp_gather").raster_only
+    assert msda.backend_info("never_registered") == msda.BackendInfo()
+
+
 def test_plan_auto_falls_to_jnp_without_range_narrowing(setup):
     cfg = dataclasses.replace(setup[0], range_narrow=None)
     plan = msda.make_plan(cfg, LEVELS, backend="auto", vmem_budget_bytes=1024)
@@ -350,7 +552,7 @@ def test_plan_legacy_impl_mapping(setup):
 
 
 def test_registry_lists_all_builtins():
-    for name in ALL_BACKENDS:
+    for name in ALL_BACKENDS + ("pallas_decode",):
         assert name in msda.available_backends()
         assert callable(msda.get_backend(name))
 
