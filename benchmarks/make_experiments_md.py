@@ -226,6 +226,46 @@ def main() -> None:
                     f"structural (one table fetch per (b, group)), not "
                     f"wall-time.")
         parts.append("\n")
+    reuse = bench.get("fmap_reuse_vmem", {})
+    micro = bench.get("micro", {})
+    if "stream_bytes_ratio" in reuse:
+        r = reuse
+        parts.append(
+            f"\n**Streaming detection (temporal feature-map reuse)** — the "
+            f"frame-to-frame extension of the build-once story: a "
+            f"`TemporalCacheManager` (repro/stream/) diffs each video "
+            f"frame's multi-scale memory at row-aligned tile granularity "
+            f"and re-projects/re-stages ONLY the dirty slots of the "
+            f"persistent value cache (scattered through the existing "
+            f"pix2slot geometry), with FWP scores carried as a streaming "
+            f"EMA under keep-mask hysteresis. On the measured "
+            f"{r['stream_frames']}-frame drifting-scene benchmark: "
+            f"rebuild-per-frame {r['stream_rebuild_total_kb']:.0f} KB vs "
+            f"incremental {r['stream_staged_total_kb']:.0f} KB staged = "
+            f"**{r['stream_bytes_ratio']:.2f}x fewer bytes** "
+            f"({r['stream_incremental_frames']}/{r['stream_frames']} frames "
+            f"incremental at <= {r['stream_update_rows']}/"
+            f"{r['stream_slots']} rows/frame; "
+            f"{r['stream_rebuild_frames']} full rebuilds incl. the warm-up "
+            f"keep transitions the hysteresis then suppresses). This is a "
+            f"measurement — how many tiles the moving object dirties and "
+            f"how often the keep set churns decide it — not a "
+            f"by-construction ratio.")
+        if "msda_stream_incremental" in micro \
+                and "msda_stream_rebuild" in micro:
+            i_us = micro["msda_stream_incremental"]["us_per_call"]
+            b_us = micro["msda_stream_rebuild"]["us_per_call"]
+            parts.append(
+                f" Wall time per frame (d_model=256, 32x40 pyramid, "
+                f"interpret-mode structural): incremental "
+                f"{i_us/1000:.1f} ms vs full rebuild {b_us/1000:.1f} ms "
+                f"(`msda_stream_incremental` vs `msda_stream_rebuild`, "
+                f"both under the CI regression gate); at the paper's "
+                f"100x167 geometry the measured gap widens to ~2x but is "
+                f"too noisy for the gate. End-to-end driver: "
+                f"`examples/detr_stream.py` (N sessions, batched slots, "
+                f"decoder-frequency EMA feedback).")
+        parts.append("\n")
     if "fig9_table1" in bench and "baseline" in bench.get("fig9_table1", {}):
         r = bench["fig9_table1"]
         parts.append(

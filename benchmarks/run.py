@@ -105,6 +105,13 @@ def main() -> None:
                      f"{r['decoder_rebuild_kb']:.0f}KB rebuild-per-layer -> "
                      f"{r['decoder_cache_once_kb']:.0f}KB build-once "
                      f"({r['decoder_reuse_ratio']:.1f}x)"))
+        rows.append(("fmap_reuse_stream", 0.0,
+                     f"{r['stream_frames']}-frame drifting scene staged "
+                     f"bytes {r['stream_rebuild_total_kb']:.0f}KB "
+                     f"rebuild-per-frame -> "
+                     f"{r['stream_staged_total_kb']:.0f}KB incremental "
+                     f"({r['stream_bytes_ratio']:.2f}x measured, "
+                     f"{r['stream_rebuild_frames']} rebuild frames)"))
         print(f"[fmap-reuse] windowed kernel working set: "
               f"{r['total_vmem_full_kb']:.0f} KB -> "
               f"{r['total_vmem_window_kb']:.0f} KB ({r['total_ratio']:.1f}x)")
@@ -112,6 +119,10 @@ def main() -> None:
               f"layers): {r['decoder_rebuild_kb']:.0f} KB rebuild -> "
               f"{r['decoder_cache_once_kb']:.0f} KB build-once "
               f"({r['decoder_reuse_ratio']:.1f}x)")
+        print(f"[fmap-reuse] streaming ({r['stream_frames']} frames, "
+              f"measured): {r['stream_rebuild_total_kb']:.0f} KB "
+              f"rebuild-per-frame -> {r['stream_staged_total_kb']:.0f} KB "
+              f"incremental ({r['stream_bytes_ratio']:.2f}x)")
 
     if want("decoder"):
         from benchmarks.detr_toy import (eval_ap, train_toy_decoder_detector,

@@ -86,6 +86,28 @@ def build_fwp_state(
 
     if mode != "compact":
         raise ValueError(f"unknown FWP mode {mode!r}")
+    # Rank pixels by (above-threshold, frequency): capacity fills with the
+    # most frequently sampled surviving pixels first. Below-threshold pixels
+    # may pad the capacity (static shapes) but are NEVER routed to — the
+    # threshold mask is strictly honoured, so compact == mask whenever the
+    # capacity covers every survivor (property-tested).
+    score = freq + keep_mask.astype(jnp.float32) * (jnp.max(freq) + 1.0)
+    return _compact_from_scores(freq, score, keep_mask, level_shapes, capacity)
+
+
+def _compact_from_scores(
+    freq: jnp.ndarray,                  # (B, N_in) raw counts / EMA scores
+    score: jnp.ndarray,                 # (B, N_in) capacity ranking score
+    keep_mask: jnp.ndarray,             # (B, N_in) bool threshold decision
+    level_shapes: Sequence[Tuple[int, int]],
+    capacity: float,
+) -> FWPState:
+    """Shared compact-geometry construction: per-level capacity top-k on
+    ``score``, raster-sorted slots, pix2slot with sentinel routing for
+    every below-threshold pixel. Both the one-shot ranking
+    (:func:`build_fwp_state`) and the temporal hysteresis ranking
+    (:func:`build_fwp_state_hysteresis`) end here, so the geometry
+    invariants (raster order, slot windows, round-trip) are proved once."""
     starts, n_in = level_starts(level_shapes)
     caps = level_capacities(level_shapes, capacity)
     cap_total = sum(caps)
@@ -93,12 +115,6 @@ def build_fwp_state(
 
     keep_parts, slot_parts = [], []
     slot_off = 0
-    # Rank pixels by (above-threshold, frequency): capacity fills with the
-    # most frequently sampled surviving pixels first. Below-threshold pixels
-    # may pad the capacity (static shapes) but are NEVER routed to — the
-    # threshold mask is strictly honoured, so compact == mask whenever the
-    # capacity covers every survivor (property-tested).
-    score = freq + keep_mask.astype(jnp.float32) * (jnp.max(freq) + 1.0)
     for li, ((h, w), s, c) in enumerate(zip(level_shapes, starts, caps)):
         score_l = jax.lax.dynamic_slice_in_dim(score, int(s), h * w, axis=1)
         _, idx_l = jax.lax.top_k(score_l, c)                      # (B, c)
@@ -120,6 +136,81 @@ def build_fwp_state(
         surviving, jnp.broadcast_to(slots, keep_idx.shape), cap_total)
     pix2slot = pix2slot.at[bidx, keep_idx].set(slot_or_sentinel)
     return FWPState(keep_mask=keep_mask, keep_idx=keep_idx, pix2slot=pix2slot, freq=freq)
+
+
+# --------------------------------------------------------------------------
+# Temporal (streaming) FWP: EMA scores + keep-mask hysteresis
+# --------------------------------------------------------------------------
+
+def ema_update(ema: jnp.ndarray, freq: jnp.ndarray,
+               alpha: float) -> jnp.ndarray:
+    """Streaming frequency score: ``ema' = (1-alpha)·ema + alpha·freq``.
+
+    Video frames are a slowly-changing signal, so the pruning decision
+    should integrate sampling frequency over time instead of reacting to
+    one frame's counts — the EMA is what the hysteresis thresholds read."""
+    a = float(alpha)
+    return (1.0 - a) * ema + a * freq
+
+
+def build_fwp_state_hysteresis(
+    ema: jnp.ndarray,                   # (B, N_in) streaming EMA scores
+    level_shapes: Sequence[Tuple[int, int]],
+    *,
+    k_enter: float,
+    k_exit: float,
+    mode: str,                           # "mask" | "compact"
+    capacity: float = 0.6,
+    prev: Optional[FWPState] = None,
+) -> FWPState:
+    """FWP keep decision with per-pixel hysteresis for streaming reuse.
+
+    Two per-level thresholds (Eq. 2 shape, two k's): a pixel ENTERS the
+    keep set only when its EMA score clears ``T_enter = k_enter·mean_l``
+    and EXITS only when it falls below ``T_exit = k_exit·mean_l``
+    (``k_enter >= k_exit``); in between, the previous frame's decision
+    sticks. Bounded per-frame score drift therefore implies bounded
+    keep churn: a pixel can only change state when its previous score was
+    within ``(1+k)·drift`` of the corresponding threshold
+    (property-tested in tests/test_fwp_invariants.py).
+
+    Compact mode additionally ranks the capacity fill with an INCUMBENCY
+    tier: kept incumbents (pixels already holding a slot) outrank kept
+    newcomers, which outrank unkept incumbents, which outrank unkept
+    padding — so every kept incumbent retains a slot (capacity
+    permitting) and ``keep_idx`` churn is driven by mask churn, not by
+    marginal score reshuffles. Slots stay raster-ordered per level
+    (same :func:`_compact_from_scores` construction as the one-shot
+    build), which is what keeps compact-slot windows stable for the
+    streaming tile updates."""
+    if k_enter < k_exit:
+        raise ValueError(
+            f"hysteresis needs k_enter >= k_exit (got {k_enter} < {k_exit})")
+    t_enter = _per_level_threshold(ema, level_shapes, k_enter)
+    t_exit = _per_level_threshold(ema, level_shapes, k_exit)
+    if prev is None:
+        prev_kept = jnp.zeros(ema.shape, bool)
+    else:
+        prev_kept = prev.keep_mask
+    keep_mask = (ema >= t_enter) | (prev_kept & (ema >= t_exit))
+    if mode == "mask":
+        return FWPState(keep_mask=keep_mask, keep_idx=None, pix2slot=None,
+                        freq=ema)
+    if mode != "compact":
+        raise ValueError(f"unknown FWP mode {mode!r}")
+
+    incumbent = jnp.zeros(ema.shape, bool)
+    if prev is not None and prev.keep_idx is not None:
+        b = ema.shape[0]
+        bidx = jnp.broadcast_to(jnp.arange(b)[:, None], prev.keep_idx.shape)
+        incumbent = incumbent.at[bidx, prev.keep_idx].set(True)
+    # Tiered ranking (strictly ordered because m > max(ema)):
+    #   kept incumbent (ema+3m) > kept newcomer (ema+2m)
+    #   > unkept incumbent (ema+m) > unkept padding (ema).
+    m = jnp.max(ema) + 1.0
+    score = ema + keep_mask.astype(jnp.float32) * (2.0 * m) \
+        + incumbent.astype(jnp.float32) * m
+    return _compact_from_scores(ema, score, keep_mask, level_shapes, capacity)
 
 
 def fwp_sparsity(state: FWPState) -> jnp.ndarray:

@@ -43,17 +43,39 @@ def dequantize(q: jnp.ndarray, s: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray
 
 @partial(jax.jit, static_argnames=("bits", "axis"))
 def fake_quant(x: jnp.ndarray, bits: int = 12, axis: Optional[int] = None) -> jnp.ndarray:
-    """quantize→dequantize with a straight-through estimator for training."""
-    s = quant_scale(x, bits, axis)
-    y = jnp.clip(jnp.round(x / s), -qmax(bits) - 1, qmax(bits)) * s
-    # straight-through: identity gradient
-    return x + jax.lax.stop_gradient(y - x)
+    """quantize→dequantize with a straight-through estimator for training.
+
+    One formula with :func:`fake_quant_with_scale` (the scale is just
+    derived here vs frozen there) — full builds and streaming incremental
+    updates must quantize on the SAME grid."""
+    return fake_quant_with_scale(x, bits, quant_scale(x, bits, axis))
 
 
 def maybe_fake_quant(x: jnp.ndarray, bits: Optional[int], axis: Optional[int] = None):
     if bits is None or bits <= 0:
         return x
     return fake_quant(x, bits, axis)
+
+
+def fake_quant_with_scale(x: jnp.ndarray, bits: int,
+                          scale: jnp.ndarray) -> jnp.ndarray:
+    """quantize→dequantize against a FROZEN scale.
+
+    The streaming incremental value-table update re-projects only a row
+    subset, but the whole table must share ONE quantization grid — a
+    per-subset scale would make updated rows incommensurable with the
+    rest of the table. The scale is captured at the last full build
+    (``quant_scale`` of the staged table) and reused for every
+    incremental row update until the next full rebuild refreshes it."""
+    y = jnp.clip(jnp.round(x / scale), -qmax(bits) - 1, qmax(bits)) * scale
+    return x + jax.lax.stop_gradient(y - x)
+
+
+def maybe_fake_quant_with_scale(x: jnp.ndarray, bits: Optional[int],
+                                scale: Optional[jnp.ndarray]):
+    if bits is None or bits <= 0 or scale is None:
+        return x
+    return fake_quant_with_scale(x, bits, scale)
 
 
 def pack_int8(x: jnp.ndarray):

@@ -120,6 +120,30 @@ def stage_decode_table(v: jnp.ndarray,
                              head_pack=g, dh=dh, table_bytes=table_bytes)
 
 
+def update_staged_rows(staged: DecodeStagedTable,
+                       row_idx: jnp.ndarray,       # (B, U) int32 table rows
+                       rows: jnp.ndarray,          # (B, U, H, Dh) new values
+                       ) -> DecodeStagedTable:
+    """Scatter re-projected rows into the staged decode layout IN PLACE
+    (functionally): the streaming temporal-reuse path updates only the
+    changed tiles' slots of one persistent staged table instead of
+    re-running :func:`stage_decode_table` per frame. The row subset is
+    re-packed exactly like the full staging ((B, U, H, Dh) ->
+    per-group (B, n_groups, U, G·Dh)) and scattered along the row axis,
+    so the staged block stays bit-identical to a fresh
+    ``stage_decode_table`` of the updated table (parity-tested). The
+    ``remap`` indirection is untouched — a tile update never changes the
+    keep geometry (keep transitions trigger a full rebuild instead)."""
+    b, u, h, dh = rows.shape
+    g = staged.head_pack
+    n_groups = staged.v.shape[1]
+    packed = rows.reshape(b, u, n_groups, g * dh).transpose(0, 2, 1, 3)
+    bidx = jnp.arange(b)[:, None, None]
+    gidx = jnp.arange(n_groups)[None, :, None]
+    new_v = staged.v.at[bidx, gidx, row_idx[:, None, :]].set(packed)
+    return dataclasses.replace(staged, v=new_v)
+
+
 # --------------------------------------------------------------------------
 # kernel body — one (batch, head-group, query-tile, layer) grid step
 # --------------------------------------------------------------------------

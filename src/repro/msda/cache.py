@@ -32,7 +32,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core import fwp as fwp_lib
-from repro.core.quant import maybe_fake_quant
+from repro.core.quant import (maybe_fake_quant, maybe_fake_quant_with_scale,
+                              quant_scale)
 
 
 class MSDAValueCache(NamedTuple):
@@ -129,3 +130,89 @@ def build_value_cache(params: dict, plan, x_flat: jnp.ndarray,
     return MSDAValueCache(v=v, pix2slot=pix2slot, keep_idx=keep_idx,
                           n_rows=n_rows, slot_windows=slot_windows,
                           table_bytes=table_bytes, staged=staged)
+
+
+# --------------------------------------------------------------------------
+# Incremental (streaming) row updates — temporal feature-map reuse
+# --------------------------------------------------------------------------
+
+def cache_act_scale(cache: MSDAValueCache, cfg) -> Optional[jnp.ndarray]:
+    """The frozen activation-quant scale of a built cache.
+
+    ``project_values`` fake-quants the table per-tensor; the scale it
+    used is recoverable from the built table (the max-magnitude element
+    quantizes onto the grid's endpoint, so ``quant_scale`` of the staged
+    values reproduces it up to float rounding). Streaming row updates
+    re-quantize against THIS scale so partial updates stay on the same
+    grid as the surrounding table (see ``fake_quant_with_scale``)."""
+    if cfg.act_bits is None or cfg.act_bits <= 0:
+        return None
+    return quant_scale(cache.v, cfg.act_bits)
+
+
+def project_cache_rows(params: dict, cfg, x_flat: jnp.ndarray,
+                       pix_idx: jnp.ndarray,
+                       keep_mask: Optional[jnp.ndarray] = None,
+                       act_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Value-project a PIXEL-ROW subset of one memory.
+
+    ``pix_idx`` (B, U) selects the pixels whose table rows are being
+    refreshed (a changed tile's kept pixels); returns (B, U, H, Dh) rows
+    computed exactly like the corresponding rows of a full
+    :func:`project_values` build: same weight fake-quant, same bias,
+    mask-mode zeroing via ``keep_mask``, and activation fake-quant
+    against the FROZEN ``act_scale`` (partial updates must share the full
+    build's quantization grid). jit-safe — every input is an array."""
+    wq = lambda w: maybe_fake_quant(w, cfg.weight_bits)
+    x_rows = jnp.take_along_axis(x_flat, pix_idx[..., None], axis=1)
+    if keep_mask is not None:                        # fwp_mode == "mask"
+        m_rows = jnp.take_along_axis(keep_mask, pix_idx, axis=1)
+        x_rows = x_rows * m_rows[..., None].astype(x_rows.dtype)
+    rows = jnp.einsum("bnd,dhk->bnhk", x_rows, wq(params["value_w"])) \
+        + params["value_b"]
+    if keep_mask is not None:
+        rows = rows * m_rows[..., None, None].astype(rows.dtype)
+    return maybe_fake_quant_with_scale(rows, cfg.act_bits, act_scale)
+
+
+def scatter_table_rows(v: jnp.ndarray, slot_idx: jnp.ndarray,
+                       rows: jnp.ndarray) -> jnp.ndarray:
+    """Scatter (B, U, H, Dh) rows into the (B, N_rows, H, Dh) table."""
+    bidx = jnp.arange(v.shape[0])[:, None]
+    return v.at[bidx, slot_idx].set(rows)
+
+
+def update_value_cache_rows(params: dict, plan, cache: MSDAValueCache,
+                            x_flat: jnp.ndarray, slot_idx: jnp.ndarray,
+                            act_scale: Optional[jnp.ndarray] = None,
+                            keep_mask: Optional[jnp.ndarray] = None,
+                            ) -> Tuple[MSDAValueCache, int]:
+    """In-place (functional) tile update of a built value cache.
+
+    Re-projects the ``slot_idx`` (B, U) table rows from the NEW memory
+    ``x_flat`` and scatters them into ``cache.v`` — and, when the plan
+    staged the decode layout, into ``cache.staged`` via
+    ``update_staged_rows`` — leaving the keep geometry (``pix2slot`` /
+    ``keep_idx`` / ``slot_windows``) untouched: a tile update never
+    changes WHICH pixels hold slots, only their values (keep transitions
+    rebuild instead). Returns ``(cache', staged_bytes_delta)`` where the
+    delta is the per-(batch, head-group) bytes this partial restage
+    actually moved — ``U`` rows under the plan's lane layout, with NO
+    pix2slot restage — the unit the streaming rebuild-vs-incremental
+    comparison is measured in (vs ``cache.table_bytes`` for a full
+    build)."""
+    cfg = plan.cfg
+    u = slot_idx.shape[1]
+    if cache.keep_idx is not None:                   # compact: slot -> pixel
+        pix_idx = jnp.take_along_axis(cache.keep_idx, slot_idx, axis=1)
+    else:                                            # dense/mask: slot == pixel
+        pix_idx = slot_idx
+    rows = project_cache_rows(params, cfg, x_flat, pix_idx,
+                              keep_mask=keep_mask, act_scale=act_scale)
+    v = scatter_table_rows(cache.v, slot_idx, rows)
+    staged = cache.staged
+    if staged is not None:
+        from repro.kernels import msgs_decode as msgs_decode_kernel
+        staged = msgs_decode_kernel.update_staged_rows(staged, slot_idx, rows)
+    delta_bytes = plan.table_bytes_for_rows(u, with_indirection=False)
+    return cache._replace(v=v, staged=staged), delta_bytes

@@ -146,29 +146,37 @@ def decoder_apply(
     state: Optional[MSDAPipelineState] = None,
     *,
     collect_stats: bool = False,
+    cache=None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, MSDAPipelineState]:
     """Run the decoder stack against ONE shared value cache.
 
     ``state`` carries the encoder chain's final FWP link — its compaction
     decides the cache layout, so the decoder samples the same pruned
-    table the last encoder block produced. Returns
-    (h (B, N_q, D), refs (B, N_q, 2), decoder state). The returned
-    state's ``block_stats`` has exactly one aligned entry per decoder
-    layer and its ``cache`` is the shared table (``cache.table_bytes``
-    is the build-once staging cost every layer amortizes)."""
+    table the last encoder block produced. ``cache`` lets a temporal
+    consumer (the streaming engine) pass in a PERSISTENT, incrementally
+    updated :class:`~repro.msda.cache.MSDAValueCache` instead of building
+    one here — the frame-to-frame extension of the same build-once seam.
+    Returns (h (B, N_q, D), refs (B, N_q, 2), decoder state). The
+    returned state's ``block_stats`` has exactly one aligned entry per
+    decoder layer and its ``cache`` is the shared table
+    (``cache.table_bytes`` is the build-once staging cost every layer
+    amortizes); a streaming caller's ``state.stream`` accounting is
+    carried through."""
     b = memory.shape[0]
     attn_cfg = plan.cfg
 
     # ---- build ONCE: the shared, optionally FWP-compacted value table ----
-    cache = build_value_cache(params["value"], plan, memory, state)
+    if cache is None:
+        cache = build_value_cache(params["value"], plan, memory, state)
     if plan.backend == "pallas_decode":
-        # the persistent decode contract: the table was staged HERE, once
-        # per memory — a missing staged block would silently degrade every
-        # layer to a per-launch restage
+        # the persistent decode contract: the table was staged at build
+        # time, once per memory — a missing staged block would silently
+        # degrade every layer to a per-launch restage
         assert cache.staged is not None, \
             "pallas_decode plan produced an unstaged cache"
     dstate = MSDAPipelineState(
-        fwp=getattr(state, "fwp", None)).with_cache(cache)
+        fwp=getattr(state, "fwp", None),
+        stream=getattr(state, "stream", None)).with_cache(cache)
 
     pos = params["query_pos"][None]                       # (1, Nq, D)
     h = jnp.broadcast_to(params["tgt_embed"][None],

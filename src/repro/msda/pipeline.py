@@ -49,6 +49,11 @@ class MSDAPipelineState:
     #   i belongs to block i (None when that block didn't collect)
     cache: Optional[MSDAValueCache] = None   # shared value cache (decoder /
     #   any build-once-sample-everywhere consumer); advance() preserves it
+    stream: Optional[dict] = None        # temporal-reuse accounting for the
+    #   frame this state belongs to (streaming sessions only): mode
+    #   ("rebuild" | "incremental"), staged/rebuild bytes, dirty-tile
+    #   counts — attached by the TemporalCacheManager, preserved by
+    #   advance() so every layer's consumer can read the frame's reuse story
 
     @classmethod
     def initial(cls) -> "MSDAPipelineState":
@@ -64,11 +69,15 @@ class MSDAPipelineState:
         return MSDAPipelineState(
             fwp=fwp, block_index=self.block_index + 1,
             block_stats=self.block_stats + (stats,),
-            cache=self.cache)
+            cache=self.cache, stream=self.stream)
 
     def with_cache(self, cache: Optional[MSDAValueCache]) -> "MSDAPipelineState":
         """Attach (or clear) the shared value cache, keeping the chain."""
         return dataclasses.replace(self, cache=cache)
+
+    def with_stream(self, stream: Optional[dict]) -> "MSDAPipelineState":
+        """Attach (or clear) the frame's temporal-reuse accounting."""
+        return dataclasses.replace(self, stream=stream)
 
     def collected_stats(self) -> Tuple[dict, ...]:
         """Only the blocks that actually collected (drops the Nones)."""

@@ -53,11 +53,34 @@ DEFAULT_WINDOW_STAGING_BUDGET = 4 * 1024 * 1024
 _LANE_WIDTH = 128
 
 
+@functools.lru_cache(maxsize=16)
+def _parse_budget_env(raw: str) -> int:
+    """Parse one observed ``REPRO_MSDA_VMEM_BUDGET`` value.
+
+    Cached per distinct raw string: the parse (and its validation) runs
+    once per process for a stable env, while CHANGING the env mid-process
+    still re-parses (and ``plan_for`` keys its memo on the resolved
+    budget, so no stale plan is served either way)."""
+    try:
+        # decimal (leading zeros allowed) or explicit 0x.. hex
+        base = 16 if raw.strip().lower().lstrip("+-").startswith("0x") else 10
+        value = int(raw, base)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_MSDA_VMEM_BUDGET must be an integer byte count "
+            f"(e.g. 4194304), got {raw!r}") from None
+    if value <= 0:
+        raise ValueError(
+            f"REPRO_MSDA_VMEM_BUDGET must be a positive byte count, "
+            f"got {value}")
+    return value
+
+
 def window_staging_budget() -> int:
     """The windowed kernel's staged-window budget (env-overridable)."""
     env = os.environ.get("REPRO_MSDA_VMEM_BUDGET")
     if env:
-        return int(env)
+        return _parse_budget_env(env)
     return DEFAULT_WINDOW_STAGING_BUDGET
 
 
@@ -151,6 +174,11 @@ class MSDAPlan:
     #   per-layer point/probability/output blocks staged per
     #   (batch, head-group) launch step — the part that IS per-layer even
     #   when the table is staged once (stacked n_consumers x in describe())
+    stream_update_rows: Optional[int] = None     # streaming temporal reuse:
+    #   static per-frame re-projection budget (table rows refreshed by an
+    #   incremental frame update); None => no streaming consumer. Drives
+    #   the rebuild-vs-incremental staged-bytes accounting in describe()
+    #   and the TemporalCacheManager's update capacity (repro/stream/)
 
     @property
     def fits_vmem(self) -> bool:
@@ -230,6 +258,17 @@ class MSDAPlan:
                       f"{self.n_consumers}x{ob/1024:.0f}KB operands "
                       f"(vs {self.n_consumers}x table restage "
                       f"{self.n_consumers*cb/1024:.0f}KB)")
+        if self.stream_update_rows is not None:
+            # temporal (frame-to-frame) reuse accounting: an incremental
+            # frame update re-projects/re-stages at most stream_update_rows
+            # table rows (no pix2slot restage — the keep geometry is fixed
+            # between keep transitions) vs a full per-frame cache rebuild
+            ub = self.table_bytes_for_rows(self.stream_update_rows,
+                                           with_indirection=False)
+            cb = self.cache_table_bytes
+            q += (f", stream<={self.stream_update_rows}rows/frame "
+                  f"({ub/1024:.0f}KB vs {cb/1024:.0f}KB rebuild, "
+                  f"{cb/max(ub, 1):.1f}x)")
         return (f"MSDAPlan(backend={self.backend}, block_q={self.block_q}, "
                 f"block_q_levels={self.block_q_levels}, "
                 f"lanes={self.lane_layout}x{self.head_pack}, "
@@ -243,7 +282,8 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
               block_q: int = 128,
               vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
               n_queries: Optional[int] = None,
-              n_consumers: int = 1) -> MSDAPlan:
+              n_consumers: int = 1,
+              stream_update_rows: Optional[int] = None) -> MSDAPlan:
     """Resolve the static plan.
 
     Backend precedence: explicit ``backend`` arg > ``cfg.backend`` >
@@ -269,7 +309,12 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
 
     ``n_consumers``: how many attention layers will sample ONE built value
     cache (decoder: n_layers). Accounting only — surfaced by
-    ``describe()`` and the fmap-reuse benchmark."""
+    ``describe()`` and the fmap-reuse benchmark.
+
+    ``stream_update_rows``: the streaming temporal-reuse consumer's static
+    per-frame re-projection budget (see ``repro/stream/``). Accounting +
+    capacity only — surfaced by ``describe()`` and consumed by the
+    ``TemporalCacheManager`` as its incremental update cap."""
     from repro.msda import backends as backend_registry
 
     level_shapes = tuple((int(h), int(w)) for h, w in level_shapes)
@@ -390,7 +435,8 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
                     window_bytes=window_bytes,
                     window_bytes_compact=window_bytes_compact,
                     n_queries=n_queries, n_consumers=n_consumers,
-                    decode_operand_bytes=decode_operand_bytes)
+                    decode_operand_bytes=decode_operand_bytes,
+                    stream_update_rows=stream_update_rows)
 
 
 def plan_for(cfg, level_shapes: Tuple[Tuple[int, int], ...],

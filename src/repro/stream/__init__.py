@@ -1,0 +1,26 @@
+"""repro.stream — temporal feature-map reuse for streaming video.
+
+The frame-to-frame extension of DEFA's feature-map reusing: PRs 3–4
+amortized the value-cache build across decoder layers of ONE memory;
+this subsystem amortizes it across FRAMES of a video stream. A
+:class:`TemporalCacheManager` diffs each incoming frame's multi-scale
+memory against its diff reference at row-aligned tile granularity,
+re-projects and re-stages only the changed tiles' slots into the
+persistent :class:`~repro.msda.cache.MSDAValueCache` (scattering through
+the existing pix2slot geometry, including the persistent decode
+staging), and runs the FWP keep decision as a streaming EMA with
+keep-mask hysteresis so slot geometry stays stable between (rare) keep
+transitions. ``serve.engine.StreamingDetrEngine`` maps N concurrent
+video sessions onto the manager's batch slots; the driver is
+``examples/detr_stream.py``.
+"""
+from repro.stream.synthetic import drifting_scene
+from repro.stream.temporal import (StreamConfig, TemporalCacheManager,
+                                   plan_slot_count, stream_update_cap)
+from repro.stream.tiles import TileGeometry, changed_tiles, tile_geometry
+
+__all__ = [
+    "StreamConfig", "TemporalCacheManager", "plan_slot_count",
+    "stream_update_cap",
+    "TileGeometry", "changed_tiles", "tile_geometry", "drifting_scene",
+]

@@ -1,0 +1,375 @@
+"""TemporalCacheManager — frame-to-frame value-cache reuse for streaming.
+
+PRs 3–4 amortized the value-cache build across decoder *layers* (build
+once per memory, sample everywhere). A video stream adds the temporal
+axis: consecutive frames' encoder memories are a slowly-changing signal,
+yet a naive deployment re-projects, re-compacts and re-stages the whole
+table every frame. This manager treats the cache as PERSISTENT state:
+
+  * **tile diff** — each incoming frame is diffed against ``x_ref`` (the
+    memory as of each tile's last re-projection) at row-aligned tile
+    granularity (:mod:`repro.stream.tiles`); only tiles whose max-abs
+    feature delta clears ``delta_threshold`` are re-projected.
+  * **static update capacity** — the incremental path re-projects at most
+    ``update_rows`` table rows per frame (a static budget, same
+    shape-discipline as FWP's static capacity): the dirty slots are
+    gathered, projected as a (B, U, D) matmul, and scattered into the
+    existing table — and into the persistent decode staging
+    (``kernels/msgs_decode.update_staged_rows``) — via the existing
+    pix2slot geometry. Frames with more dirty slots than the budget fall
+    back to a full rebuild (host-side decision, two compiled paths, no
+    per-pattern recompilation).
+  * **streaming FWP** — sampling frequencies feed an EMA
+    (:func:`repro.core.fwp.ema_update`) and the keep decision runs with
+    keep-mask hysteresis (:func:`repro.core.fwp.build_fwp_state_hysteresis`),
+    so ``keep_idx`` churn is bounded and the compact-slot windows stay
+    stable; a keep-geometry transition (rare by construction) triggers a
+    full rebuild on the next frame.
+  * **frozen quant scale** — partial updates fake-quant against the scale
+    captured at the last full build (the whole table must share one
+    grid); full rebuilds refresh it.
+
+Accounting: every frame records mode (``rebuild`` | ``incremental``),
+the staged-bytes delta actually moved, and what a full per-frame rebuild
+would have staged — the rebuild-vs-incremental story
+``benchmarks/fmap_reuse.py`` and the ``msda_stream_*`` microbench rows
+report. With ``delta_threshold=0`` every tile is marked changed and the
+incremental path reproduces a full rebuild bit-for-bit (parity-tested
+across keep transitions in tests/test_stream.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fwp as fwp_lib
+from repro.msda.cache import (MSDAValueCache, build_value_cache,
+                              cache_act_scale, update_value_cache_rows)
+from repro.msda.pipeline import MSDAPipelineState
+from repro.stream.tiles import TileGeometry, changed_tiles, tile_geometry
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static knobs of the temporal-reuse subsystem."""
+    tile_rows: int = 2            # rows per diff tile (per level, row-aligned)
+    delta_threshold: float = 1e-5  # max-abs feature drift a stale row may carry
+    #   (0 => every tile changed every frame: the parity mode)
+    update_frac: float = 0.25     # static per-frame re-projection budget as a
+    #   fraction of the table's updatable rows (overridden by
+    #   plan.stream_update_rows when the plan carries one)
+    ema_alpha: float = 0.25       # streaming frequency EMA coefficient
+    hyst_enter: float = 1.25      # k_enter = fwp_k * hyst_enter
+    hyst_exit: float = 0.75       # k_exit  = fwp_k * hyst_exit
+    diff_channel_stride: int = 1  # tile diffing probes every s-th feature
+    #   channel (1 = exact). The diff (and the stored reference) is
+    #   O(N_in·D/s): a real knob on bandwidth-starved hosts, at the cost
+    #   of missing a change confined to unprobed channels — the
+    #   re-projection itself always reads the FULL current features, so a
+    #   probed diff only delays a sub-probe change, never corrupts rows
+    #   it does update
+
+
+def plan_slot_count(plan) -> int:
+    """Updatable table rows of a plan's cache (compact: the capacity
+    slots, excluding the zero sentinel; else every pixel row). The ONE
+    derivation behind both the manager's slot space and the update cap."""
+    cfg = plan.cfg
+    if cfg.fwp_mode == "compact":
+        return sum(fwp_lib.level_capacities(plan.level_shapes,
+                                            cfg.fwp_capacity))
+    return plan.n_in
+
+
+def stream_update_cap(plan, update_frac: float) -> int:
+    """The static incremental budget: rows re-projected per frame."""
+    n_slots = plan_slot_count(plan)
+    return max(1, min(n_slots, int(round(update_frac * n_slots))))
+
+
+class TemporalCacheManager:
+    """Persistent, incrementally updated MSDAValueCache for one stream.
+
+    ``batch`` is the number of concurrent sessions sharing the manager
+    (the streaming engine maps sessions onto batch slots); every slot
+    carries its own diff reference, EMA scores and keep geometry rows.
+    Host-side control flow picks between two jitted paths per frame
+    (incremental update vs full rebuild); all heavy compute is jitted
+    over arrays, so nothing retraces frame to frame."""
+
+    def __init__(self, plan, value_params: dict,
+                 scfg: StreamConfig = StreamConfig(), *, batch: int = 1):
+        cfg = plan.cfg
+        if cfg.fwp_mode not in ("off", "mask", "compact"):
+            raise ValueError(f"unknown fwp_mode {cfg.fwp_mode!r}")
+        self.plan = plan
+        self.params = value_params
+        self.scfg = scfg
+        self.batch = int(batch)
+        self.geo: TileGeometry = tile_geometry(plan.level_shapes,
+                                               scfg.tile_rows)
+        self._compact = cfg.fwp_mode == "compact"
+        self.n_slots = plan_slot_count(plan)
+        if self._compact:
+            caps = fwp_lib.level_capacities(plan.level_shapes,
+                                            cfg.fwp_capacity)
+            self._n_rows = self.n_slots + 1            # + zero sentinel
+            self._slot_windows = tuple(
+                min(int(c), self._n_rows - 1) for c in caps)
+        else:
+            self._n_rows = plan.n_in
+            self._slot_windows: Tuple[int, ...] = ()
+        self._full_bytes = plan.table_bytes_for_rows(
+            self._n_rows, with_indirection=self._compact)
+        self.update_rows = plan.stream_update_rows \
+            if plan.stream_update_rows is not None \
+            else stream_update_cap(plan, scfg.update_frac)
+        self.update_rows = max(1, min(self.update_rows, self.n_slots))
+        self._incr_bytes = plan.table_bytes_for_rows(
+            self.update_rows, with_indirection=False)
+
+        if scfg.diff_channel_stride < 1:
+            raise ValueError("diff_channel_stride must be >= 1")
+
+        # ---- mutable stream state (host-held, arrays on device) ----------
+        self.cache: Optional[MSDAValueCache] = None
+        self.x_ref: Optional[jnp.ndarray] = None   # PROBED diff reference:
+        #   the (B, N_in, ceil(D/stride)) channel slice of each tile's
+        #   last-reprojected memory — all the diff ever reads
+        self.ema: Optional[jnp.ndarray] = None
+        self.fwp: Optional[fwp_lib.FWPState] = None
+        self.act_scale: Optional[jnp.ndarray] = None
+        self._cache_fwp: Optional[fwp_lib.FWPState] = None  # geometry the
+        #   current cache was built with (stale detection self-heals)
+        self._geometry_stale = True                 # first frame: full build
+        self.frame_index = 0
+        self.rebuild_frames = 0
+        self.staged_bytes_total = 0
+        self.rebuild_bytes_total = 0                # per-frame-rebuild cost
+        self.last_stats: Optional[dict] = None
+
+        self._jit_build = jax.jit(self._build_impl)
+        self._jit_frame = jax.jit(self._frame_impl)
+        k = float(cfg.fwp_k)
+        self._jit_hyst = jax.jit(lambda ema, prev: fwp_lib.build_fwp_state_hysteresis(
+            ema, plan.level_shapes,
+            k_enter=k * scfg.hyst_enter, k_exit=k * scfg.hyst_exit,
+            mode=cfg.fwp_mode, capacity=cfg.fwp_capacity, prev=prev))
+
+    # ---- jitted internals -------------------------------------------------
+    def _build_impl(self, params, x_flat, fwp):
+        return build_value_cache(params, self.plan, x_flat,
+                                 MSDAPipelineState(fwp=fwp))
+
+    def _probe(self, x: jnp.ndarray) -> jnp.ndarray:
+        s = self.scfg.diff_channel_stride
+        return x if s == 1 else x[..., ::s]
+
+    def _diff_impl(self, x_new, x_ref, keep_idx):
+        changed = changed_tiles(self.geo, self._probe(x_new), x_ref,
+                                self.scfg.delta_threshold)   # (B, n_tiles)
+        t_of_p = jnp.asarray(self.geo.tile_of_pixel)
+        if keep_idx is not None:                     # compact: slot -> tile
+            slot_tile = t_of_p[keep_idx]             # (B, n_slots)
+        else:                                        # dense: slot == pixel
+            slot_tile = jnp.broadcast_to(t_of_p[None],
+                                         (x_new.shape[0], self.n_slots))
+        bidx = jnp.arange(x_new.shape[0])[:, None]
+        slot_dirty = changed[bidx, slot_tile]        # (B, n_slots)
+        return changed, slot_dirty, jnp.sum(slot_dirty, axis=1)
+
+    def _update_impl(self, params, x_new, x_ref, v, staged, keep_idx,
+                     keep_mask, changed, slot_dirty, act_scale):
+        # dirty slots first; clean fillers re-project unchanged (or
+        # sub-threshold-drifted) pixels, which is harmless by construction
+        _, idx_u = jax.lax.top_k(slot_dirty.astype(jnp.float32),
+                                 self.update_rows)
+        idx_u = jnp.sort(idx_u, axis=1)
+        # the ONE row-update path (cache.py): project + scatter into the
+        # table and its decode staging. The temp cache just pairs the
+        # traced arrays with this manager's static metadata.
+        tmp = MSDAValueCache(v=v, pix2slot=None, keep_idx=keep_idx,
+                             n_rows=self._n_rows,
+                             slot_windows=self._slot_windows,
+                             table_bytes=self._full_bytes, staged=staged)
+        upd, _ = update_value_cache_rows(params, self.plan, tmp, x_new,
+                                         idx_u, act_scale=act_scale,
+                                         keep_mask=keep_mask)
+        pix_changed = changed[jnp.arange(x_new.shape[0])[:, None],
+                              jnp.asarray(self.geo.tile_of_pixel)[None]]
+        x_ref = jnp.where(pix_changed[..., None], self._probe(x_new), x_ref)
+        return upd.v, upd.staged, x_ref
+
+    def _frame_impl(self, params, x_new, x_ref, v, staged, keep_idx,
+                    keep_mask, act_scale):
+        """ONE dispatch per frame: diff + speculative incremental update.
+
+        The update runs unconditionally (its work is bounded by the
+        static budget either way); the host commits it only when the
+        dirty count fits the budget, else it discards the result and
+        rebuilds — a rare path by construction, and fusing diff+update
+        into one program keeps the per-frame dispatch count at one."""
+        changed, slot_dirty, nd = self._diff_impl(x_new, x_ref, keep_idx)
+        v, staged, x_ref = self._update_impl(
+            params, x_new, x_ref, v, staged, keep_idx, keep_mask, changed,
+            slot_dirty, act_scale)
+        return jnp.max(nd), jnp.sum(changed), v, staged, x_ref
+
+    # ---- host-side orchestration ------------------------------------------
+    def _warm_fwp(self, batch: int) -> Optional[fwp_lib.FWPState]:
+        """Warm-start keep state for fresh sessions: keep everything the
+        capacity admits (k=0 thresholds), raster-first — the EMA then
+        specializes it as real sampling frequencies arrive."""
+        cfg = self.plan.cfg
+        if cfg.fwp_mode == "off":
+            return None
+        ones = jnp.ones((batch, self.plan.n_in), jnp.float32)
+        return fwp_lib.build_fwp_state(ones, self.plan.level_shapes, k=0.0,
+                                       mode=cfg.fwp_mode,
+                                       capacity=cfg.fwp_capacity)
+
+    def _restore_meta(self, cache: MSDAValueCache) -> MSDAValueCache:
+        """Re-pin the python-int metadata a jit boundary arrayified."""
+        return cache._replace(n_rows=self._n_rows,
+                              slot_windows=self._slot_windows,
+                              table_bytes=self._full_bytes)
+
+    def _full_build(self, x_new: jnp.ndarray) -> None:
+        cfg = self.plan.cfg
+        if cfg.fwp_mode != "off" and self.fwp is None:
+            self.fwp = self._warm_fwp(x_new.shape[0])
+            self.ema = jnp.ones((x_new.shape[0], self.plan.n_in),
+                                jnp.float32)
+        cache = self._jit_build(self.params, x_new, self.fwp)
+        self.cache = self._restore_meta(cache)
+        self.act_scale = cache_act_scale(self.cache, cfg)
+        self.x_ref = self._probe(x_new)
+        self._cache_fwp = self.fwp
+        self._geometry_stale = False
+
+    def step(self, x_new, force_full: bool = False
+             ) -> Tuple[MSDAValueCache, dict]:
+        """Ingest one frame's memory; returns (cache, frame stats).
+
+        The cache is persistent: an incremental frame scatter-updates the
+        existing table (and its decode staging) in place; a full rebuild
+        happens only on the first frame, on keep-geometry transitions, on
+        ``force_full`` (session admission), or when the dirty-slot count
+        exceeds the static update budget."""
+        x_new = jnp.asarray(x_new)
+        assert x_new.ndim == 3 and x_new.shape[1] == self.plan.n_in, \
+            (x_new.shape, self.plan.n_in)
+        n_dirty = tiles_hit = 0
+        keep_transition = self._geometry_stale and self.cache is not None
+        if self.cache is None or self._geometry_stale or force_full:
+            mode, reason = "rebuild", (
+                "first-frame" if self.cache is None else
+                "keep-transition" if keep_transition else "forced")
+            self._full_build(x_new)
+            staged_bytes = self._full_bytes
+        else:
+            keep_idx = self.cache.keep_idx if self._compact else None
+            keep_mask = None
+            if self.plan.cfg.fwp_mode == "mask":
+                keep_mask = self.fwp.keep_mask
+            nd, tiles, v, staged, x_ref = self._jit_frame(
+                self.params, x_new, self.x_ref, self.cache.v,
+                self.cache.staged, keep_idx, keep_mask, self.act_scale)
+            n_dirty = int(nd)
+            tiles_hit = int(tiles)
+            if n_dirty > self.update_rows:
+                # speculative update discarded: dirt exceeds the static
+                # budget, the table must be rebuilt wholesale
+                mode, reason = "rebuild", "dirty>budget"
+                self._full_build(x_new)
+                staged_bytes = self._full_bytes
+            else:
+                mode, reason = "incremental", ""
+                self.cache = self.cache._replace(v=v, staged=staged)
+                self.x_ref = x_ref
+                staged_bytes = self._incr_bytes
+        self.frame_index += 1
+        self.rebuild_frames += mode == "rebuild"
+        self.staged_bytes_total += staged_bytes
+        self.rebuild_bytes_total += self._full_bytes
+        self.last_stats = {
+            # scope: the whole BATCH (all sessions sharing this manager
+            # advance together) — per-session consumers must not sum
+            # staged_bytes across sessions of one frame
+            "scope": "batch",
+            "frame": self.frame_index - 1, "mode": mode, "reason": reason,
+            "staged_bytes": staged_bytes,
+            "rebuild_bytes": self._full_bytes,
+            "n_dirty": n_dirty, "tiles_changed": tiles_hit,
+            "keep_transition": bool(keep_transition),
+            "update_rows": self.update_rows,
+        }
+        return self.cache, self.last_stats
+
+    def observe(self, freq: jnp.ndarray) -> bool:
+        """Feed back one frame's sampling frequencies (B, N_in).
+
+        Updates the streaming EMA and re-derives the keep decision with
+        hysteresis; returns True when the keep GEOMETRY changed vs what
+        the current cache was built with (the next ``step`` then does a
+        full rebuild). No-op when FWP is off."""
+        cfg = self.plan.cfg
+        if cfg.fwp_mode == "off":
+            return False
+        freq = jnp.asarray(freq, jnp.float32)
+        self.ema = freq if self.ema is None \
+            else fwp_lib.ema_update(self.ema, freq, self.scfg.ema_alpha)
+        self.fwp = self._jit_hyst(self.ema, self.fwp)
+        stale = self._fwp_geometry_differs(self.fwp, self._cache_fwp)
+        self._geometry_stale = stale
+        return stale
+
+    @staticmethod
+    def _fwp_geometry_differs(a: Optional[fwp_lib.FWPState],
+                              b: Optional[fwp_lib.FWPState]) -> bool:
+        if a is None or b is None:
+            return a is not b
+        if a.keep_idx is not None:
+            return bool(jnp.any(a.keep_idx != b.keep_idx)) \
+                or bool(jnp.any(a.pix2slot != b.pix2slot))
+        return bool(jnp.any(a.keep_mask != b.keep_mask))
+
+    def reset_slot(self, slot: int) -> None:
+        """Reset one batch slot for a newly admitted session: warm-start
+        its EMA/keep rows and force a full rebuild on the next frame."""
+        self._geometry_stale = True
+        if self.ema is None:
+            return
+        self.ema = self.ema.at[slot].set(1.0)
+        warm = self._warm_fwp(1)
+        self.fwp = fwp_lib.FWPState(
+            keep_mask=self.fwp.keep_mask.at[slot].set(warm.keep_mask[0]),
+            keep_idx=None if self.fwp.keep_idx is None
+            else self.fwp.keep_idx.at[slot].set(warm.keep_idx[0]),
+            pix2slot=None if self.fwp.pix2slot is None
+            else self.fwp.pix2slot.at[slot].set(warm.pix2slot[0]),
+            freq=self.fwp.freq.at[slot].set(1.0))
+
+    def pipeline_state(self) -> MSDAPipelineState:
+        """The chain state a consumer threads through its layers: the
+        streaming FWP link plus this frame's temporal-reuse accounting."""
+        return MSDAPipelineState(fwp=self.fwp).with_stream(self.last_stats)
+
+    def report(self) -> dict:
+        """Cumulative rebuild-vs-incremental accounting."""
+        staged = max(self.staged_bytes_total, 1)
+        return {
+            "frames": self.frame_index,
+            "rebuild_frames": self.rebuild_frames,
+            "incremental_frames": self.frame_index - self.rebuild_frames,
+            "update_rows": self.update_rows,
+            "n_slots": self.n_slots,
+            "staged_bytes_total": self.staged_bytes_total,
+            "rebuild_bytes_total": self.rebuild_bytes_total,
+            "bytes_ratio": self.rebuild_bytes_total / staged,
+            "full_bytes_per_frame": self._full_bytes,
+            "incremental_bytes_per_frame": self._incr_bytes,
+        }

