@@ -47,6 +47,7 @@ def report(block_q: int = 512) -> dict:
            "total_ratio": tot_full / tot_win}
     out.update(_msp_staged(block_q))
     out.update(_decoder_staged())
+    out.update(_table_dtype_staged())
     out.update(_stream_staged())
     return out
 
@@ -111,6 +112,39 @@ def _decoder_staged(n_layers: int = N_DEC_LAYERS,
             "decoder_reuse_ratio": rebuild / once,
             "decoder_cache_dense_kb": plan_d.cache_table_bytes / 1024,
             "decoder_plan": plan.describe()}
+
+
+def _table_dtype_staged(capacity: float = 0.6) -> dict:
+    """f32 vs int8 value-table staged bytes — the table-DTYPE analogue of
+    the FWP compaction ratio above, from the REAL plan accounting
+    (``MSDAPlan.table_bytes_for_rows`` reads the itemsize from the plan's
+    resolved table dtype; int8 adds one per-channel f32 scale row). Two
+    ratios: the pure table (what every staging/scatter actually moves)
+    and the full cache including the dtype-independent int32 pix2slot
+    indirection (what a decode session holds resident)."""
+    import dataclasses
+
+    from repro.core.msdeform_attn import MSDeformAttnConfig
+    from repro.msda import make_plan
+
+    cfg = MSDeformAttnConfig(
+        d_model=256, n_heads=8, fwp_mode="compact", fwp_capacity=capacity,
+        range_narrow=tuple(float(r) for r in RANGES))
+    plans = {d: make_plan(dataclasses.replace(cfg, table_dtype=d), LEVELS,
+                          backend="jnp_gather", n_queries=N_QUERIES,
+                          n_consumers=N_DEC_LAYERS)
+             for d in ("float32", "int8")}
+    from repro.core.fwp import level_capacities
+    plan_rows = sum(level_capacities(LEVELS, capacity)) + 1  # + sentinel
+    tbl = {d: p.table_bytes_for_rows(plan_rows, with_indirection=False)
+           for d, p in plans.items()}
+    full = {d: p.cache_table_bytes for d, p in plans.items()}
+    return {"table_f32_kb": tbl["float32"] / 1024,
+            "table_int8_kb": tbl["int8"] / 1024,
+            "table_dtype_ratio": tbl["float32"] / tbl["int8"],
+            "cache_f32_kb": full["float32"] / 1024,
+            "cache_int8_kb": full["int8"] / 1024,
+            "cache_dtype_ratio": full["float32"] / full["int8"]}
 
 
 def _stream_staged(n_frames: int = 32, capacity: float = 0.6) -> dict:
@@ -181,6 +215,11 @@ if __name__ == "__main__":
           f"{r['decoder_cache_dense_kb']:.0f} KB is the measurable part; "
           f"wall-time: msda_decoder6_* micro rows)")
     print(f"  {r['decoder_plan']}")
+    print(f"table dtype: f32 {r['table_f32_kb']:.0f} KB -> int8 "
+          f"{r['table_int8_kb']:.0f} KB staged per build "
+          f"({r['table_dtype_ratio']:.2f}x; with pix2slot indirection "
+          f"{r['cache_f32_kb']:.0f} KB -> {r['cache_int8_kb']:.0f} KB, "
+          f"{r['cache_dtype_ratio']:.2f}x)")
     print(f"stream ({r['stream_frames']} drifting-scene frames, MEASURED): "
           f"rebuild-per-frame {r['stream_rebuild_total_kb']:.0f} KB -> "
           f"incremental {r['stream_staged_total_kb']:.0f} KB "

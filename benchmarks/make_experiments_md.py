@@ -195,6 +195,19 @@ def main() -> None:
                 f"({reuse['decoder_cache_once_kb']:.0f} KB vs dense "
                 f"{reuse['decoder_cache_dense_kb']:.0f} KB) is the part "
                 f"that can regress (benchmarks/fmap_reuse.py).")
+        if "table_dtype_ratio" in reuse:
+            parts.append(
+                f" The **int8 value table** (codes + one per-channel f32 "
+                f"scale row, dequantized in-register after the bilinear "
+                f"corner gather) shrinks the same staged build from "
+                f"{reuse['table_f32_kb']:.0f} KB (f32) to "
+                f"{reuse['table_int8_kb']:.0f} KB = "
+                f"**{reuse['table_dtype_ratio']:.2f}x** fewer staged bytes "
+                f"— measured from the same plan accounting as the FWP "
+                f"compaction ratio, and multiplicative with it "
+                f"(`fmap_reuse_table_dtype` row; parity within the "
+                f"analytic scale/2 tolerance is tested across all four "
+                f"backends).")
         micro = bench.get("micro", {})
         if "msda_decoder6_persistent" in micro \
                 and "msda_decoder6_cached" in micro:

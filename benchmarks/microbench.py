@@ -111,14 +111,27 @@ def _stream_rows(attn_cfg):
     #   incremental path, not a silent budget fallback
     mgr_r = TemporalCacheManager(plan, vparams, scfg, batch=1)
     mgr_r.step(frames[0])
+    plan8 = msda.make_plan(
+        dataclasses.replace(attn_cfg, table_dtype="int8"), levels,
+        backend="jnp_gather", n_queries=64, n_consumers=6)
+    mgr_8 = TemporalCacheManager(plan8, vparams, scfg, batch=1)
+    mgr_8.step(frames[0])
+    mgr_8.step(frames[1])
+    st8 = mgr_8.step(frames[2])[1]
+    assert st8["mode"] == "incremental", st8
     u, n = mgr_i.update_rows, mgr_i.n_slots
     ikb = mgr_i._incr_bytes / 1024
     fkb = mgr_i._full_bytes / 1024
+    ikb8 = mgr_8._incr_bytes / 1024
     return [
         ("msda_stream_incremental",
          _time(lambda: mgr_i.step(frames[2])[0].v),
          f"per-frame tile update: diff + reproject<={u}/{n} slots, "
          f"{ikb:.0f}KB staged vs {fkb:.0f}KB rebuild"),
+        ("msda_stream_incremental_int8",
+         _time(lambda: mgr_8.step(frames[2])[0].v),
+         f"same tile update, int8 codes scattered under the frozen scale "
+         f"({ikb:.0f}KB -> {ikb8:.0f}KB staged per frame)"),
         ("msda_stream_rebuild",
          _time(lambda: mgr_r.step(frames[2], force_full=True)[0].v),
          f"per-frame full rebuild: project + compact + stage {fkb:.0f}KB "
@@ -133,6 +146,8 @@ def _decoder_rows(attn_cfg, attn_params, levels, memory, state):
     (table STAGED once per memory, all layers launch against it)."""
     from repro import msda
 
+    import dataclasses
+
     dcfg = msda.MSDADecoderConfig(n_layers=6, n_queries=64, d_ffn=128)
     dparams = msda.init_decoder(jax.random.PRNGKey(21), dcfg, attn_cfg)
     plan = msda.make_plan(attn_cfg, levels, backend="jnp_gather",
@@ -141,6 +156,10 @@ def _decoder_rows(attn_cfg, attn_params, levels, memory, state):
     plan_p = msda.make_plan(attn_cfg, levels, backend="pallas_decode",
                             n_queries=dcfg.n_queries,
                             n_consumers=dcfg.n_layers)
+    plan_p8 = msda.make_plan(
+        dataclasses.replace(attn_cfg, table_dtype="int8"), levels,
+        backend="pallas_decode", n_queries=dcfg.n_queries,
+        n_consumers=dcfg.n_layers)
 
     def cross_stack(p_, m_, per_layer_rebuild: bool, plan=plan):
         # identical 6-layer cross-attention stack; the ONLY difference is
@@ -167,8 +186,12 @@ def _decoder_rows(attn_cfg, attn_params, levels, memory, state):
     rebuild = jax.jit(lambda p_, m_: cross_stack(p_, m_, True))
     persistent = jax.jit(lambda p_, m_: cross_stack(p_, m_, False,
                                                     plan=plan_p))
+    persistent8 = jax.jit(lambda p_, m_: cross_stack(p_, m_, False,
+                                                     plan=plan_p8))
     full = jax.jit(lambda p_, m_: msda.decoder_apply(
         p_, dcfg, plan, m_, state)[0])
+    kb8 = plan_p8.cache_table_bytes / 1024
+    kb32 = plan_p.cache_table_bytes / 1024
     return [
         ("msda_decoder6_cached",
          _time(lambda: cached(dparams, memory)),
@@ -176,6 +199,10 @@ def _decoder_rows(attn_cfg, attn_params, levels, memory, state):
         ("msda_decoder6_persistent",
          _time(lambda: persistent(dparams, memory)),
          "6 cross-attn layers, pallas_decode vs the ONCE-staged table"),
+        ("msda_decode6_persistent_int8",
+         _time(lambda: persistent8(dparams, memory)),
+         f"same, int8 table staged+sampled in-kernel ({kb32:.0f}KB "
+         f"-> {kb8:.0f}KB staged)"),
         ("msda_decoder6_rebuild",
          _time(lambda: rebuild(dparams, memory)),
          "6 cross-attn layers rebuilding the value table per layer"),

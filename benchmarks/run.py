@@ -105,6 +105,10 @@ def main() -> None:
                      f"{r['decoder_rebuild_kb']:.0f}KB rebuild-per-layer -> "
                      f"{r['decoder_cache_once_kb']:.0f}KB build-once "
                      f"({r['decoder_reuse_ratio']:.1f}x)"))
+        rows.append(("fmap_reuse_table_dtype", 0.0,
+                     f"value table f32 {r['table_f32_kb']:.0f}KB -> int8 "
+                     f"{r['table_int8_kb']:.0f}KB per build "
+                     f"({r['table_dtype_ratio']:.2f}x staged-bytes)"))
         rows.append(("fmap_reuse_stream", 0.0,
                      f"{r['stream_frames']}-frame drifting scene staged "
                      f"bytes {r['stream_rebuild_total_kb']:.0f}KB "
@@ -119,6 +123,9 @@ def main() -> None:
               f"layers): {r['decoder_rebuild_kb']:.0f} KB rebuild -> "
               f"{r['decoder_cache_once_kb']:.0f} KB build-once "
               f"({r['decoder_reuse_ratio']:.1f}x)")
+        print(f"[fmap-reuse] table dtype: f32 {r['table_f32_kb']:.0f} KB -> "
+              f"int8 {r['table_int8_kb']:.0f} KB per build "
+              f"({r['table_dtype_ratio']:.2f}x staged-bytes)")
         print(f"[fmap-reuse] streaming ({r['stream_frames']} frames, "
               f"measured): {r['stream_rebuild_total_kb']:.0f} KB "
               f"rebuild-per-frame -> {r['stream_staged_total_kb']:.0f} KB "

@@ -72,6 +72,17 @@ def main():
 
     engine, levels, d = build_engine(args)
     print(f"[stream] {engine.describe()}")
+    if args.dry_run:
+        # sessions-per-chip at the default 4 MB staging budget: the
+        # serving consequence of the int8 table (one line per dtype)
+        cap = engine.capacity_estimate()
+        print(f"[stream] capacity @ {cap['budget_bytes'] // 1024} KB budget "
+              f"({cap['rows_per_session']} rows/session, "
+              f"active dtype {cap['table_dtype']}):")
+        for dt_name, row in cap["per_dtype"].items():
+            print(f"[stream]   {dt_name:8s} "
+                  f"{row['bytes_per_session'] / 1024:7.1f} KB/session -> "
+                  f"{row['sessions']} sessions/chip")
 
     sids = [engine.open_session() for _ in range(args.sessions)]
     scenes = {sid: drifting_scene(100 + i, levels, d, args.frames,

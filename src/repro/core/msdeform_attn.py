@@ -52,6 +52,11 @@ class MSDeformAttnConfig:
     backend: Optional[str] = None        # msda backend name or "auto";
                                          # overrides `impl` when set
     dtype: Any = jnp.float32
+    table_dtype: Optional[str] = None    # value-TABLE storage dtype:
+    #   "int8" stores the cache as int8 codes + per-channel f32 scale and
+    #   the kernels dequantize in-register after the corner gather; None
+    #   resolves via the REPRO_MSDA_TABLE_DTYPE env var, falling back to
+    #   `dtype` (see repro.msda.plan.resolve_table_dtype)
 
     @property
     def head_dim(self) -> int:
@@ -156,6 +161,12 @@ def msdeform_attn_ref(params: dict, cfg: MSDeformAttnConfig,
         bounds = jnp.asarray(cfg.range_narrow, query.dtype).reshape(1, 1, 1, l, 1, 1)
         offs = jnp.clip(offs, -bounds, bounds)
     v = jnp.einsum("bnd,dhk->bnhk", x_flat, params["value_w"]) + params["value_b"]
+    from repro.msda.plan import resolve_table_dtype
+    if resolve_table_dtype(cfg) == "int8":
+        # mirror the backends' int8 table storage: the oracle samples the
+        # SAME quantized values, so parity holds within float tolerance
+        from repro.core.quant import fake_table_quant
+        v = fake_table_quant(v)
 
     starts, _ = fwp_lib.level_starts(level_shapes)
     out = jnp.zeros((b, nq, h, cfg.head_dim), query.dtype)

@@ -78,6 +78,38 @@ def maybe_fake_quant_with_scale(x: jnp.ndarray, bits: Optional[int],
     return fake_quant_with_scale(x, bits, scale)
 
 
+def table_quant_scale(v: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel int8 scale of a (B, N_rows, H, Dh) value table.
+
+    The scale is shared across the ROWS axis (shape (B, 1, H, Dh)):
+    every row of one (batch, head, channel) lane quantizes on the same
+    grid, so a backend may gather int8 codes, run the bilinear
+    aggregation in f32 code space, and multiply by the scale ONCE after
+    aggregation — bit-identical to dequantizing each gathered corner
+    first. The zero sentinel row quantizes to code 0 exactly."""
+    return quant_scale(v, 8, axis=1).astype(jnp.float32)
+
+
+def quantize_table_rows(rows: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Quantize (B, U, H, Dh) table rows onto a FROZEN (B, 1, H, Dh) grid.
+
+    Same clip convention as :func:`pack_int8`. Used both by the full
+    cache build (scale just derived) and by streaming incremental row
+    updates (scale captured at the last full build), so scattered codes
+    stay commensurable with the surrounding table."""
+    return jnp.clip(jnp.round(rows / scale), -128, 127).astype(jnp.int8)
+
+
+def fake_table_quant(v: jnp.ndarray) -> jnp.ndarray:
+    """quantize→dequantize a value table on the int8 table grid.
+
+    The reference oracle applies this when the resolved table dtype is
+    int8, so oracle-vs-backend parity holds bitwise-modulo-float on the
+    SAME quantized values instead of within a scale/2 slack."""
+    s = table_quant_scale(v)
+    return quantize_table_rows(v, s).astype(v.dtype) * s.astype(v.dtype)
+
+
 def pack_int8(x: jnp.ndarray):
     """Real int8 storage for the value tensor (bandwidth variant).
 

@@ -85,30 +85,38 @@ class DecodeStagedTable:
     head_pack: int
     dh: int
     table_bytes: int
+    scale: Optional[jnp.ndarray] = None  # (B, n_groups, G*Dh) f32 dequant
+    #   scale when ``v`` holds int8 codes (per-channel, shared across
+    #   rows — the kernel multiplies once after aggregation); None for
+    #   float tables
 
     def tree_flatten(self):
-        return (self.v, self.remap), (self.n_rows, self.head_pack,
-                                      self.dh, self.table_bytes)
+        return (self.v, self.remap, self.scale), \
+            (self.n_rows, self.head_pack, self.dh, self.table_bytes)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        v, remap = children
+        v, remap, scale = children
         n_rows, head_pack, dh, table_bytes = aux
-        return cls(v=v, remap=remap, n_rows=n_rows, head_pack=head_pack,
-                   dh=dh, table_bytes=table_bytes)
+        return cls(v=v, remap=remap, scale=scale, n_rows=n_rows,
+                   head_pack=head_pack, dh=dh, table_bytes=table_bytes)
 
 
 def stage_decode_table(v: jnp.ndarray,
                        remap: Optional[jnp.ndarray] = None,
-                       *, head_pack: int = 1) -> DecodeStagedTable:
+                       *, head_pack: int = 1,
+                       scale: Optional[jnp.ndarray] = None
+                       ) -> DecodeStagedTable:
     """Stage the value table ONCE for all decode launches of one memory.
 
     (B, N_rows, H, Dh) -> (B, H/G, N_rows, G·Dh): the same head-packed
     lane layout ``msgs_fused_packed`` rebuilds per launch, materialized
     once so every per-layer launch (and the stacked multi-layer launch)
-    consumes it verbatim. Call through the module attribute
-    (``msgs_decode.stage_decode_table``) so the staging-spy tests can
-    count stagings per memory."""
+    consumes it verbatim. ``scale`` is the int8 table's (B, 1, H, Dh)
+    per-channel dequant scale — packed into the same per-group lane
+    layout and staged next to the codes (one f32 row per group). Call
+    through the module attribute (``msgs_decode.stage_decode_table``) so
+    the staging-spy tests can count stagings per memory."""
     b, n_rows, h, dh = v.shape
     g = head_pack if (head_pack > 1 and h % head_pack == 0) else 1
     vp = v.reshape(b, n_rows, h // g, g, dh)
@@ -116,7 +124,12 @@ def stage_decode_table(v: jnp.ndarray,
     table_bytes = n_rows * g * dh * jnp.dtype(v.dtype).itemsize
     if remap is not None:
         table_bytes += remap.shape[-1] * 4
-    return DecodeStagedTable(v=vp, remap=remap, n_rows=n_rows,
+    sp = None
+    if scale is not None:
+        sp = scale.reshape(b, h, dh).reshape(b, h // g, g * dh) \
+            .astype(jnp.float32)
+        table_bytes += g * dh * 4
+    return DecodeStagedTable(v=vp, remap=remap, scale=sp, n_rows=n_rows,
                              head_pack=g, dh=dh, table_bytes=table_bytes)
 
 
@@ -133,7 +146,16 @@ def update_staged_rows(staged: DecodeStagedTable,
     so the staged block stays bit-identical to a fresh
     ``stage_decode_table`` of the updated table (parity-tested). The
     ``remap`` indirection is untouched — a tile update never changes the
-    keep geometry (keep transitions trigger a full rebuild instead)."""
+    keep geometry (keep transitions trigger a full rebuild instead).
+    ``rows`` must already be in the staged dtype: an int8 table only
+    accepts int8 codes (quantized against the FROZEN table scale) —
+    silently scattering f32 rows would corrupt the code space."""
+    if rows.dtype != staged.v.dtype:
+        raise TypeError(
+            f"update_staged_rows: rows dtype {rows.dtype} does not match "
+            f"the staged table dtype {staged.v.dtype}; quantize rows "
+            f"against the frozen table scale (int8 tables) or rebuild "
+            f"the staging if the table dtype changed")
     b, u, h, dh = rows.shape
     g = staged.head_pack
     n_groups = staged.v.shape[1]
@@ -148,24 +170,31 @@ def update_staged_rows(staged: DecodeStagedTable,
 # kernel body — one (batch, head-group, query-tile, layer) grid step
 # --------------------------------------------------------------------------
 
-def _make_decode_kernel(head_pack: int, dh: int, use_remap: bool):
+def _make_decode_kernel(head_pack: int, dh: int, use_remap: bool,
+                        use_scale: bool):
     """Kernel for grid (B, H/G, T_q, L); the staged table block is indexed
     by (batch, head-group) only, so Pallas keeps it resident across the
-    whole (query-tile × layer) sweep — staged once per (b, head-group)."""
+    whole (query-tile × layer) sweep — staged once per (b, head-group).
+    With ``use_scale`` the staged rows are int8 codes and the group's
+    (G·Dh,) f32 scale row rides in as one extra operand: 4 one-byte
+    corner loads per point plus one scale row, dequantized in-register
+    after aggregation."""
     def kernel(*refs):
+        x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref = refs[:6]
+        refs = refs[6:]
+        remap = None
         if use_remap:
-            x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, r_ref, v_ref, o_ref = refs
-            remap = r_ref[0]
-        else:
-            x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, v_ref, o_ref = refs
-            remap = None
+            remap, refs = refs[0][0], refs[1:]
+        v_ref = refs[0]
+        scale = refs[1][0, 0] if use_scale else None   # (G*Dh,)
+        o_ref = refs[-1]
         vp = v_ref[0, 0]                          # (N_rows, G*Dh) staged
         for j in range(head_pack):                # static unroll
             o_ref[0, 0, :, j, :] = _eq4_sample_agg(
                 x_ref[0, 0, :, j, :], y_ref[0, 0, :, j, :],
                 st_ref[0, 0, :, j, :], wl_ref[0, 0, :, j, :],
                 hl_ref[0, 0, :, j, :], p_ref[0, 0, :, j, :],
-                vp, remap=remap, lanes=(j * dh, dh))
+                vp, remap=remap, lanes=(j * dh, dh), scale=scale)
     return kernel
 
 
@@ -193,6 +222,7 @@ def _decode_pallas_call(
     hl: jnp.ndarray,                     # int32
     probs: jnp.ndarray,
     remap: Optional[jnp.ndarray],        # (B, N_pix) int32 or None
+    scale: Optional[jnp.ndarray],        # (B, n_groups, G*Dh) f32 or None
     *,
     n_rows: int, head_pack: int, dh: int,
     block_q: int, interpret: bool,
@@ -215,21 +245,29 @@ def _decode_pallas_call(
                           lambda bi, gi, qi, li: (bi, gi, 0, 0))
     out_spec = pl.BlockSpec((1, 1, tq, g, dh),
                             lambda bi, gi, qi, li: (bi, li, qi, gi, 0))
-    out_shape = jax.ShapeDtypeStruct((b, n_layers, nq_p, h, dh), vp.dtype)
+    out_dtype = vp.dtype if scale is None else probs.dtype
+    out_shape = jax.ShapeDtypeStruct((b, n_layers, nq_p, h, dh), out_dtype)
 
-    kernel = _make_decode_kernel(g, dh, use_remap=remap is not None)
-    if remap is None:
-        in_specs = [pt, pt, pt, pt, pt, pt, v_spec]
-        inputs = (x_px, y_px, start, wl, hl, probs, vp)
-    else:
-        r_spec = pl.BlockSpec((1, remap.shape[1]),
-                              lambda bi, gi, qi, li: (bi, 0))
-        in_specs = [pt, pt, pt, pt, pt, pt, r_spec, v_spec]
-        inputs = (x_px, y_px, start, wl, hl, probs, remap, vp)
+    kernel = _make_decode_kernel(g, dh, use_remap=remap is not None,
+                                 use_scale=scale is not None)
+    in_specs = [pt, pt, pt, pt, pt, pt]
+    inputs = [x_px, y_px, start, wl, hl, probs]
+    name = "msgs_decode_persistent"
+    if remap is not None:
+        in_specs.append(pl.BlockSpec((1, remap.shape[1]),
+                                     lambda bi, gi, qi, li: (bi, 0)))
+        inputs.append(remap)
+    in_specs.append(v_spec)
+    inputs.append(vp)
+    if scale is not None:
+        in_specs.append(pl.BlockSpec((1, 1, gdh),
+                                     lambda bi, gi, qi, li: (bi, gi, 0)))
+        inputs.append(scale)
+        name += "_int8"
     out = pl.pallas_call(
         kernel, grid=grid, in_specs=in_specs,
         out_specs=out_spec, out_shape=out_shape,
-        interpret=interpret, name="msgs_decode_persistent",
+        interpret=interpret, name=name,
     )(*inputs)
     return out[:, :, :nq] if pad else out
 
@@ -239,13 +277,17 @@ def _decode_pallas_call(
 # --------------------------------------------------------------------------
 
 def msgs_decode_ref(vp, x_px, y_px, start, wl, hl, probs, remap,
-                    *, head_pack: int, dh: int) -> jnp.ndarray:
+                    scale=None, *, head_pack: int, dh: int) -> jnp.ndarray:
     """Pure-jnp reference over the STAGED layout (same flat corner-gather
     math as the ``jnp_gather`` backend). Used as the exact backward of
-    the custom_vjp and by the parity tests."""
+    the custom_vjp and by the parity tests. ``scale`` dequantizes an
+    int8 staged table (per-channel, shared across rows) up front —
+    mathematically identical to the kernel's dequant-after-aggregation."""
     from repro.msda.sampling import corner_data, flat_gather_heads
     b, n_groups, n_rows, gdh = vp.shape
     _, n_layers, nq, h, k = x_px.shape
+    if scale is not None:
+        vp = vp.astype(probs.dtype) * scale[:, :, None, :].astype(probs.dtype)
     # un-stage back to (B, N_rows, H, Dh) — a transpose, not a gather
     v4 = vp.reshape(b, n_groups, n_rows, head_pack, dh)
     v4 = v4.transpose(0, 2, 1, 3, 4).reshape(b, n_rows, h, dh)
@@ -276,32 +318,47 @@ def _float0_zeros(x):
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _msgs_decode(static: _DecodeStatic, vp, x_px, y_px, start, wl, hl,
-                 probs, remap):
+                 probs, remap, scale):
     return _decode_pallas_call(
-        vp, x_px, y_px, start, wl, hl, probs, remap,
+        vp, x_px, y_px, start, wl, hl, probs, remap, scale,
         n_rows=static.n_rows, head_pack=static.head_pack, dh=static.dh,
         block_q=static.block_q, interpret=static.interpret)
 
 
-def _msgs_decode_fwd(static, vp, x_px, y_px, start, wl, hl, probs, remap):
-    out = _msgs_decode(static, vp, x_px, y_px, start, wl, hl, probs, remap)
-    return out, (vp, x_px, y_px, start, wl, hl, probs, remap)
+def _msgs_decode_fwd(static, vp, x_px, y_px, start, wl, hl, probs, remap,
+                     scale):
+    out = _msgs_decode(static, vp, x_px, y_px, start, wl, hl, probs, remap,
+                       scale)
+    return out, (vp, x_px, y_px, start, wl, hl, probs, remap, scale)
 
 
 def _msgs_decode_bwd(static, res, g_out):
     """Exact backward via the jnp reference (pallas_call itself has no AD
     rule): cotangents for the staged table, the sampling coordinates and
-    the probabilities; float0 for the integer geometry."""
-    vp, x_px, y_px, start, wl, hl, probs, remap = res
-    _, vjp = jax.vjp(
-        lambda v_, x_, y_, p_: msgs_decode_ref(
-            v_, x_, y_, start, wl, hl, p_, remap,
-            head_pack=static.head_pack, dh=static.dh),
-        vp, x_px, y_px, probs)
-    d_vp, d_x, d_y, d_p = vjp(g_out)
+    the probabilities; float0 for the integer geometry. An int8 table's
+    codes get a float0 cotangent (integers are non-differentiable — the
+    straight-through path for training lives in the f32 fake-quant, not
+    here) while the f32 scale gets a real gradient."""
+    vp, x_px, y_px, start, wl, hl, probs, remap, scale = res
+    if scale is None:
+        _, vjp = jax.vjp(
+            lambda v_, x_, y_, p_: msgs_decode_ref(
+                v_, x_, y_, start, wl, hl, p_, remap,
+                head_pack=static.head_pack, dh=static.dh),
+            vp, x_px, y_px, probs)
+        d_vp, d_x, d_y, d_p = vjp(g_out)
+        d_s = None
+    else:
+        _, vjp = jax.vjp(
+            lambda x_, y_, p_, s_: msgs_decode_ref(
+                vp, x_, y_, start, wl, hl, p_, remap, s_,
+                head_pack=static.head_pack, dh=static.dh),
+            x_px, y_px, probs, scale)
+        d_x, d_y, d_p, d_s = vjp(g_out)
+        d_vp = _float0_zeros(vp)
     return (d_vp, d_x, d_y, _float0_zeros(start), _float0_zeros(wl),
             _float0_zeros(hl), d_p, None if remap is None
-            else _float0_zeros(remap))
+            else _float0_zeros(remap), d_s)
 
 
 _msgs_decode.defvjp(_msgs_decode_fwd, _msgs_decode_bwd)
@@ -331,7 +388,8 @@ def msgs_decode_layers_pallas(
                            interpret=interpret)
     return _msgs_decode(static, staged.v, x_px, y_px,
                         start.astype(jnp.int32), wl.astype(jnp.int32),
-                        hl.astype(jnp.int32), probs, staged.remap)
+                        hl.astype(jnp.int32), probs, staged.remap,
+                        staged.scale)
 
 
 def msgs_decode_pallas(

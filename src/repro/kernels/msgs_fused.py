@@ -39,13 +39,19 @@ from jax.experimental import pallas as pl
 
 def _eq4_sample_agg(x, y, st, wl, hl, probs, v,
                     remap: Optional[jnp.ndarray] = None,
-                    lanes: Optional[Tuple[int, int]] = None) -> jnp.ndarray:
+                    lanes: Optional[Tuple[int, int]] = None,
+                    scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Shared Eq. 4 corner gather + factorized bilinear + aggregation.
 
     x, y, st, wl, hl, probs: (TQ, K); v: (N_rows, Dv). ``remap`` is the
     optional FWP-compact pixel -> slot indirection (N_pix,). ``lanes``
     selects a (lo, n) lane slice of the gathered rows — used by the
     head-packed layout where Dv = G·Dh holds G heads side by side.
+    ``scale`` is the int8 table's per-channel (Dv,) dequant scale: the
+    corners gather 1-byte codes, the bilinear/aggregation arithmetic runs
+    in the compute dtype (int8 corner DIFFERENCES can reach ±254 — the
+    cast must happen before Eq. 4), and the scale multiplies ONCE after
+    aggregation — exact, because the scale is shared across rows.
     Returns (TQ, n) with n = Dv unless sliced."""
     x0 = jnp.floor(x)
     y0 = jnp.floor(y)
@@ -64,6 +70,8 @@ def _eq4_sample_agg(x, y, st, wl, hl, probs, v,
         g = jnp.take(v, idx.reshape(-1), axis=0).reshape(idx.shape + (v.shape[-1],))
         if lanes is not None:
             g = g[..., lanes[0]:lanes[0] + lanes[1]]
+        if scale is not None:
+            g = g.astype(probs.dtype)
         return g * valid[..., None]
 
     n0 = corner(0, 0)
@@ -72,41 +80,53 @@ def _eq4_sample_agg(x, y, st, wl, hl, probs, v,
     n3 = corner(1, 1)
     # Eq. 4 — exactly three multiplies by the fractional coordinates:
     s = n0 + (n2 - n0) * t0 + ((n1 - n0) + (n3 - n2 - n1 + n0) * t0) * t1
-    return jnp.sum(s * probs[..., None], axis=1)
+    out = jnp.sum(s * probs[..., None], axis=1)
+    if scale is not None:
+        sc = scale if lanes is None else scale[lanes[0]:lanes[0] + lanes[1]]
+        out = out * sc
+    return out
 
 
-def _kernel(x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, v_ref, o_ref):
-    o_ref[0, :, 0, :] = _eq4_sample_agg(
-        x_ref[0, :, 0, :], y_ref[0, :, 0, :], st_ref[0, :, 0, :],
-        wl_ref[0, :, 0, :], hl_ref[0, :, 0, :], p_ref[0, :, 0, :],
-        v_ref[0, :, 0, :])
+def _make_kernel(use_remap: bool, use_scale: bool):
+    """Per-head kernel: one grid step serves one (batch, head) slice."""
+    def kernel(*refs):
+        x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref = refs[:6]
+        refs = refs[6:]
+        remap = None
+        if use_remap:
+            remap, refs = refs[0][0, :], refs[1:]
+        v_ref = refs[0]
+        scale = refs[1][0, 0, 0, :] if use_scale else None
+        o_ref = refs[-1]
+        o_ref[0, :, 0, :] = _eq4_sample_agg(
+            x_ref[0, :, 0, :], y_ref[0, :, 0, :], st_ref[0, :, 0, :],
+            wl_ref[0, :, 0, :], hl_ref[0, :, 0, :], p_ref[0, :, 0, :],
+            v_ref[0, :, 0, :], remap=remap, scale=scale)
+    return kernel
 
 
-def _kernel_remap(x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, r_ref, v_ref, o_ref):
-    """FWP-compact variant: corner pixel -> compacted slot indirection."""
-    o_ref[0, :, 0, :] = _eq4_sample_agg(
-        x_ref[0, :, 0, :], y_ref[0, :, 0, :], st_ref[0, :, 0, :],
-        wl_ref[0, :, 0, :], hl_ref[0, :, 0, :], p_ref[0, :, 0, :],
-        v_ref[0, :, 0, :], remap=r_ref[0, :])
-
-
-def _make_kernel_packed(head_pack: int, dh: int, use_remap: bool):
+def _make_kernel_packed(head_pack: int, dh: int, use_remap: bool,
+                        use_scale: bool):
     """Head-packed kernel: one grid step serves ``head_pack`` heads whose
     value rows are packed side by side into a (N_rows, G·Dh) lane group."""
     def kernel(*refs):
+        x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref = refs[:6]
+        refs = refs[6:]
+        remap = None
         if use_remap:
-            x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, r_ref, v_ref, o_ref = refs
-            remap = r_ref[0, :]
-        else:
-            x_ref, y_ref, st_ref, wl_ref, hl_ref, p_ref, v_ref, o_ref = refs
-            remap = None
+            remap, refs = refs[0][0, :], refs[1:]
+        v_ref = refs[0]
+        o_ref = refs[-1]
         n_rows = v_ref.shape[1]
         vp = v_ref[0].reshape(n_rows, head_pack * dh)   # packed lane group
+        scale = None
+        if use_scale:                   # (1, 1, G, Dh) -> (G*Dh,)
+            scale = refs[1][0, 0].reshape(head_pack * dh)
         for g in range(head_pack):                       # static unroll
             o_ref[0, :, g, :] = _eq4_sample_agg(
                 x_ref[0, :, g, :], y_ref[0, :, g, :], st_ref[0, :, g, :],
                 wl_ref[0, :, g, :], hl_ref[0, :, g, :], p_ref[0, :, g, :],
-                vp, remap=remap, lanes=(g * dh, dh))
+                vp, remap=remap, lanes=(g * dh, dh), scale=scale)
     return kernel
 
 
@@ -131,6 +151,7 @@ def msgs_fused_pallas(
     hl: jnp.ndarray,                     # int32
     probs: jnp.ndarray,
     remap: Optional[jnp.ndarray] = None,  # (B, N_pix) int32
+    scale: Optional[jnp.ndarray] = None,  # (B, 1, H, Dh) f32 dequant scale
     *,
     block_q: int = 128,
     interpret: bool = False,
@@ -146,24 +167,31 @@ def msgs_fused_pallas(
     pt_spec = pl.BlockSpec((1, tq, 1, k), lambda bi, hi, qi: (bi, qi, hi, 0))
     v_spec = pl.BlockSpec((1, n_rows, 1, dh), lambda bi, hi, qi: (bi, 0, hi, 0))
     out_spec = pl.BlockSpec((1, tq, 1, dh), lambda bi, hi, qi: (bi, qi, hi, 0))
-    out_shape = jax.ShapeDtypeStruct((b, nq_p, h, dh), v.dtype)
+    out_dtype = v.dtype if scale is None else probs.dtype
+    out_shape = jax.ShapeDtypeStruct((b, nq_p, h, dh), out_dtype)
 
-    if remap is None:
-        out = pl.pallas_call(
-            _kernel, grid=grid,
-            in_specs=[pt_spec, pt_spec, pt_spec, pt_spec, pt_spec, pt_spec, v_spec],
-            out_specs=out_spec, out_shape=out_shape,
-            interpret=interpret, name="msgs_fused",
-        )(x_px, y_px, start, wl, hl, probs, v)
-    else:
-        r_spec = pl.BlockSpec((1, remap.shape[1]), lambda bi, hi, qi: (bi, 0))
-        out = pl.pallas_call(
-            _kernel_remap, grid=grid,
-            in_specs=[pt_spec, pt_spec, pt_spec, pt_spec, pt_spec, pt_spec,
-                      r_spec, v_spec],
-            out_specs=out_spec, out_shape=out_shape,
-            interpret=interpret, name="msgs_fused_remap",
-        )(x_px, y_px, start, wl, hl, probs, remap, v)
+    in_specs = [pt_spec] * 6
+    inputs = [x_px, y_px, start, wl, hl, probs]
+    name = "msgs_fused"
+    if remap is not None:
+        in_specs.append(pl.BlockSpec((1, remap.shape[1]),
+                                     lambda bi, hi, qi: (bi, 0)))
+        inputs.append(remap)
+        name += "_remap"
+    in_specs.append(v_spec)
+    inputs.append(v)
+    if scale is not None:
+        in_specs.append(pl.BlockSpec((1, 1, 1, dh),
+                                     lambda bi, hi, qi: (bi, 0, hi, 0)))
+        inputs.append(scale)
+        name += "_int8"
+    out = pl.pallas_call(
+        _make_kernel(use_remap=remap is not None,
+                     use_scale=scale is not None),
+        grid=grid, in_specs=in_specs,
+        out_specs=out_spec, out_shape=out_shape,
+        interpret=interpret, name=name,
+    )(*inputs)
     return out[:, :nq] if pad else out
 
 
@@ -177,6 +205,7 @@ def msgs_fused_packed_pallas(
     hl: jnp.ndarray,                     # int32
     probs: jnp.ndarray,
     remap: Optional[jnp.ndarray] = None,  # (B, N_pix) int32
+    scale: Optional[jnp.ndarray] = None,  # (B, 1, H, Dh) f32 dequant scale
     *,
     head_pack: int = 4,
     block_q: int = 128,
@@ -197,23 +226,29 @@ def msgs_fused_packed_pallas(
     pt_spec = pl.BlockSpec((1, tq, g, k), lambda bi, gi, qi: (bi, qi, gi, 0))
     v_spec = pl.BlockSpec((1, n_rows, g, dh), lambda bi, gi, qi: (bi, 0, gi, 0))
     out_spec = pl.BlockSpec((1, tq, g, dh), lambda bi, gi, qi: (bi, qi, gi, 0))
-    out_shape = jax.ShapeDtypeStruct((b, nq_p, h, dh), v.dtype)
+    out_dtype = v.dtype if scale is None else probs.dtype
+    out_shape = jax.ShapeDtypeStruct((b, nq_p, h, dh), out_dtype)
 
-    kernel = _make_kernel_packed(g, dh, use_remap=remap is not None)
-    if remap is None:
-        out = pl.pallas_call(
-            kernel, grid=grid,
-            in_specs=[pt_spec, pt_spec, pt_spec, pt_spec, pt_spec, pt_spec, v_spec],
-            out_specs=out_spec, out_shape=out_shape,
-            interpret=interpret, name="msgs_fused_packed",
-        )(x_px, y_px, start, wl, hl, probs, v)
-    else:
-        r_spec = pl.BlockSpec((1, remap.shape[1]), lambda bi, gi, qi: (bi, 0))
-        out = pl.pallas_call(
-            kernel, grid=grid,
-            in_specs=[pt_spec, pt_spec, pt_spec, pt_spec, pt_spec, pt_spec,
-                      r_spec, v_spec],
-            out_specs=out_spec, out_shape=out_shape,
-            interpret=interpret, name="msgs_fused_packed_remap",
-        )(x_px, y_px, start, wl, hl, probs, remap, v)
+    in_specs = [pt_spec] * 6
+    inputs = [x_px, y_px, start, wl, hl, probs]
+    name = "msgs_fused_packed"
+    if remap is not None:
+        in_specs.append(pl.BlockSpec((1, remap.shape[1]),
+                                     lambda bi, gi, qi: (bi, 0)))
+        inputs.append(remap)
+        name += "_remap"
+    in_specs.append(v_spec)
+    inputs.append(v)
+    if scale is not None:
+        in_specs.append(pl.BlockSpec((1, 1, g, dh),
+                                     lambda bi, gi, qi: (bi, 0, gi, 0)))
+        inputs.append(scale)
+        name += "_int8"
+    kernel = _make_kernel_packed(g, dh, use_remap=remap is not None,
+                                 use_scale=scale is not None)
+    out = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs,
+        out_specs=out_spec, out_shape=out_shape,
+        interpret=interpret, name=name,
+    )(*inputs)
     return out[:, :nq] if pad else out

@@ -184,16 +184,22 @@ def unpack_queries(geo: WindowGeometry, arr: jnp.ndarray) -> jnp.ndarray:
 # ==========================================================================
 
 def _make_msp_kernel(geo: WindowGeometry, w_rows_v: Tuple[int, ...],
-                     head_pack: int, dh: int, use_remap: bool):
+                     head_pack: int, dh: int, use_remap: bool,
+                     use_scale: bool = False):
     """Kernel body for grid (B, H/G, T); sampled levels unrolled in-body.
 
     Refs (after the scalar-prefetch window starts): x, y, level, probs
     point blocks (1, TQ, G, K); per level an optional remap window
     (1, w_pix_levels[l]) and a value window (1, w_rows_v[l], G, Dh);
+    with ``use_scale`` the group's (1, 1, G, Dh) f32 dequant scale block;
     output block (1, TQ, G, Dh). All L level windows are resident in the
     same grid step — the VMEM analogue of DEFA's inter-level parallel PE
     groups — and their partial sums accumulate in registers, so level
-    aggregation is fused with no HBM round-trip and no output revisiting."""
+    aggregation is fused with no HBM round-trip and no output revisiting.
+    Int8 windows gather 1-byte codes, cast to the accumulator dtype
+    before Eq. 4 (corner differences overflow int8), and the scale
+    multiplies the accumulated sum ONCE at the end — exact, because the
+    scale is shared across rows."""
     n_l = len(geo.level_shapes)
 
     def kernel(*refs):
@@ -206,6 +212,7 @@ def _make_msp_kernel(geo: WindowGeometry, w_rows_v: Tuple[int, ...],
             vstart_ref = refs[0]
             x_ref, y_ref, lvl_ref, p_ref = refs[1:5]
             v_refs = refs[5:5 + n_l]
+        s_ref = refs[-2] if use_scale else None
         o_ref = refs[-1]
         b = pl.program_id(0)
         t = pl.program_id(2)
@@ -259,6 +266,8 @@ def _make_msp_kernel(geo: WindowGeometry, w_rows_v: Tuple[int, ...],
                 idx = jnp.clip(lrow, 0, wv - 1) * head_pack + gid
                 gat = jnp.take(v3, idx.reshape(-1), axis=0).reshape(
                     idx.shape + (dh,))
+                if use_scale:
+                    gat = gat.astype(o_ref.dtype)
                 return gat * valid[..., None]
 
             n0 = corner(0, 0)
@@ -269,6 +278,8 @@ def _make_msp_kernel(geo: WindowGeometry, w_rows_v: Tuple[int, ...],
             s = (n0 + (n2 - n0) * t0
                  + ((n1 - n0) + (n3 - n2 - n1 + n0) * t0) * t1)
             acc += jnp.sum(s * probs[..., None], axis=2)
+        if use_scale:
+            acc = acc * s_ref[0, 0]              # (G, Dh) broadcasts
         o_ref[0] = acc
     return kernel
 
@@ -303,6 +314,7 @@ def msgs_windowed_msp_pallas(
     probs: jnp.ndarray,      # (B, Nq, H, K)
     remap: Optional[jnp.ndarray] = None,      # (B, N_in) pix -> slot
     keep_idx: Optional[jnp.ndarray] = None,   # (B, cap) slot -> pix, sorted
+    scale: Optional[jnp.ndarray] = None,      # (B, n_groups, G, Dh) f32
     *,
     level_shapes: Tuple[Tuple[int, int], ...],
     ranges: Tuple[float, ...],               # per-level |offset| bound (px)
@@ -366,17 +378,25 @@ def msgs_windowed_msp_pallas(
     else:
         in_specs = [pt, pt, pt, pt] + v_specs
         inputs = (x_px, y_px, lvl_of_pt, probs) + (v,) * n_l
+    name = "msgs_windowed_msp"
+    if scale is not None:
+        in_specs = in_specs + [pl.BlockSpec(
+            (1, 1, g, dh), lambda bi, gi, ti, *s: (bi, gi, 0, 0))]
+        inputs = inputs + (scale,)
+        name += "_int8"
     out_spec = pl.BlockSpec((1, geo.tile_q, g, dh),
                             lambda bi, gi, ti, *s: (bi, ti, gi, 0))
+    out_dtype = v.dtype if scale is None else probs.dtype
 
-    kernel = _make_msp_kernel(geo, w_rows_v, g, dh, use_remap)
+    kernel = _make_msp_kernel(geo, w_rows_v, g, dh, use_remap,
+                              use_scale=scale is not None)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=len(scalars), grid=grid,
             in_specs=in_specs, out_specs=out_spec),
-        out_shape=jax.ShapeDtypeStruct((b, geo.nq_padded, h, dh), v.dtype),
-        interpret=interpret, name="msgs_windowed_msp",
+        out_shape=jax.ShapeDtypeStruct((b, geo.nq_padded, h, dh), out_dtype),
+        interpret=interpret, name=name,
     )(*scalars, *inputs)
     return unpack_queries(geo, out)
 

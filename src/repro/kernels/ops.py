@@ -25,17 +25,21 @@ def _interpret_default() -> bool:
 
 
 def msgs_fused(v, x_px, y_px, start, wl, hl, probs,
-               remap: Optional[jnp.ndarray] = None, *,
+               remap: Optional[jnp.ndarray] = None,
+               scale: Optional[jnp.ndarray] = None, *,
                block_q: int = 128, interpret: Optional[bool] = None):
-    """Fused grid-sample + aggregation. See kernels/msgs_fused.py."""
+    """Fused grid-sample + aggregation. See kernels/msgs_fused.py.
+    ``scale`` is the int8 table's (B, 1, H, Dh) dequant scale."""
     interp = _interpret_default() if interpret is None else interpret
     return msgs_fused_pallas(v, x_px, y_px, start.astype(jnp.int32),
                              wl.astype(jnp.int32), hl.astype(jnp.int32),
-                             probs, remap, block_q=block_q, interpret=interp)
+                             probs, remap, scale,
+                             block_q=block_q, interpret=interp)
 
 
 def msgs_fused_packed(v, x_px, y_px, start, wl, hl, probs,
-                      remap: Optional[jnp.ndarray] = None, *,
+                      remap: Optional[jnp.ndarray] = None,
+                      scale: Optional[jnp.ndarray] = None, *,
                       head_pack: int = 4, block_q: int = 128,
                       interpret: Optional[bool] = None):
     """Head-packed fused grid-sample + aggregation: ``head_pack`` heads
@@ -43,22 +47,25 @@ def msgs_fused_packed(v, x_px, y_px, start, wl, hl, probs,
     interp = _interpret_default() if interpret is None else interpret
     return msgs_fused_packed_pallas(v, x_px, y_px, start.astype(jnp.int32),
                                     wl.astype(jnp.int32), hl.astype(jnp.int32),
-                                    probs, remap, head_pack=head_pack,
+                                    probs, remap, scale, head_pack=head_pack,
                                     block_q=block_q, interpret=interp)
 
 
 def msgs_windowed_msp(v, x_px, y_px, lvl_of_pt, probs,
                       remap: Optional[jnp.ndarray] = None,
-                      keep_idx: Optional[jnp.ndarray] = None, *,
+                      keep_idx: Optional[jnp.ndarray] = None,
+                      scale: Optional[jnp.ndarray] = None, *,
                       level_shapes, ranges, tile_q: int = 128,
                       head_pack: int = 1, caps=None,
                       interpret: Optional[bool] = None):
     """Single-launch multi-scale-parallel windowed MSGS + fused in-kernel
-    level aggregation; FWP-compact-native. See kernels/msgs_windowed.py."""
+    level aggregation; FWP-compact-native. ``scale`` is the int8 table's
+    per-group (B, n_groups, G, Dh) dequant scale.
+    See kernels/msgs_windowed.py."""
     interp = _interpret_default() if interpret is None else interpret
     return msgs_windowed_msp_pallas(
         v, x_px, y_px, lvl_of_pt.astype(jnp.int32), probs,
-        remap, keep_idx,
+        remap, keep_idx, scale,
         level_shapes=tuple(tuple(int(x) for x in s) for s in level_shapes),
         ranges=tuple(float(r) for r in ranges), tile_q=tile_q,
         head_pack=head_pack,
@@ -66,12 +73,14 @@ def msgs_windowed_msp(v, x_px, y_px, lvl_of_pt, probs,
         interpret=interp)
 
 
-def stage_decode_table(v, remap=None, *, head_pack: int = 1):
+def stage_decode_table(v, remap=None, *, head_pack: int = 1, scale=None):
     """Stage the value table ONCE in the decode launch layout (see
-    kernels/msgs_decode.py). Routed through the module attribute so the
+    kernels/msgs_decode.py); int8 tables stage codes + the per-group
+    scale row together. Routed through the module attribute so the
     staging-spy tests can count stagings per memory."""
     return msgs_decode_kernel.stage_decode_table(v, remap,
-                                                 head_pack=head_pack)
+                                                 head_pack=head_pack,
+                                                 scale=scale)
 
 
 def msgs_decode(staged, x_px, y_px, start, wl, hl, probs, *,

@@ -45,8 +45,8 @@ from repro.msda.pipeline import MSDAPipelineState
 from repro.msda.plan import (DEFAULT_VMEM_BUDGET,
                              DEFAULT_WINDOW_STAGING_BUDGET, MSDAPlan,
                              block_q_for_levels, lane_layout, make_plan,
-                             next_pow2, plan_for, window_staging_budget,
-                             windowed_eligible)
+                             next_pow2, plan_for, resolve_table_dtype,
+                             window_staging_budget, windowed_eligible)
 from repro.msda.sampling import (SamplingPoints, corner_data,
                                  flat_gather_heads, generate_points,
                                  level_meta, select_points)
@@ -61,7 +61,8 @@ __all__ = [
     "MSDAPipelineState",
     "DEFAULT_VMEM_BUDGET", "DEFAULT_WINDOW_STAGING_BUDGET", "MSDAPlan",
     "block_q_for_levels", "lane_layout", "make_plan", "next_pow2",
-    "plan_for", "window_staging_budget", "windowed_eligible",
+    "plan_for", "resolve_table_dtype", "window_staging_budget",
+    "windowed_eligible",
     "SamplingPoints", "corner_data", "flat_gather_heads",
     "generate_points", "level_meta", "select_points",
 ]

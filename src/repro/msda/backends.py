@@ -118,7 +118,16 @@ def jnp_gather(plan, v: jnp.ndarray, pts: SamplingPoints,
         idx = pts.pix2slot[bidx, idx]                    # pruned -> sentinel
     eff_w = wgt * valid.astype(wgt.dtype) * probs[..., None]
     g = flat_gather_heads(v, idx)
-    return jnp.sum(g * eff_w.reshape(b, nq, h, k * 4)[..., None], axis=3)
+    scale = getattr(cache, "scale", None)
+    if scale is not None:
+        # int8 table: gather the codes, aggregate in compute dtype, and
+        # dequantize ONCE after aggregation — exact because the scale is
+        # shared across all rows of a channel.
+        g = g.astype(probs.dtype)
+    out = jnp.sum(g * eff_w.reshape(b, nq, h, k * 4)[..., None], axis=3)
+    if scale is not None:
+        out = out * scale.astype(out.dtype)       # (B,1,H,Dh) broadcasts
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -130,14 +139,15 @@ def pallas_fused(plan, v: jnp.ndarray, pts: SamplingPoints,
                  probs: jnp.ndarray, cache=None) -> jnp.ndarray:
     from repro.kernels import ops as kernel_ops
     h = v.shape[2]
+    scale = getattr(cache, "scale", None)
     if plan.head_pack > 1 and h % plan.head_pack == 0:
         return kernel_ops.msgs_fused_packed(
             v, pts.x_px, pts.y_px, pts.start, pts.wl, pts.hl, probs,
-            remap=pts.pix2slot, head_pack=plan.head_pack,
+            remap=pts.pix2slot, scale=scale, head_pack=plan.head_pack,
             block_q=plan.block_q)
     return kernel_ops.msgs_fused(
         v, pts.x_px, pts.y_px, pts.start, pts.wl, pts.hl, probs,
-        remap=pts.pix2slot, block_q=plan.block_q)
+        remap=pts.pix2slot, scale=scale, block_q=plan.block_q)
 
 
 # --------------------------------------------------------------------------
@@ -179,9 +189,15 @@ def pallas_windowed(plan, v: jnp.ndarray, pts: SamplingPoints,
             "FWP-compact windowed execution needs the raster-ordered "
             "keep_idx (slot -> pixel map) threaded through SamplingPoints")
         caps = fwp_lib.level_capacities(plan.level_shapes, cfg.fwp_capacity)
+    scale = getattr(cache, "scale", None)
+    if scale is not None:
+        # windowed kernel wants the scale per head-GROUP, matching its
+        # (batch, head-group) grid axes: (B,1,H,Dh) -> (B, H/g, g, Dh)
+        dh = v.shape[3]
+        scale = scale.reshape(b, h // g, g, dh)
     return kernel_ops.msgs_windowed_msp(
         v, pts.x_px, pts.y_px, pts.lvl_of_pt,
-        probs, remap=pts.pix2slot, keep_idx=pts.keep_idx,
+        probs, remap=pts.pix2slot, keep_idx=pts.keep_idx, scale=scale,
         level_shapes=plan.level_shapes, ranges=cfg.range_narrow,
         tile_q=plan.tile_q, head_pack=g, caps=caps)
 
@@ -207,7 +223,8 @@ def pallas_decode(plan, v: jnp.ndarray, pts: SamplingPoints,
     staged = getattr(cache, "staged", None)
     if staged is None:
         staged = kernel_ops.stage_decode_table(
-            v, pts.pix2slot, head_pack=plan.decode_head_pack)
+            v, pts.pix2slot, head_pack=plan.decode_head_pack,
+            scale=getattr(cache, "scale", None))
     return kernel_ops.msgs_decode(
         staged, pts.x_px, pts.y_px, pts.start, pts.wl, pts.hl, probs,
         block_q=plan.block_q)

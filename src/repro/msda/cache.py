@@ -33,7 +33,8 @@ import jax.numpy as jnp
 
 from repro.core import fwp as fwp_lib
 from repro.core.quant import (maybe_fake_quant, maybe_fake_quant_with_scale,
-                              quant_scale)
+                              quant_scale, quantize_table_rows,
+                              table_quant_scale)
 
 
 class MSDAValueCache(NamedTuple):
@@ -55,6 +56,13 @@ class MSDAValueCache(NamedTuple):
     #   per memory into the decode launch layout (kernels/msgs_decode.py);
     #   every consumer launch then reuses it — one staging per
     #   (batch, head-group) per memory, never per layer.
+    scale: Optional[jnp.ndarray] = None  # (B, 1, H, Dh) f32 per-channel
+    #   dequant scale when the plan stores the table as int8 codes
+    #   (``plan.quantized_table``): ``v`` then holds the codes and every
+    #   sampler dequantizes in-register AFTER the bilinear gather. The
+    #   scale is shared across all rows of a channel, so it is frozen for
+    #   the cache's lifetime — streaming row updates re-quantize against
+    #   it (same grid as the surrounding table). None for float tables.
 
 
 def project_values(params: dict, cfg, x_flat: jnp.ndarray,
@@ -105,6 +113,17 @@ def build_value_cache(params: dict, plan, x_flat: jnp.ndarray,
     v, pix2slot, n_rows = project_values(params, cfg, x_flat, fwp_state)
     keep_idx = fwp_state.keep_idx if pix2slot is not None else None
 
+    scale = None
+    if plan.quantized_table:
+        # int8 end-to-end: the dense f32 table never exists past this
+        # point — the cache stores codes + per-channel scale, and every
+        # backend (gather / fused / decode / windowed) dequantizes
+        # in-register after the bilinear corner gather. The sentinel row
+        # is exact zero (code 0). Scale is per-channel over the rows
+        # axis, so aggregation-then-dequant equals per-corner dequant.
+        scale = table_quant_scale(v)
+        v = quantize_table_rows(v, scale)
+
     table_bytes = plan.table_bytes_for_rows(
         n_rows, with_indirection=pix2slot is not None)
     slot_windows: Tuple[int, ...] = ()
@@ -126,10 +145,11 @@ def build_value_cache(params: dict, plan, x_flat: jnp.ndarray,
         # stagings per memory.
         from repro.kernels import msgs_decode as msgs_decode_kernel
         staged = msgs_decode_kernel.stage_decode_table(
-            v, pix2slot, head_pack=plan.decode_head_pack)
+            v, pix2slot, head_pack=plan.decode_head_pack, scale=scale)
     return MSDAValueCache(v=v, pix2slot=pix2slot, keep_idx=keep_idx,
                           n_rows=n_rows, slot_windows=slot_windows,
-                          table_bytes=table_bytes, staged=staged)
+                          table_bytes=table_bytes, staged=staged,
+                          scale=scale)
 
 
 # --------------------------------------------------------------------------
@@ -147,7 +167,14 @@ def cache_act_scale(cache: MSDAValueCache, cfg) -> Optional[jnp.ndarray]:
     grid as the surrounding table (see ``fake_quant_with_scale``)."""
     if cfg.act_bits is None or cfg.act_bits <= 0:
         return None
-    return quant_scale(cache.v, cfg.act_bits)
+    v = cache.v
+    if cache.scale is not None:
+        # int8 table: the act-quant grid lives in value space, not code
+        # space — recover it from the dequantized view. The per-channel
+        # amax survives quantization exactly (the amax element maps onto
+        # the code grid's endpoint), so this reproduces the build scale.
+        v = v.astype(cache.scale.dtype) * cache.scale
+    return quant_scale(v, cfg.act_bits)
 
 
 def project_cache_rows(params: dict, cfg, x_flat: jnp.ndarray,
@@ -177,7 +204,16 @@ def project_cache_rows(params: dict, cfg, x_flat: jnp.ndarray,
 
 def scatter_table_rows(v: jnp.ndarray, slot_idx: jnp.ndarray,
                        rows: jnp.ndarray) -> jnp.ndarray:
-    """Scatter (B, U, H, Dh) rows into the (B, N_rows, H, Dh) table."""
+    """Scatter (B, U, H, Dh) rows into the (B, N_rows, H, Dh) table.
+
+    Dtypes must match exactly: an int8 table takes int8 CODES (quantized
+    against the cache's frozen scale), never raw float rows — a silent
+    cast here would scatter garbage onto the code grid."""
+    if rows.dtype != v.dtype:
+        raise TypeError(
+            f"scatter_table_rows: rows dtype {rows.dtype} != table dtype "
+            f"{v.dtype}; quantize rows against the cache's frozen scale "
+            f"before scattering into an int8 table")
     bidx = jnp.arange(v.shape[0])[:, None]
     return v.at[bidx, slot_idx].set(rows)
 
@@ -209,6 +245,11 @@ def update_value_cache_rows(params: dict, plan, cache: MSDAValueCache,
         pix_idx = slot_idx
     rows = project_cache_rows(params, cfg, x_flat, pix_idx,
                               keep_mask=keep_mask, act_scale=act_scale)
+    if cache.scale is not None:
+        # int8 end-to-end: re-quantize the refreshed rows against the
+        # cache's FROZEN per-channel scale and scatter the codes — the
+        # dense f32 table is never materialized mid-stream.
+        rows = quantize_table_rows(rows, cache.scale)
     v = scatter_table_rows(cache.v, slot_idx, rows)
     staged = cache.staged
     if staged is not None:

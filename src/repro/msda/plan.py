@@ -89,6 +89,34 @@ def next_pow2(n: int) -> int:
     return 1 << (max(1, int(n)) - 1).bit_length()
 
 
+#: Table storage dtypes the cache/kernels understand. ``int8`` is the
+#: quantized layout (codes + per-channel f32 scale, dequantized in-register
+#: after the corner gather); the float dtypes store the table verbatim.
+_TABLE_DTYPES = ("int8", "float32", "bfloat16", "float16")
+
+
+def resolve_table_dtype(cfg, override: Optional[str] = None) -> str:
+    """Resolve the value-table storage dtype for one config.
+
+    Precedence: explicit ``override`` (the ``make_plan`` kwarg) >
+    ``cfg.table_dtype`` > the ``REPRO_MSDA_TABLE_DTYPE`` env var >
+    ``cfg.dtype`` (store the table in the compute dtype — the pre-int8
+    behaviour). Returns a canonical dtype name string."""
+    choice = override
+    if choice is None:
+        choice = getattr(cfg, "table_dtype", None)
+    if choice is None:
+        choice = os.environ.get("REPRO_MSDA_TABLE_DTYPE") or None
+    if choice is None:
+        return jnp.dtype(cfg.dtype).name
+    name = jnp.dtype(choice).name
+    if name not in _TABLE_DTYPES:
+        raise ValueError(
+            f"unsupported MSDA table dtype {name!r}; "
+            f"supported: {_TABLE_DTYPES}")
+    return name
+
+
 def block_q_for_levels(level_shapes: Sequence[Tuple[int, int]],
                        block_q: int) -> Tuple[int, ...]:
     """Per-query-level tile size: ``min(block_q, next_pow2(nq_l))``.
@@ -132,14 +160,18 @@ def windowed_eligible(cfg) -> bool:
 
 
 def _table_bytes(n_rows: int, lanes: int, itemsize: int, n_in: int,
-                 with_indirection: bool) -> int:
+                 with_indirection: bool, scale_row: bool = False) -> int:
     """THE value-table staging formula: rows x lanes x itemsize, plus the
-    int32 pix2slot indirection when compacted. Single source for
+    int32 pix2slot indirection when compacted, plus ONE f32 scale row
+    when the table is stored quantized (the per-channel dequant scale the
+    kernels stage next to the codes). Single source for
     ``MSDAPlan.table_bytes_for_rows``/``cache_table_bytes`` AND the auto
     policy's pre-construction decode gate — they must never diverge."""
     b = n_rows * lanes * itemsize
     if with_indirection:
         b += n_in * 4
+    if scale_row:
+        b += lanes * 4
     return b
 
 
@@ -179,6 +211,19 @@ class MSDAPlan:
     #   incremental frame update); None => no streaming consumer. Drives
     #   the rebuild-vs-incremental staged-bytes accounting in describe()
     #   and the TemporalCacheManager's update capacity (repro/stream/)
+    table_dtype: str = "float32"  # value-TABLE storage dtype (resolved by
+    #   resolve_table_dtype): "int8" => the cache stores int8 codes + a
+    #   per-channel f32 scale row, kernels dequantize in-register, and
+    #   every bytes figure below is 1-byte-per-element + the scale row
+
+    @property
+    def quantized_table(self) -> bool:
+        """True when the table is stored as int8 codes + f32 scale."""
+        return self.table_dtype == "int8"
+
+    @property
+    def table_itemsize(self) -> int:
+        return jnp.dtype(self.table_dtype).itemsize
 
     @property
     def fits_vmem(self) -> bool:
@@ -203,12 +248,13 @@ class MSDAPlan:
         table under this plan's lane layout, plus the int32 ``pix2slot``
         indirection when the table is compacted. The ONE formula behind
         both the static plan estimate (:attr:`cache_table_bytes`) and the
-        built cache's actual accounting (``MSDAValueCache.table_bytes``)."""
-        itemsize = jnp.dtype(self.cfg.dtype).itemsize
+        built cache's actual accounting (``MSDAValueCache.table_bytes``).
+        Itemsize comes from the TABLE dtype (int8 tables stage 1-byte
+        codes plus one f32 scale row), not the compute dtype."""
         lanes = self.cfg.head_dim if self.lane_layout == "native" \
             else _LANE_WIDTH
-        return _table_bytes(n_rows, lanes, itemsize, self.n_in,
-                            with_indirection)
+        return _table_bytes(n_rows, lanes, self.table_itemsize, self.n_in,
+                            with_indirection, scale_row=self.quantized_table)
 
     @property
     def cache_table_bytes(self) -> int:
@@ -272,6 +318,7 @@ class MSDAPlan:
         return (f"MSDAPlan(backend={self.backend}, block_q={self.block_q}, "
                 f"block_q_levels={self.block_q_levels}, "
                 f"lanes={self.lane_layout}x{self.head_pack}, "
+                f"tdtype={self.table_dtype}, "
                 f"table={self.value_table_bytes/1024:.0f}KB/"
                 f"{self.vmem_budget_bytes/1024:.0f}KB{win}{q}, "
                 f"n_in={self.n_in})")
@@ -283,7 +330,8 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
               vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
               n_queries: Optional[int] = None,
               n_consumers: int = 1,
-              stream_update_rows: Optional[int] = None) -> MSDAPlan:
+              stream_update_rows: Optional[int] = None,
+              table_dtype: Optional[str] = None) -> MSDAPlan:
     """Resolve the static plan.
 
     Backend precedence: explicit ``backend`` arg > ``cfg.backend`` >
@@ -314,15 +362,26 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
     ``stream_update_rows``: the streaming temporal-reuse consumer's static
     per-frame re-projection budget (see ``repro/stream/``). Accounting +
     capacity only — surfaced by ``describe()`` and consumed by the
-    ``TemporalCacheManager`` as its incremental update cap."""
+    ``TemporalCacheManager`` as its incremental update cap.
+
+    ``table_dtype``: value-table storage dtype override; resolution is
+    arg > ``cfg.table_dtype`` > ``REPRO_MSDA_TABLE_DTYPE`` > ``cfg.dtype``
+    (:func:`resolve_table_dtype`). Every staged-bytes figure below — the
+    fused whole-table fit, the windowed staged-window sums, the decode
+    gate — is computed with the TABLE itemsize, so an int8 table lets the
+    ``auto`` policy admit ~4x more rows per budget."""
     from repro.msda import backends as backend_registry
 
     level_shapes = tuple((int(h), int(w)) for h, w in level_shapes)
     _, n_in = fwp_lib.level_starts(level_shapes)
     layout, pack = lane_layout(cfg.n_heads, cfg.head_dim)
     itemsize = jnp.dtype(cfg.dtype).itemsize
+    tdtype = resolve_table_dtype(cfg, table_dtype)
+    t_item = jnp.dtype(tdtype).itemsize
+    quantized = tdtype == "int8"
     lanes = cfg.head_dim if layout == "native" else _LANE_WIDTH
-    table_bytes = value_rows(level_shapes) * lanes * itemsize
+    scale_extra = lanes * 4 if quantized else 0
+    table_bytes = value_rows(level_shapes) * lanes * t_item + scale_extra
 
     decode_shaped = n_queries is not None and n_queries != n_in
     decode_operand_bytes = None
@@ -340,12 +399,13 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
         # WORST CASE — a decoder fed no FWP link (state=None, or fwp off)
         # stages the DENSE n_in-row table (same argument as value_rows()
         # and the windowed branch's max(dense, compact) rule below).
-        cache_bytes = _table_bytes(n_in, lanes, itemsize, n_in, False)
+        cache_bytes = _table_bytes(n_in, lanes, t_item, n_in, False,
+                                   scale_row=quantized)
         if cfg.fwp_mode == "compact":
             caps = fwp_lib.level_capacities(level_shapes, cfg.fwp_capacity)
             cache_bytes = max(cache_bytes,
-                              _table_bytes(sum(caps) + 1, lanes, itemsize,
-                                           n_in, True))
+                              _table_bytes(sum(caps) + 1, lanes, t_item,
+                                           n_in, True, scale_row=quantized))
         g = pack if layout == "pack" else 1
         decode_operand_bytes = (block_q * g * cfg.n_lp
                                 * (3 * itemsize + 3 * 4)
@@ -363,11 +423,11 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
         geo = window_geometry(level_shapes,
                               tuple(float(r) for r in cfg.range_narrow),
                               tile_q)
-        window_bytes = geo.staged_bytes(lanes, itemsize)
+        window_bytes = geo.staged_bytes(lanes, t_item) + scale_extra
         if cfg.fwp_mode == "compact":
             caps = fwp_lib.level_capacities(level_shapes, cfg.fwp_capacity)
-            window_bytes_compact = geo.staged_bytes(lanes, itemsize,
-                                                    caps=caps)
+            window_bytes_compact = geo.staged_bytes(lanes, t_item,
+                                                    caps=caps) + scale_extra
 
     requested = backend
     if requested is None:
@@ -436,7 +496,8 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
                     window_bytes_compact=window_bytes_compact,
                     n_queries=n_queries, n_consumers=n_consumers,
                     decode_operand_bytes=decode_operand_bytes,
-                    stream_update_rows=stream_update_rows)
+                    stream_update_rows=stream_update_rows,
+                    table_dtype=tdtype)
 
 
 def plan_for(cfg, level_shapes: Tuple[Tuple[int, int], ...],
@@ -444,14 +505,17 @@ def plan_for(cfg, level_shapes: Tuple[Tuple[int, int], ...],
              n_queries: Optional[int] = None) -> MSDAPlan:
     """Memoized make_plan for hot call sites (the compat shim).
 
-    The ``auto`` policy reads the env-overridable staging budget, so the
-    resolved budget is part of the memo key — changing
-    ``REPRO_MSDA_VMEM_BUDGET`` mid-process must not serve a stale plan."""
+    The ``auto`` policy reads the env-overridable staging budget and the
+    table dtype resolves through ``REPRO_MSDA_TABLE_DTYPE``, so both are
+    part of the memo key — changing either env var mid-process must not
+    serve a stale plan."""
     return _plan_for_cached(cfg, level_shapes, backend, n_queries,
-                            window_staging_budget())
+                            window_staging_budget(),
+                            resolve_table_dtype(cfg))
 
 
 @functools.lru_cache(maxsize=256)
 def _plan_for_cached(cfg, level_shapes, backend, n_queries,
-                     _staging_budget: int) -> MSDAPlan:
-    return make_plan(cfg, level_shapes, backend=backend, n_queries=n_queries)
+                     _staging_budget: int, table_dtype: str) -> MSDAPlan:
+    return make_plan(cfg, level_shapes, backend=backend, n_queries=n_queries,
+                     table_dtype=table_dtype)

@@ -304,6 +304,30 @@ class StreamingDetrEngine:
                 f"tile_rows={r.scfg.tile_rows}, "
                 f"update<={r.update_rows}/{r.n_slots} rows/frame]")
 
+    def capacity_estimate(self, budget_bytes: Optional[int] = None) -> dict:
+        """Sessions-per-chip estimate: how many concurrent streams'
+        persistent value tables fit one staging budget (default the
+        REPRO_MSDA_VMEM_BUDGET window budget, 4 MB), per table dtype.
+        Each session's cost is its full table (rows x lanes x itemsize,
+        + the int8 scale row, + the pix2slot indirection when compact) —
+        the thing a slot holds resident between frames. The f32-vs-int8
+        rows are the serving story of the int8 table: ~4x more sessions
+        per chip at the same budget."""
+        from repro.msda import window_staging_budget
+        if budget_bytes is None:
+            budget_bytes = window_staging_budget()
+        per_dtype = {}
+        for d in ("float32", "int8"):
+            p = dataclasses.replace(self.plan, table_dtype=d)
+            per = p.table_bytes_for_rows(self.mgr._n_rows,
+                                         with_indirection=self.mgr._compact)
+            per_dtype[d] = {"bytes_per_session": per,
+                            "sessions": budget_bytes // per}
+        return {"budget_bytes": budget_bytes,
+                "table_dtype": self.plan.table_dtype,
+                "rows_per_session": self.mgr._n_rows,
+                "per_dtype": per_dtype}
+
     # ---- session lifecycle -------------------------------------------------
     def open_session(self) -> int:
         if not self._free_slots:
@@ -328,13 +352,14 @@ class StreamingDetrEngine:
         self.sessions[sid].queue.append(np.asarray(memory))
 
     # ---- jitted forward ----------------------------------------------------
-    def _fwd_impl(self, params, memory, v, staged, pix2slot, keep_idx):
+    def _fwd_impl(self, params, memory, v, staged, pix2slot, keep_idx,
+                  scale):
         from repro.msda.cache import MSDAValueCache
         from repro.msda.decoder import decoder_apply
         cache = MSDAValueCache(
             v=v, pix2slot=pix2slot, keep_idx=keep_idx,
             n_rows=self.mgr._n_rows, slot_windows=self.mgr._slot_windows,
-            table_bytes=self.mgr._full_bytes, staged=staged)
+            table_bytes=self.mgr._full_bytes, staged=staged, scale=scale)
         hs, refs, dstate = decoder_apply(
             params["decoder"], self.dec_cfg, self.plan, memory,
             collect_stats=self._update_fwp, cache=cache)
@@ -369,7 +394,7 @@ class StreamingDetrEngine:
         cache, fstats = self.mgr.step(memory)
         cls_logits, boxes, freq = self._fwd(
             self.params, memory, cache.v, cache.staged, cache.pix2slot,
-            cache.keep_idx)
+            cache.keep_idx, cache.scale)
         if freq is not None:
             self.mgr.observe(freq)
         probs = np.asarray(jax.nn.softmax(cls_logits, axis=-1))

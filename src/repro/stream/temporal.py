@@ -102,15 +102,50 @@ class TemporalCacheManager:
 
     def __init__(self, plan, value_params: dict,
                  scfg: StreamConfig = StreamConfig(), *, batch: int = 1):
+        if scfg.diff_channel_stride < 1:
+            raise ValueError("diff_channel_stride must be >= 1")
+        self.params = value_params
+        self.scfg = scfg
+        self.batch = int(batch)
+
+        # ---- mutable stream state (host-held, arrays on device) ----------
+        self.cache: Optional[MSDAValueCache] = None
+        self.x_ref: Optional[jnp.ndarray] = None   # PROBED diff reference:
+        #   the (B, N_in, ceil(D/stride)) channel slice of each tile's
+        #   last-reprojected memory — all the diff ever reads
+        self.ema: Optional[jnp.ndarray] = None
+        self.fwp: Optional[fwp_lib.FWPState] = None
+        self.act_scale: Optional[jnp.ndarray] = None
+        self._cache_fwp: Optional[fwp_lib.FWPState] = None  # geometry the
+        #   current cache was built with (stale detection self-heals)
+        self._cache_plan = None                     # plan the current jitted
+        #   paths were traced against — ``step`` detects a mid-stream swap
+        #   (``mgr.plan = other_plan``) and reconfigures + rebuilds
+        self._geometry_stale = True                 # first frame: full build
+        self.frame_index = 0
+        self.rebuild_frames = 0
+        self.staged_bytes_total = 0
+        self.rebuild_bytes_total = 0                # per-frame-rebuild cost
+        self.last_stats: Optional[dict] = None
+
+        self._reconfigure(plan)
+
+    def _reconfigure(self, plan) -> None:
+        """(Re-)derive every plan-dependent static AND re-jit the compiled
+        paths. Called at construction and when ``step`` detects the
+        manager's plan was swapped mid-stream (a table-dtype or act-bits
+        change, a backend move): the jitted closures close over the plan
+        at TRACE time, so a swap without a re-jit would silently keep
+        executing the old plan's build/update — wrong dtype, wrong
+        accounting. The next frame after a swap always full-rebuilds
+        (reason ``plan-change``): the existing table's codes live on the
+        old plan's grid."""
         cfg = plan.cfg
         if cfg.fwp_mode not in ("off", "mask", "compact"):
             raise ValueError(f"unknown fwp_mode {cfg.fwp_mode!r}")
         self.plan = plan
-        self.params = value_params
-        self.scfg = scfg
-        self.batch = int(batch)
         self.geo: TileGeometry = tile_geometry(plan.level_shapes,
-                                               scfg.tile_rows)
+                                               self.scfg.tile_rows)
         self._compact = cfg.fwp_mode == "compact"
         self.n_slots = plan_slot_count(plan)
         if self._compact:
@@ -126,34 +161,15 @@ class TemporalCacheManager:
             self._n_rows, with_indirection=self._compact)
         self.update_rows = plan.stream_update_rows \
             if plan.stream_update_rows is not None \
-            else stream_update_cap(plan, scfg.update_frac)
+            else stream_update_cap(plan, self.scfg.update_frac)
         self.update_rows = max(1, min(self.update_rows, self.n_slots))
         self._incr_bytes = plan.table_bytes_for_rows(
             self.update_rows, with_indirection=False)
 
-        if scfg.diff_channel_stride < 1:
-            raise ValueError("diff_channel_stride must be >= 1")
-
-        # ---- mutable stream state (host-held, arrays on device) ----------
-        self.cache: Optional[MSDAValueCache] = None
-        self.x_ref: Optional[jnp.ndarray] = None   # PROBED diff reference:
-        #   the (B, N_in, ceil(D/stride)) channel slice of each tile's
-        #   last-reprojected memory — all the diff ever reads
-        self.ema: Optional[jnp.ndarray] = None
-        self.fwp: Optional[fwp_lib.FWPState] = None
-        self.act_scale: Optional[jnp.ndarray] = None
-        self._cache_fwp: Optional[fwp_lib.FWPState] = None  # geometry the
-        #   current cache was built with (stale detection self-heals)
-        self._geometry_stale = True                 # first frame: full build
-        self.frame_index = 0
-        self.rebuild_frames = 0
-        self.staged_bytes_total = 0
-        self.rebuild_bytes_total = 0                # per-frame-rebuild cost
-        self.last_stats: Optional[dict] = None
-
         self._jit_build = jax.jit(self._build_impl)
         self._jit_frame = jax.jit(self._frame_impl)
         k = float(cfg.fwp_k)
+        scfg = self.scfg
         self._jit_hyst = jax.jit(lambda ema, prev: fwp_lib.build_fwp_state_hysteresis(
             ema, plan.level_shapes,
             k_enter=k * scfg.hyst_enter, k_exit=k * scfg.hyst_exit,
@@ -182,7 +198,7 @@ class TemporalCacheManager:
         return changed, slot_dirty, jnp.sum(slot_dirty, axis=1)
 
     def _update_impl(self, params, x_new, x_ref, v, staged, keep_idx,
-                     keep_mask, changed, slot_dirty, act_scale):
+                     keep_mask, changed, slot_dirty, act_scale, table_scale):
         # dirty slots first; clean fillers re-project unchanged (or
         # sub-threshold-drifted) pixels, which is harmless by construction
         _, idx_u = jax.lax.top_k(slot_dirty.astype(jnp.float32),
@@ -190,11 +206,15 @@ class TemporalCacheManager:
         idx_u = jnp.sort(idx_u, axis=1)
         # the ONE row-update path (cache.py): project + scatter into the
         # table and its decode staging. The temp cache just pairs the
-        # traced arrays with this manager's static metadata.
+        # traced arrays with this manager's static metadata. ``table_scale``
+        # is the int8 table's FROZEN per-channel dequant scale: refreshed
+        # rows re-quantize against it, so streaming stays int8 end-to-end
+        # without ever materializing a dense float table.
         tmp = MSDAValueCache(v=v, pix2slot=None, keep_idx=keep_idx,
                              n_rows=self._n_rows,
                              slot_windows=self._slot_windows,
-                             table_bytes=self._full_bytes, staged=staged)
+                             table_bytes=self._full_bytes, staged=staged,
+                             scale=table_scale)
         upd, _ = update_value_cache_rows(params, self.plan, tmp, x_new,
                                          idx_u, act_scale=act_scale,
                                          keep_mask=keep_mask)
@@ -204,7 +224,7 @@ class TemporalCacheManager:
         return upd.v, upd.staged, x_ref
 
     def _frame_impl(self, params, x_new, x_ref, v, staged, keep_idx,
-                    keep_mask, act_scale):
+                    keep_mask, act_scale, table_scale):
         """ONE dispatch per frame: diff + speculative incremental update.
 
         The update runs unconditionally (its work is bounded by the
@@ -215,7 +235,7 @@ class TemporalCacheManager:
         changed, slot_dirty, nd = self._diff_impl(x_new, x_ref, keep_idx)
         v, staged, x_ref = self._update_impl(
             params, x_new, x_ref, v, staged, keep_idx, keep_mask, changed,
-            slot_dirty, act_scale)
+            slot_dirty, act_scale, table_scale)
         return jnp.max(nd), jnp.sum(changed), v, staged, x_ref
 
     # ---- host-side orchestration ------------------------------------------
@@ -248,6 +268,7 @@ class TemporalCacheManager:
         self.act_scale = cache_act_scale(self.cache, cfg)
         self.x_ref = self._probe(x_new)
         self._cache_fwp = self.fwp
+        self._cache_plan = self.plan
         self._geometry_stale = False
 
     def step(self, x_new, force_full: bool = False
@@ -263,10 +284,27 @@ class TemporalCacheManager:
         assert x_new.ndim == 3 and x_new.shape[1] == self.plan.n_in, \
             (x_new.shape, self.plan.n_in)
         n_dirty = tiles_hit = 0
-        keep_transition = self._geometry_stale and self.cache is not None
-        if self.cache is None or self._geometry_stale or force_full:
+        plan_change = self.cache is not None \
+            and self.plan is not self._cache_plan
+        if plan_change:
+            # mid-stream plan swap (table dtype, act_bits, backend, ...):
+            # the jitted paths and accounting were traced against the old
+            # plan and the table's codes live on the old plan's grid —
+            # reconfigure everything and rebuild from this frame's memory
+            old = self._cache_plan
+            self._reconfigure(self.plan)
+            if (self.plan.level_shapes != old.level_shapes
+                    or self.plan.cfg.fwp_mode != old.cfg.fwp_mode
+                    or self.plan.cfg.fwp_capacity != old.cfg.fwp_capacity):
+                # keep state rows were derived under the OLD geometry
+                self.fwp = self.ema = None
+        keep_transition = self._geometry_stale and self.cache is not None \
+            and not plan_change
+        if self.cache is None or self._geometry_stale or force_full \
+                or plan_change:
             mode, reason = "rebuild", (
                 "first-frame" if self.cache is None else
+                "plan-change" if plan_change else
                 "keep-transition" if keep_transition else "forced")
             self._full_build(x_new)
             staged_bytes = self._full_bytes
@@ -277,7 +315,8 @@ class TemporalCacheManager:
                 keep_mask = self.fwp.keep_mask
             nd, tiles, v, staged, x_ref = self._jit_frame(
                 self.params, x_new, self.x_ref, self.cache.v,
-                self.cache.staged, keep_idx, keep_mask, self.act_scale)
+                self.cache.staged, keep_idx, keep_mask, self.act_scale,
+                self.cache.scale)
             n_dirty = int(nd)
             tiles_hit = int(tiles)
             if n_dirty > self.update_rows:
@@ -363,6 +402,7 @@ class TemporalCacheManager:
         staged = max(self.staged_bytes_total, 1)
         return {
             "frames": self.frame_index,
+            "table_dtype": self.plan.table_dtype,
             "rebuild_frames": self.rebuild_frames,
             "incremental_frames": self.frame_index - self.rebuild_frames,
             "update_rows": self.update_rows,

@@ -206,6 +206,49 @@ def test_int8_storage_roundtrip_on_cache_value_shapes(fwp_mode):
     assert bool(jnp.all(errs <= su * 0.5 + 1e-6))
 
 
+@pytest.mark.parametrize("fwp_mode", ["off", "compact"])
+def test_int8_table_cache_stores_codes_not_floats(fwp_mode):
+    """The end-to-end extension of the storage round-trip above: with
+    ``table_dtype="int8"`` the cache itself IS the packed form — ``v``
+    holds int8 codes, ``scale`` the frozen (B, 1, H, Dh) f32 per-channel
+    scale, and a dense float table is never materialized. The
+    dequantized view obeys the same half-step bound against the float
+    build, and the compact sentinel row is code 0 exactly. (Full
+    sampled-OUTPUT parity across all backends lives in
+    tests/test_msda_backends.py.)"""
+    import dataclasses as _dc
+
+    from repro.msda import build_value_cache, make_plan, msda_attention
+    cfg = MSDeformAttnConfig(d_model=D, n_heads=4, fwp_mode=fwp_mode,
+                             fwp_capacity=0.6, fwp_k=1.0)
+    key = jax.random.PRNGKey(5)
+    params = init_msdeform_attn(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, N_IN, D))
+    state = None
+    if fwp_mode == "compact":
+        plan_r = make_plan(cfg, LEVELS, backend="jnp_gather")
+        q = jax.random.normal(jax.random.fold_in(key, 2), (B, N_IN, D))
+        refs = jax.random.uniform(jax.random.fold_in(key, 3), (B, N_IN, 2))
+        _, state = msda_attention(params, plan_r, q, refs, x)
+    plan32 = make_plan(_dc.replace(cfg, table_dtype="float32"), LEVELS,
+                       backend="jnp_gather", n_queries=16)
+    plan8 = make_plan(_dc.replace(cfg, table_dtype="int8"), LEVELS,
+                      backend="jnp_gather", n_queries=16)
+    ref = build_value_cache(params, plan32, x, state)
+    c8 = build_value_cache(params, plan8, x, state)
+    assert ref.scale is None and ref.v.dtype == x.dtype
+    assert c8.v.dtype == jnp.int8
+    assert c8.scale is not None and c8.scale.shape == (B, 1, 4, D // 4)
+    deq = np.asarray(c8.v, np.float32) * np.asarray(c8.scale)
+    err = np.abs(deq - np.asarray(ref.v))
+    bound = np.broadcast_to(np.asarray(c8.scale) * 0.5, err.shape) + 1e-6
+    assert (err <= bound).all(), float((err - bound).max())
+    # dtype-aware accounting: the int8 build stages ~4x fewer bytes
+    assert c8.table_bytes < ref.table_bytes / 3
+    if fwp_mode == "compact":
+        assert not np.asarray(c8.v[:, -1]).any()   # sentinel: exact 0
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(1, 15))
 def test_pap_topk_keep_frac(k):

@@ -6,6 +6,7 @@ everything), and must agree with the ``jnp_gather`` backend under real
 PAP-topk / FWP-compact pruning. Plan auto-selection and the head-packed
 (4 heads x Dh=32 -> 128 lanes) dispatch are exercised explicitly."""
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -330,6 +331,11 @@ def test_decode_staging_spy_positive_control(monkeypatch):
     assert spy.calls == 3, spy.calls
 
 
+@pytest.mark.skipif(
+    os.environ.get("REPRO_MSDA_TABLE_DTYPE") == "int8",
+    reason="int8 tables round values onto the code grid: the value "
+           "projection's gradient vanishes through round() by "
+           "construction, so grad parity is a float-table contract")
 def test_decode_grad_parity_through_full_decoder():
     """Gradient-parity smoke through the FULL 6-layer decode: the
     pallas_decode custom_vjp (backward = exact jnp reference) must
@@ -362,6 +368,69 @@ def test_decode_grad_parity_through_full_decoder():
     # the shared value projection receives gradient through the STAGED
     # table's custom_vjp (transpose-aware backward)
     assert float(np.abs(np.asarray(grads_d["value"]["value_w"])).sum()) > 0
+
+
+# --------------------------------------------------------------------------
+# int8 value table: full sampled-output parity vs the f32 pipeline
+# --------------------------------------------------------------------------
+
+INT8_PARITY_BACKENDS = ("jnp_gather", "pallas_fused", "pallas_decode",
+                        "pallas_windowed")
+
+
+@pytest.mark.parametrize("packed", (False, True), ids=("padlane", "packed"))
+@pytest.mark.parametrize("fwp", ("off", "compact"))
+@pytest.mark.parametrize("backend", INT8_PARITY_BACKENDS)
+def test_int8_table_matches_f32_within_quant_tol(backend, fwp, packed):
+    """END-TO-END int8 parity: the same geometry sampled through the int8
+    table (codes + frozen per-channel scale, dequantized after the
+    bilinear aggregation) must match the f32 pipeline within the ANALYTIC
+    quantization bound — each code rounds by at most scale/2, and
+    bilinear weights x attention probabilities form a convex combination,
+    so per-element |err| <= scale/2 (+ float noise). Explicit
+    ``table_dtype`` pins BOTH sides regardless of the
+    REPRO_MSDA_TABLE_DTYPE env, so the matrix is identical on the CI int8
+    leg. The FWP sentinel row must quantize to code 0 (pruned taps stay
+    exactly zero)."""
+    if backend == "pallas_decode":
+        cfg, params, q2, refs2, x, state = _decode_setup(packed, fwp)
+        plan_kw = dict(n_queries=N_DEC_Q, n_consumers=6)
+    else:
+        cfg, params, q2, refs2, x = _combo_setup(packed)
+        state = None
+        plan_kw = dict(block_q=64)
+        if fwp == "compact":
+            cfg = dataclasses.replace(cfg, fwp_mode="compact", fwp_k=1.0,
+                                      fwp_capacity=0.6)
+            plan_e = msda.make_plan(cfg, LEVELS, backend="jnp_gather",
+                                    block_q=64)
+            _, state = msda.msda_attention(params, plan_e, q2, refs2, x)
+            assert state.fwp is not None
+
+    cfg32 = dataclasses.replace(cfg, table_dtype="float32")
+    cfg8 = dataclasses.replace(cfg, table_dtype="int8")
+    plan32 = msda.make_plan(cfg32, LEVELS, backend="jnp_gather", **plan_kw)
+    plan8 = msda.make_plan(cfg8, LEVELS, backend=backend, **plan_kw)
+    assert plan8.quantized_table and not plan32.quantized_table
+    want, _ = msda.msda_attention(params, plan32, q2, refs2, x, state=state)
+    out, _ = msda.msda_attention(params, plan8, q2, refs2, x, state=state)
+
+    # the scale the int8 run derived (deterministic per memory)
+    cache8 = msda.build_value_cache(params, plan8, x, state)
+    assert cache8.v.dtype == jnp.int8
+    assert cache8.scale is not None
+    # per-head sampled outputs are convex combinations of table rows, so
+    # their error is <= scale/2 per (h, dh) channel; the output
+    # projection then mixes channels: |err_d| <= sum_hk |W_o| * scale/2
+    scale = np.asarray(cache8.scale, np.float64)      # (B, 1, H, Dh)
+    w_abs = np.abs(np.asarray(params["out_w"], np.float64))   # (H, Dh, D)
+    tol = np.einsum("bohk,hkd->bod", scale / 2, w_abs) + 2e-5  # (B, 1, D)
+    err = np.abs(np.asarray(out, np.float64) - np.asarray(want, np.float64))
+    assert np.all(err <= tol), \
+        f"max excess {float((err - tol).max()):.3e} over analytic tol"
+    if fwp == "compact":
+        assert not np.any(np.asarray(cache8.v)[:, -1]), \
+            "FWP sentinel row must be code 0 (exact zero)"
 
 
 # --------------------------------------------------------------------------
@@ -509,7 +578,10 @@ def test_plan_auto_selects_persistent_decode(setup, monkeypatch):
     # (build_value_cache's documented fallback), so a budget between the
     # compact and dense footprints must ALSO reject the decode kernel —
     # same argument as value_rows() and the windowed max(dense, compact)
-    dense = plan.n_in * 128 * jnp.dtype(cfg_c.dtype).itemsize
+    # dtype-aware: the dense fallback stages the table at the plan's
+    # RESOLVED table dtype (int8 under REPRO_MSDA_TABLE_DTYPE=int8 stages
+    # 1-byte codes + one f32 scale row, ~4x fewer bytes)
+    dense = plan.table_bytes_for_rows(plan.n_in, with_indirection=False)
     assert plan.cache_table_bytes < dense
     monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", str(dense - 1))
     plan = msda.make_plan(cfg_c, LEVELS, backend="auto", n_queries=40)

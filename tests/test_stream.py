@@ -327,6 +327,95 @@ def test_streaming_engine_sessions_end_to_end():
     assert engine.sessions[s2].slot in (0, 1)
 
 
+# --------------------------------------------------------------------------
+# int8 table streaming: frozen scale, dtype guards, mid-stream plan swap
+# --------------------------------------------------------------------------
+
+def test_int8_stream_stays_int8_end_to_end():
+    """A quantized-table stream never materializes a float table: the
+    first-frame rebuild builds codes + frozen per-channel scale, and
+    every incremental update scatters int8 codes into BOTH the cache
+    table and its staged decode layout under the SAME scale (identical
+    frame => bit-stable codes)."""
+    cfg = _cfg(table_dtype="int8")
+    mgr, plan = _mgr(cfg, StreamConfig(tile_rows=2, delta_threshold=1e-6,
+                                       update_frac=0.5),
+                     backend="pallas_decode")
+    assert plan.quantized_table
+    key = jax.random.PRNGKey(21)
+    x0 = jax.random.normal(key, (2, N_IN, D))
+    cache0, st0 = mgr.step(x0)
+    assert st0["mode"] == "rebuild"
+    assert cache0.v.dtype == jnp.int8
+    assert cache0.scale is not None and cache0.scale.dtype == jnp.float32
+    assert cache0.staged is not None and cache0.staged.v.dtype == jnp.int8
+    s0 = np.asarray(cache0.scale)
+    cache1, st1 = mgr.step(x0.at[:, 3:6].add(0.5))
+    assert st1["mode"] == "incremental" and st1["n_dirty"] > 0
+    assert cache1.v.dtype == jnp.int8
+    assert cache1.staged.v.dtype == jnp.int8
+    # the scale is FROZEN for the cache's lifetime — updates requantize
+    # onto the same grid, they never re-derive it
+    np.testing.assert_array_equal(np.asarray(cache1.scale), s0)
+    # identical frame: the requantized rows land on identical codes
+    cache2, st2 = mgr.step(x0.at[:, 3:6].add(0.5))
+    assert st2["mode"] == "incremental"
+    np.testing.assert_array_equal(np.asarray(cache2.v), np.asarray(cache1.v))
+    assert mgr.report()["table_dtype"] == "int8"
+
+
+def test_int8_scatter_and_staged_update_reject_dtype_drift():
+    """The hard guards behind the end-to-end int8 contract: scattering
+    float rows into an int8 table (cache OR staged layout) raises instead
+    of silently casting garbage onto the code grid."""
+    from repro.kernels.msgs_decode import (stage_decode_table,
+                                           update_staged_rows)
+    from repro.msda.cache import scatter_table_rows
+    cfg = _cfg(table_dtype="int8")
+    mgr, _ = _mgr(cfg, StreamConfig(tile_rows=2, delta_threshold=1e-6,
+                                    update_frac=0.5),
+                  backend="pallas_decode")
+    key = jax.random.PRNGKey(22)
+    cache, _ = mgr.step(jax.random.normal(key, (2, N_IN, D)))
+    idx = jnp.zeros((2, 1), jnp.int32)
+    f32_rows = jnp.zeros((2, 1) + cache.v.shape[2:], jnp.float32)
+    with pytest.raises(TypeError, match="frozen scale"):
+        scatter_table_rows(cache.v, idx, f32_rows)
+    with pytest.raises(TypeError, match="dtype"):
+        update_staged_rows(cache.staged, idx, f32_rows)
+    # int8 codes (the quantize-then-scatter path) are accepted
+    codes = jnp.zeros_like(f32_rows, jnp.int8)
+    assert scatter_table_rows(cache.v, idx, codes).dtype == jnp.int8
+    assert update_staged_rows(cache.staged, idx, codes).v.dtype == jnp.int8
+
+
+def test_mid_stream_plan_swap_forces_full_rebuild():
+    """Changing the manager's plan mid-stream (e.g. flipping the table
+    dtype f32 -> int8) must force ONE full rebuild that re-derives the
+    new layout + scale, then return to steady incremental updates."""
+    cfg = _cfg()
+    mgr, plan = _mgr(cfg, StreamConfig(tile_rows=2, delta_threshold=1e-6,
+                                       update_frac=0.5))
+    key = jax.random.PRNGKey(23)
+    x0 = jax.random.normal(key, (2, N_IN, D))
+    mgr.step(x0)
+    cache, st = mgr.step(x0.at[:, 0:3].add(0.5))
+    assert st["mode"] == "incremental"
+    assert cache.scale is None and cache.v.dtype != jnp.int8
+    plan8 = msda.make_plan(dataclasses.replace(cfg, table_dtype="int8"),
+                           LEVELS, backend="jnp_gather", n_queries=16,
+                           n_consumers=2)
+    mgr.plan = plan8
+    cache, st = mgr.step(x0.at[:, 0:3].add(0.5))
+    assert st["mode"] == "rebuild" and st["reason"] == "plan-change", st
+    assert cache.v.dtype == jnp.int8 and cache.scale is not None
+    assert mgr.report()["table_dtype"] == "int8"
+    # steady state resumes on the new plan — and stays int8
+    cache, st = mgr.step(x0.at[:, 0:3].add(0.7))
+    assert st["mode"] == "incremental"
+    assert cache.v.dtype == jnp.int8
+
+
 def test_streaming_engine_admission_forces_rebuild():
     """Admitting a session mid-stream resets its slot and rebuilds, so a
     stale slot's table can never leak into the new session."""
