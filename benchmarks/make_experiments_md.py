@@ -208,6 +208,27 @@ def main() -> None:
                 f"(`fmap_reuse_table_dtype` row; parity within the "
                 f"analytic scale/2 tolerance is tested across all four "
                 f"backends).")
+        if "ordering_ratio" in reuse:
+            parts.append(
+                f" **Cache-local query ordering** (repro/msda/ordering.py) "
+                f"permutes the decode queries by reference point before "
+                f"sampling and inverts the permutation on the output — "
+                f"bit-identical numerics (permutation-parity tested per "
+                f"backend), but each tile of {reuse['ordering_tile_q']} "
+                f"queries now spans a spatially compact set of points, so "
+                f"the per-tile staging window shrinks: measured on "
+                f"{reuse['ordering_queries']} uniform-random decode "
+                f"queries, {reuse['ordering_unordered_kb']:.0f} KB/tile "
+                f"unordered vs {reuse['ordering_raster_kb']:.0f} KB "
+                f"raster-ordered = **{reuse['ordering_ratio']:.2f}x** "
+                f"smaller mean window (z-order: "
+                f"{reuse['ordering_zorder_kb']:.0f} KB, "
+                f"{reuse['ordering_zorder_ratio']:.2f}x — row-span-based "
+                f"staging credits raster's row locality, not z-order's "
+                f"column locality). `plan.describe()` reports the same "
+                f"measured figure (`tilewin=`), and the `auto` policy can "
+                f"use it for the VMEM-fit check; wall-time rows: "
+                f"`msda_decode6_ordered`, `msda_windowed_ordered`.")
         micro = bench.get("micro", {})
         if "msda_decoder6_persistent" in micro \
                 and "msda_decoder6_cached" in micro:

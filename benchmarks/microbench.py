@@ -64,6 +64,18 @@ def _msda_backend_rows() -> list[tuple[str, float, str]]:
     rows.append(("msda_pallas_windowed_fwpcompact",
                  _time(lambda: fn(params, q, refs, x)),
                  "planned block, FWP-compact table"))
+    # ordering on the raster-only windowed kernel: the plan carries the
+    # policy but the attention pass gates the permutation off (the kernel
+    # derives per-tile windows from raster query position) — the row
+    # pins the identity path's cost at parity with the row above
+    plan_wo = msda.make_plan(cfg_c, levels, backend="pallas_windowed",
+                             block_q=64, query_order="raster")
+    fn_wo = jax.jit(lambda p_, q_, r_, x_, plan=plan_wo:
+                    msda.msda_attention(p_, plan, q_, r_, x_, state=state)[0])
+    rows.append(("msda_windowed_ordered",
+                 _time(lambda: fn_wo(params, q, refs, x)),
+                 "query_order=raster on the raster-only windowed kernel "
+                 "(gated: identity path)"))
     rows.extend(_decoder_rows(cfg_c, params, levels, x, state))
     rows.extend(_stream_rows(cfg_c))
     return rows
@@ -160,6 +172,10 @@ def _decoder_rows(attn_cfg, attn_params, levels, memory, state):
         dataclasses.replace(attn_cfg, table_dtype="int8"), levels,
         backend="pallas_decode", n_queries=dcfg.n_queries,
         n_consumers=dcfg.n_layers)
+    plan_po = msda.make_plan(attn_cfg, levels, backend="pallas_decode",
+                             n_queries=dcfg.n_queries,
+                             n_consumers=dcfg.n_layers,
+                             query_order="raster")
 
     def cross_stack(p_, m_, per_layer_rebuild: bool, plan=plan):
         # identical 6-layer cross-attention stack; the ONLY difference is
@@ -188,6 +204,8 @@ def _decoder_rows(attn_cfg, attn_params, levels, memory, state):
                                                     plan=plan_p))
     persistent8 = jax.jit(lambda p_, m_: cross_stack(p_, m_, False,
                                                      plan=plan_p8))
+    ordered = jax.jit(lambda p_, m_: cross_stack(p_, m_, False,
+                                                 plan=plan_po))
     full = jax.jit(lambda p_, m_: msda.decoder_apply(
         p_, dcfg, plan, m_, state)[0])
     kb8 = plan_p8.cache_table_bytes / 1024
@@ -203,6 +221,10 @@ def _decoder_rows(attn_cfg, attn_params, levels, memory, state):
          _time(lambda: persistent8(dparams, memory)),
          f"same, int8 table staged+sampled in-kernel ({kb32:.0f}KB "
          f"-> {kb8:.0f}KB staged)"),
+        ("msda_decode6_ordered",
+         _time(lambda: ordered(dparams, memory)),
+         "same persistent stack, queries raster-ordered by reference "
+         "point per layer (permute + sample + invert, bit-identical)"),
         ("msda_decoder6_rebuild",
          _time(lambda: rebuild(dparams, memory)),
          "6 cross-attn layers rebuilding the value table per layer"),

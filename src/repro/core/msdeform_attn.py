@@ -57,6 +57,11 @@ class MSDeformAttnConfig:
     #   the kernels dequantize in-register after the corner gather; None
     #   resolves via the REPRO_MSDA_TABLE_DTYPE env var, falling back to
     #   `dtype` (see repro.msda.plan.resolve_table_dtype)
+    query_order: Optional[str] = None    # cache-local query ordering:
+    #   "raster" | "zorder" permute queries by reference point before
+    #   sampling and invert on output (bit-identical numerics, tighter
+    #   per-tile staged windows — see repro.msda.ordering); None resolves
+    #   via the REPRO_MSDA_QUERY_ORDER env var, falling back to "none"
 
     @property
     def head_dim(self) -> int:

@@ -25,6 +25,14 @@ per (batch, head-group). This kernel closes that gap:
     (B, n_layers, N_q, H, K) operands and the stacked
     (B, n_layers, N_q, H, Dh) output holds every layer's samples.
 
+Decode queries arrive in arbitrary learned order; cache-local query
+ordering (``repro/msda/ordering.py``, ``plan.query_order``) permutes
+them by reference point OUTSIDE this kernel — the launch itself is
+order-agnostic, it just sees query tiles whose sampling points happen
+to cluster, so a tile's touched table rows span fewer cache lines
+(measured: ``plan.with_measured_tile_window`` / the
+``msda_decode6_ordered`` micro row).
+
 Two consumption modes:
 
   * **per-layer persistent** (the decoder fast path, ``n_layers=1``

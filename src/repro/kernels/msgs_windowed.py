@@ -34,6 +34,15 @@ can DMA the right slab.
 ``pallas_windowed_loop`` numeric diff target and is deleted; the parity
 suite now diffs the multi-scale-parallel kernel against the ``jnp_gather``
 oracle directly.)
+
+The per-tile windows above derive from raster query POSITION (tile t
+covers queries [t*tile, (t+1)*tile) of the raster encoder order), which
+is why the backend registers ``raster_only=True``: cache-local query
+ordering (``repro/msda/ordering.py``) must not permute the queries fed
+to this kernel, and the attention pass gates it to the identity path.
+The ordering layer's measured per-tile accounting
+(``plan.with_measured_tile_window``) uses the same window geometry to
+size what a permutation-aware decode tile would stage.
 """
 from __future__ import annotations
 

@@ -41,6 +41,10 @@ from repro.msda.backends import (BackendInfo, available_backends,
 from repro.msda.cache import MSDAValueCache, build_value_cache
 from repro.msda.decoder import (MSDADecoderConfig, decoder_apply,
                                 decoder_logical_axes, init_decoder)
+from repro.msda.ordering import (QUERY_ORDERS, invert_queries,
+                                 permute_queries, query_permutation,
+                                 query_sort_keys, resolve_query_order,
+                                 tile_window_stats)
 from repro.msda.pipeline import MSDAPipelineState
 from repro.msda.plan import (DEFAULT_VMEM_BUDGET,
                              DEFAULT_WINDOW_STAGING_BUDGET, MSDAPlan,
@@ -59,6 +63,9 @@ __all__ = [
     "MSDADecoderConfig", "decoder_apply", "decoder_logical_axes",
     "init_decoder",
     "MSDAPipelineState",
+    "QUERY_ORDERS", "invert_queries", "permute_queries",
+    "query_permutation", "query_sort_keys", "resolve_query_order",
+    "tile_window_stats",
     "DEFAULT_VMEM_BUDGET", "DEFAULT_WINDOW_STAGING_BUDGET", "MSDAPlan",
     "block_q_for_levels", "lane_layout", "make_plan", "next_pow2",
     "plan_for", "resolve_table_dtype", "window_staging_budget",

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core import fwp as fwp_lib
 from repro.core.quant import maybe_fake_quant
 from repro.msda import backends as backend_registry
+from repro.msda import ordering as ordering_lib
 from repro.msda.cache import MSDAValueCache, build_value_cache, project_values
 from repro.msda.pipeline import MSDAPipelineState
 from repro.msda.plan import MSDAPlan
@@ -58,6 +59,25 @@ def msda_attention_cached(
         state = MSDAPipelineState.initial()
     wq = lambda w: maybe_fake_quant(w, cfg.weight_bits)
 
+    # ---- 0. cache-local query ordering (plan policy) ---------------------
+    # sort queries by reference point so each kernel tile touches a tight
+    # slot window, run the whole pass permuted, and invert on the output.
+    # Every per-query op below is row-independent, so the result is
+    # BIT-IDENTICAL to the unordered pass (tests/test_msda_ordering.py).
+    # Raster-only backends (pallas_windowed) derive their tile->window
+    # geometry from raster query POSITION, so for them the permutation
+    # stays off and ordering is accounting-only (plan.measured_tilewin).
+    # Per-layer decoder calls re-derive the permutation here from each
+    # layer's own (pre-refinement) reference points — refined refs shift
+    # every layer, so no permutation is carried across layers.
+    inv_perm = None
+    if plan.query_order != "none" \
+            and not backend_registry.backend_info(plan.backend).raster_only:
+        perm, inv_perm = ordering_lib.query_permutation(
+            ref_points, plan.level_shapes, plan.query_order)
+        query = ordering_lib.permute_queries(query, perm)
+        ref_points = ordering_lib.permute_queries(ref_points, perm)
+
     # ---- 1+2. PAP'd probabilities + masked point generation --------------
     # compact-table geometry rides along with the point geometry: the
     # windowed kernel locates slot windows by searchsorting keep_idx
@@ -74,6 +94,8 @@ def msda_attention_cached(
 
     out = jnp.einsum("bnhk,hkd->bnd", out_h, wq(params["out_w"])) \
         + params["out_b"]
+    if inv_perm is not None:
+        out = ordering_lib.invert_queries(out, inv_perm)
 
     # ---- 4. FWP frequency counting for the NEXT block --------------------
     need_freq = update_fwp and cfg.fwp_mode != "off"

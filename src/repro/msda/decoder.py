@@ -188,7 +188,12 @@ def decoder_apply(
         h = nn.layer_norm(
             layer["ln_sa"],
             h + _self_attention(layer, h, pos, attn_cfg.n_heads))
-        # ---- sample everywhere: cross-attention against the SHARED cache
+        # ---- sample everywhere: cross-attention against the SHARED cache.
+        # When the plan carries a query_order, the cached pass derives the
+        # cache-local permutation PER LAYER from this layer's incoming
+        # (pre-refinement) refs — the refinement below shifts every
+        # layer's points, so no permutation survives across layers — and
+        # inverts it on the output, so the ordering is invisible here.
         attn_out, dstate = msda_attention_cached(
             layer["cross"], plan, h + pos, refs, dstate.cache,
             state=dstate, collect_stats=collect_stats, update_fwp=False)

@@ -1,0 +1,218 @@
+"""Cache-local query ordering — QUILL-style reference-point clustering.
+
+The windowed/decode kernels' staging economics rest on adjacent queries
+in a tile sharing staged slot windows: the per-level slot ranges are
+raster-ordered (``repro/core/fwp.py``), so the bytes a query tile stages
+are set by the REFERENCE-POINT SPREAD of the tile, not its size. Encoder
+queries arrive raster-ordered and are already local; decoder queries
+arrive in arbitrary learned order, so one 128-query tile can span the
+whole image and stage near-disjoint windows per level.
+
+This module computes a permutation over queries from their reference
+points, to be applied BEFORE sampling and inverted on the output:
+
+  * ``raster`` — sort by flat pixel index on the *dominant* level (the
+    largest h*w — it dominates the staged bytes). Optimal for row-window
+    locality on that one level; other levels ride along (their windows
+    shrink too because their coordinates are the same points rescaled).
+  * ``zorder`` — sort by the Morton (Z-order) code of the quantized
+    reference point. Interleaving x/y bits keeps queries 2-D-local, so
+    BOTH the row span and the column spread stay bounded per tile —
+    the multi-level balanced choice (every level's window shrinks by
+    roughly the same factor).
+
+Numerics are untouched: every per-query op in the MSDA pass (projections,
+softmax, gather, bilinear aggregate) is row-independent, so
+``invert(perm, f(permute(perm, x))) == f(x)`` holds BIT-IDENTICALLY under
+the same dtype (property-tested in tests/test_msda_ordering.py). Only
+locality — the measured per-tile window bytes — changes.
+
+The knob is plan-level policy: ``MSDeformAttnConfig.query_order`` in
+{"none", "raster", "zorder"}, env-overridable via
+``REPRO_MSDA_QUERY_ORDER`` (same precedence shape as the table dtype:
+arg > cfg field > env > default). Raster-only backends
+(``pallas_windowed``) keep their queries unpermuted — their tile->window
+geometry is DERIVED from raster query position, so the permutation is an
+identity there and the ordering win is reported by the measured
+accounting instead (:func:`tile_window_stats`).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fwp as fwp_lib
+
+__all__ = [
+    "QUERY_ORDERS", "resolve_query_order", "query_sort_keys",
+    "query_permutation", "permute_queries", "invert_queries",
+    "tile_window_stats",
+]
+
+#: The recognised ordering policies.
+QUERY_ORDERS = ("none", "raster", "zorder")
+
+#: Morton quantization grid: 2^10 cells per axis — finer than any level
+#: of the DETR pyramids (<= a few hundred pixels) while keeping the
+#: interleaved key in 20 bits, comfortably inside int32 (x64 is off).
+_MORTON_BITS = 10
+
+
+def resolve_query_order(cfg, override: Optional[str] = None) -> str:
+    """Resolve the query-ordering policy for one config.
+
+    Precedence: explicit ``override`` (the ``make_plan`` kwarg) >
+    ``cfg.query_order`` > the ``REPRO_MSDA_QUERY_ORDER`` env var >
+    ``"none"`` (the pre-ordering behaviour)."""
+    choice = override
+    if choice is None:
+        choice = getattr(cfg, "query_order", None)
+    if choice is None:
+        choice = os.environ.get("REPRO_MSDA_QUERY_ORDER") or None
+    if choice is None:
+        return "none"
+    if choice not in QUERY_ORDERS:
+        raise ValueError(
+            f"unsupported MSDA query order {choice!r}; "
+            f"supported: {QUERY_ORDERS}")
+    return choice
+
+
+def dominant_level(level_shapes: Sequence[Tuple[int, int]]) -> int:
+    """Index of the level that dominates staged bytes (largest h*w)."""
+    sizes = [h * w for h, w in level_shapes]
+    return int(np.argmax(sizes))
+
+
+def _interleave_bits(v: jnp.ndarray) -> jnp.ndarray:
+    """Spread the low ``_MORTON_BITS`` bits of ``v`` (int32, >= 0) so bit
+    i lands at position 2i. Classic part1by1 magic-mask ladder; every
+    intermediate stays below 2^31, so int32 math is safe with x64 off."""
+    v = (v | (v << 8)) & 0x00FF00FF
+    v = (v | (v << 4)) & 0x0F0F0F0F
+    v = (v | (v << 2)) & 0x33333333
+    v = (v | (v << 1)) & 0x55555555
+    return v
+
+
+def query_sort_keys(ref_points: jnp.ndarray,
+                    level_shapes: Sequence[Tuple[int, int]],
+                    method: str) -> jnp.ndarray:
+    """Per-query sort keys from normalized reference points.
+
+    ``ref_points``: (..., Nq, 2) with (x, y) in [0, 1]. Returns (..., Nq)
+    int32 keys — raster index on the dominant level, or the Morton code
+    of the 2^10-quantized point. jit-safe (pure jnp)."""
+    if method == "raster":
+        h, w = level_shapes[dominant_level(level_shapes)]
+        px = jnp.clip((ref_points[..., 0] * w).astype(jnp.int32), 0, w - 1)
+        py = jnp.clip((ref_points[..., 1] * h).astype(jnp.int32), 0, h - 1)
+        return py * w + px
+    if method == "zorder":
+        n = 1 << _MORTON_BITS
+        qx = jnp.clip((ref_points[..., 0] * n).astype(jnp.int32), 0, n - 1)
+        qy = jnp.clip((ref_points[..., 1] * n).astype(jnp.int32), 0, n - 1)
+        return (_interleave_bits(qy) << 1) | _interleave_bits(qx)
+    raise ValueError(f"unknown query order {method!r} "
+                     f"(expected one of {QUERY_ORDERS[1:]})")
+
+
+def query_permutation(ref_points: jnp.ndarray,
+                      level_shapes: Sequence[Tuple[int, int]],
+                      method: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(perm, inv_perm) over the query axis, both (..., Nq) int32.
+
+    ``perm[i]`` is the original index of the query placed at sorted
+    position i (gather semantics: ``sorted_x = take(x, perm)``);
+    ``inv_perm`` undoes it (``x == take(sorted_x, inv_perm)``). The sort
+    is STABLE, so ``method="none"``-adjacent ties keep their original
+    relative order and the permutation is deterministic."""
+    keys = query_sort_keys(ref_points, level_shapes, method)
+    perm = jnp.argsort(keys, axis=-1, stable=True).astype(jnp.int32)
+    inv = jnp.argsort(perm, axis=-1, stable=True).astype(jnp.int32)
+    return perm, inv
+
+
+def _take_queries(arr: jnp.ndarray, perm: jnp.ndarray) -> jnp.ndarray:
+    """take_along_axis on the query axis (axis 1) of a (B, Nq, ...) array,
+    broadcasting the (B, Nq) permutation over trailing dims."""
+    idx = perm.reshape(perm.shape + (1,) * (arr.ndim - perm.ndim))
+    return jnp.take_along_axis(arr, idx, axis=1)
+
+
+def permute_queries(arr: jnp.ndarray, perm: jnp.ndarray) -> jnp.ndarray:
+    """Reorder a (B, Nq, ...) array into sorted query order."""
+    return _take_queries(arr, perm)
+
+
+def invert_queries(arr: jnp.ndarray, inv_perm: jnp.ndarray) -> jnp.ndarray:
+    """Undo :func:`permute_queries` on a (B, Nq, ...) output."""
+    return _take_queries(arr, inv_perm)
+
+
+# --------------------------------------------------------------------------
+# Measured per-tile window-bytes accounting (host-side, numpy)
+# --------------------------------------------------------------------------
+
+def tile_window_stats(ref_points,
+                      level_shapes: Sequence[Tuple[int, int]],
+                      ranges: Sequence[float],
+                      tile_q: int,
+                      lanes: int,
+                      itemsize: int,
+                      *,
+                      order: str = "none",
+                      capacity: Optional[float] = None) -> dict:
+    """MEASURED window bytes per query tile for a concrete query set.
+
+    The static ``window_bytes`` accounting in the plan is a worst case
+    over raster tiles; this is the per-tile measurement for an ARBITRARY
+    query order — the quantity ordering actually improves. For each tile
+    of ``tile_q`` consecutive queries (in the given ``order``) and each
+    level, the staged row window follows the windowed kernel's span
+    formula (``repro/kernels/msgs_windowed.py``): rows touching
+    ``ref_y*h - 0.5 ± (R + 1)`` plus the bilinear lower corner, times the
+    level width. Bytes per tile sum the per-level windows (compact:
+    capacity-clamped slot window + the int32 pix2slot window slice, the
+    same split as ``WindowGeometry.staged_bytes``).
+
+    ``ref_points``: (Nq, 2) or (B, Nq, 2) — batch 0 is measured.
+    Returns ``{"order", "n_tiles", "max_bytes", "mean_bytes"}``."""
+    refs = np.asarray(ref_points, np.float64)
+    if refs.ndim == 3:
+        refs = refs[0]
+    nq = refs.shape[0]
+    if order != "none":
+        keys = np.asarray(query_sort_keys(
+            jnp.asarray(refs, jnp.float32), level_shapes, order))
+        refs = refs[np.argsort(keys, kind="stable")]
+    caps = None
+    if capacity is not None:
+        caps = fwp_lib.level_capacities(level_shapes, capacity)
+
+    n_tiles = max(1, -(-nq // tile_q))
+    tile_bytes = np.zeros(n_tiles, np.int64)
+    for t in range(n_tiles):
+        chunk = refs[t * tile_q:(t + 1) * tile_q]
+        for li, (h, w) in enumerate(level_shapes):
+            r = float(ranges[li])
+            y = chunk[:, 1] * h - 0.5
+            ymin = float(np.min(y)) - r - 1.0
+            ymax = float(np.max(y)) + r + 1.0
+            r0 = max(0, int(np.floor(ymin)))
+            r1 = min(h - 1, int(np.floor(ymax)) + 1)
+            win_pix = (r1 - r0 + 1) * w
+            if caps is None:
+                tile_bytes[t] += win_pix * lanes * itemsize
+            else:
+                slot_win = min(win_pix, caps[li])
+                tile_bytes[t] += slot_win * lanes * itemsize + win_pix * 4
+    return {
+        "order": order,
+        "n_tiles": n_tiles,
+        "max_bytes": int(tile_bytes.max()),
+        "mean_bytes": float(tile_bytes.mean()),
+    }

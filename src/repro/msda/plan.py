@@ -215,6 +215,17 @@ class MSDAPlan:
     #   resolve_table_dtype): "int8" => the cache stores int8 codes + a
     #   per-channel f32 scale row, kernels dequantize in-register, and
     #   every bytes figure below is 1-byte-per-element + the scale row
+    query_order: str = "none"     # cache-local query ordering policy
+    #   (resolved by repro.msda.ordering.resolve_query_order): "raster" |
+    #   "zorder" sort queries by reference point before sampling and
+    #   invert the permutation on output — numerics bit-identical,
+    #   per-tile staged windows tighter. Raster-only backends keep their
+    #   queries unpermuted (their window geometry is raster-derived)
+    measured_tilewin: Optional[Tuple[int, int, int, int]] = None
+    #   MEASURED per-tile window bytes for a concrete query set
+    #   (with_measured_tile_window): (unordered max, unordered mean,
+    #   ordered max, ordered mean) — the ordered/unordered ratio is the
+    #   quantity query ordering improves; surfaced by describe()
 
     @property
     def quantized_table(self) -> bool:
@@ -270,6 +281,38 @@ class MSDAPlan:
                                              with_indirection=True)
         return self.table_bytes_for_rows(self.n_in, with_indirection=False)
 
+    def with_measured_tile_window(self, ref_points) -> "MSDAPlan":
+        """Measure per-tile window bytes for a CONCRETE query set and
+        return a plan carrying the figures (``measured_tilewin``).
+
+        The static ``window_bytes`` accounting is a worst case over
+        raster tiles; this runs the same span formula over ``tile_q``
+        consecutive queries of the given reference points — once in
+        arrival order, once under this plan's ordering policy (falling
+        back to ``raster`` when the plan order is ``none``, so the
+        accounting always shows what ordering would buy). The DENSE
+        window is measured (the same headline as ``window_bytes`` — the
+        staging worst case; the FWP capacity clamp saturates both
+        figures identically, see ``tile_window_stats``'s ``capacity``
+        kwarg for the compact variant). Host-side numpy; needs
+        ``cfg.range_narrow`` (no bound => no finite window => returns
+        self unchanged)."""
+        if self.cfg.range_narrow is None:
+            return self
+        from repro.msda import ordering
+        lanes = self.cfg.head_dim if self.lane_layout == "native" \
+            else _LANE_WIDTH
+        order = self.query_order if self.query_order != "none" else "raster"
+        kw = dict(level_shapes=self.level_shapes,
+                  ranges=tuple(float(r) for r in self.cfg.range_narrow),
+                  tile_q=self.tile_q, lanes=lanes,
+                  itemsize=self.table_itemsize)
+        un = ordering.tile_window_stats(ref_points, order="none", **kw)
+        od = ordering.tile_window_stats(ref_points, order=order, **kw)
+        return dataclasses.replace(
+            self, measured_tilewin=(un["max_bytes"], int(un["mean_bytes"]),
+                                    od["max_bytes"], int(od["mean_bytes"])))
+
     def describe(self) -> str:
         """One-line human summary of every static decision.
 
@@ -284,6 +327,15 @@ class MSDAPlan:
             win = f", win={self.window_bytes/1024:.0f}KB"
             if self.window_bytes_compact is not None:
                 win += f"(compact {self.window_bytes_compact/1024:.0f}KB)"
+        if self.query_order != "none":
+            win += f", order={self.query_order}"
+        if self.measured_tilewin is not None:
+            # measured per-tile staged window (with_measured_tile_window):
+            # unordered -> ordered, max and mean over query tiles
+            umax, umean, omax, omean = self.measured_tilewin
+            win += (f", tilewin={umax/1024:.0f}->{omax/1024:.0f}KB max / "
+                    f"{umean/1024:.0f}->{omean/1024:.0f}KB mean "
+                    f"({umean/max(omean, 1):.1f}x)")
         q = ""
         if self.decode_shaped:
             cb = self.cache_table_bytes
@@ -331,7 +383,9 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
               n_queries: Optional[int] = None,
               n_consumers: int = 1,
               stream_update_rows: Optional[int] = None,
-              table_dtype: Optional[str] = None) -> MSDAPlan:
+              table_dtype: Optional[str] = None,
+              query_order: Optional[str] = None,
+              measured_window_bytes: Optional[int] = None) -> MSDAPlan:
     """Resolve the static plan.
 
     Backend precedence: explicit ``backend`` arg > ``cfg.backend`` >
@@ -369,13 +423,27 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
     (:func:`resolve_table_dtype`). Every staged-bytes figure below — the
     fused whole-table fit, the windowed staged-window sums, the decode
     gate — is computed with the TABLE itemsize, so an int8 table lets the
-    ``auto`` policy admit ~4x more rows per budget."""
+    ``auto`` policy admit ~4x more rows per budget.
+
+    ``query_order``: cache-local query ordering policy; resolution is
+    arg > ``cfg.query_order`` > ``REPRO_MSDA_QUERY_ORDER`` > ``"none"``
+    (:func:`repro.msda.ordering.resolve_query_order`).
+
+    ``measured_window_bytes``: a MEASURED per-tile staged-window figure
+    for the actual (ordered) query set — e.g. ``max_bytes`` from
+    :func:`repro.msda.ordering.tile_window_stats`. When provided, the
+    ``auto`` policy's windowed VMEM-fit check uses it in place of the
+    static worst case when it is tighter: an ordered query set whose
+    measured windows fit the staging budget can plan the windowed kernel
+    even though the unordered worst case would not."""
     from repro.msda import backends as backend_registry
+    from repro.msda import ordering as ordering_lib
 
     level_shapes = tuple((int(h), int(w)) for h, w in level_shapes)
     _, n_in = fwp_lib.level_starts(level_shapes)
     layout, pack = lane_layout(cfg.n_heads, cfg.head_dim)
     itemsize = jnp.dtype(cfg.dtype).itemsize
+    qorder = ordering_lib.resolve_query_order(cfg, query_order)
     tdtype = resolve_table_dtype(cfg, table_dtype)
     t_item = jnp.dtype(tdtype).itemsize
     quantized = tdtype == "int8"
@@ -460,6 +528,11 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
             # what must fit.
             staged = None if window_bytes is None \
                 else max(window_bytes, window_bytes_compact or 0)
+            if staged is not None and measured_window_bytes is not None:
+                # the caller measured the ACTUAL (ordered) per-tile
+                # windows — admit the windowed kernel on the tighter of
+                # the static worst case and the measured figure
+                staged = min(staged, int(measured_window_bytes))
             windowed_fits = staged is not None \
                 and staged <= window_staging_budget()
             if table_bytes <= vmem_budget_bytes:
@@ -497,7 +570,7 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
                     n_queries=n_queries, n_consumers=n_consumers,
                     decode_operand_bytes=decode_operand_bytes,
                     stream_update_rows=stream_update_rows,
-                    table_dtype=tdtype)
+                    table_dtype=tdtype, query_order=qorder)
 
 
 def plan_for(cfg, level_shapes: Tuple[Tuple[int, int], ...],
@@ -505,17 +578,21 @@ def plan_for(cfg, level_shapes: Tuple[Tuple[int, int], ...],
              n_queries: Optional[int] = None) -> MSDAPlan:
     """Memoized make_plan for hot call sites (the compat shim).
 
-    The ``auto`` policy reads the env-overridable staging budget and the
-    table dtype resolves through ``REPRO_MSDA_TABLE_DTYPE``, so both are
-    part of the memo key — changing either env var mid-process must not
-    serve a stale plan."""
+    The ``auto`` policy reads the env-overridable staging budget, the
+    table dtype resolves through ``REPRO_MSDA_TABLE_DTYPE``, and the
+    query order resolves through ``REPRO_MSDA_QUERY_ORDER``, so all
+    three are part of the memo key — changing any env var mid-process
+    must not serve a stale plan."""
+    from repro.msda import ordering as ordering_lib
     return _plan_for_cached(cfg, level_shapes, backend, n_queries,
                             window_staging_budget(),
-                            resolve_table_dtype(cfg))
+                            resolve_table_dtype(cfg),
+                            ordering_lib.resolve_query_order(cfg))
 
 
 @functools.lru_cache(maxsize=256)
 def _plan_for_cached(cfg, level_shapes, backend, n_queries,
-                     _staging_budget: int, table_dtype: str) -> MSDAPlan:
+                     _staging_budget: int, table_dtype: str,
+                     query_order: str) -> MSDAPlan:
     return make_plan(cfg, level_shapes, backend=backend, n_queries=n_queries,
-                     table_dtype=table_dtype)
+                     table_dtype=table_dtype, query_order=query_order)

@@ -295,6 +295,9 @@ class StreamingDetrEngine:
         self._next_sid = 0
         self._last_memory = None       # (B, N_in, D) last served batch —
         #   idle slots replay their row (zero dirty tiles by construction)
+        self._slot_centroid: dict[int, np.ndarray] = {}  # slot -> mean
+        #   predicted (cx, cy) of the last served frame — the session's
+        #   reference-point cluster, what reorder_sessions() sorts by
         self._fwd = jax.jit(self._fwd_impl)
 
     def describe(self) -> str:
@@ -345,6 +348,7 @@ class StreamingDetrEngine:
     def close_session(self, sid: int) -> StreamSession:
         sess = self.sessions.pop(sid)
         self._free_slots.append(sess.slot)
+        self._slot_centroid.pop(sess.slot, None)
         return sess
 
     def submit_frame(self, sid: int, memory: np.ndarray) -> None:
@@ -406,7 +410,58 @@ class StreamingDetrEngine:
                 "stream": fstats,
             })
             sess.frames_done += 1
+            # the session's reference-point cluster: mean predicted box
+            # center, normalized [0,1]^2 — reorder_sessions() sorts on it
+            self._slot_centroid[slot] = boxes[slot][:, :2].mean(axis=0)
         return len(pending)
+
+    # ---- cache-local session placement -------------------------------------
+    def reorder_sessions(self, method: Optional[str] = None) -> dict:
+        """Assign sessions whose reference points cluster to ADJACENT
+        batch slots.
+
+        The batched manager stores every per-slot array with batch as the
+        leading axis, so slot adjacency IS memory adjacency: sessions
+        looking at nearby image regions stage overlapping value-table
+        rows, and placing them next to each other keeps those rows
+        resident across the batch sweep. Sort key is the session centroid
+        (mean predicted box center of its last frame) through the same
+        :func:`repro.msda.ordering.query_sort_keys` the query paths use —
+        ``method`` defaults to the plan's ``query_order`` (falling back
+        to raster). Free slots are fixed points, so ``_free_slots`` stays
+        valid; detections are per-slot state and move with their session,
+        so results are unchanged. Returns {sid: slot} after the move."""
+        from repro.msda import ordering
+        if method is None:
+            method = self.plan.query_order \
+                if self.plan.query_order != "none" else "raster"
+        sessions = sorted(self.sessions.values(), key=lambda s: s.sid)
+        placed = [s for s in sessions if s.slot in self._slot_centroid]
+        if len(placed) > 1:
+            cents = jnp.asarray(
+                np.stack([self._slot_centroid[s.slot] for s in placed]))
+            keys = np.asarray(ordering.query_sort_keys(
+                cents[None], self.plan.level_shapes, method))[0]
+            order = np.argsort(keys, kind="stable")
+            slots_sorted = sorted(s.slot for s in placed)
+            perm = list(range(self.max_sessions))
+            for i, j in enumerate(order):
+                # key-sorted session i lands in the i-th occupied slot;
+                # gather semantics: new slot takes the state at perm[slot]
+                perm[slots_sorted[i]] = placed[int(j)].slot
+            self.mgr.permute_slots(tuple(perm))
+            if self._last_memory is not None:
+                self._last_memory = jnp.take(
+                    self._last_memory, jnp.asarray(perm), axis=0)
+            old_cent = dict(self._slot_centroid)
+            old_by_slot = {s.slot: s for s in placed}
+            self._slot_centroid = {
+                new: old_cent[old] for new, old in enumerate(perm)
+                if old in old_cent}
+            for new, old in enumerate(perm):
+                if old in old_by_slot:
+                    old_by_slot[old].slot = new
+        return {s.sid: s.slot for s in self.sessions.values()}
 
     def run_until_drained(self, max_steps: int = 10000) -> None:
         for _ in range(max_steps):

@@ -23,8 +23,13 @@ table every frame. This manager treats the cache as PERSISTENT state:
     (:func:`repro.core.fwp.ema_update`) and the keep decision runs with
     keep-mask hysteresis (:func:`repro.core.fwp.build_fwp_state_hysteresis`),
     so ``keep_idx`` churn is bounded and the compact-slot windows stay
-    stable; a keep-geometry transition (rare by construction) triggers a
-    full rebuild on the next frame.
+    stable; a keep-geometry transition (rare by construction) restages
+    only the CHANGED levels on the next frame: each level's slots are
+    one contiguous range of the compact table (``_compact_from_scores``
+    keeps slots raster-ordered per level), so a transition confined to a
+    subset of levels re-projects exactly those ranges and swaps the
+    geometry arrays — a full rebuild happens only when every level's
+    keep set moved (or FWP is off/mask, where there is no slot range).
   * **frozen quant scale** — partial updates fake-quant against the scale
     captured at the last full build (the whole table must share one
     grid); full rebuilds refresh it.
@@ -44,6 +49,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import fwp as fwp_lib
 from repro.msda.cache import (MSDAValueCache, build_value_cache,
@@ -124,6 +130,7 @@ class TemporalCacheManager:
         self._geometry_stale = True                 # first frame: full build
         self.frame_index = 0
         self.rebuild_frames = 0
+        self.partial_frames = 0                     # per-level restages
         self.staged_bytes_total = 0
         self.rebuild_bytes_total = 0                # per-frame-rebuild cost
         self.last_stats: Optional[dict] = None
@@ -165,9 +172,22 @@ class TemporalCacheManager:
         self.update_rows = max(1, min(self.update_rows, self.n_slots))
         self._incr_bytes = plan.table_bytes_for_rows(
             self.update_rows, with_indirection=False)
+        # static per-level geometry for the partial (per-level) restage:
+        # slot range [slot_offs[l], slot_offs[l+1]) and pixel range
+        # [pix_starts[l], pix_starts[l]+h*w) of level l
+        starts, _ = fwp_lib.level_starts(plan.level_shapes)
+        self._pix_starts = tuple(int(s) for s in starts)
+        if self._compact:
+            caps = fwp_lib.level_capacities(plan.level_shapes,
+                                            cfg.fwp_capacity)
+            self._slot_offs = tuple(
+                int(o) for o in np.concatenate([[0], np.cumsum(caps)]))
+        else:
+            self._slot_offs = ()
 
         self._jit_build = jax.jit(self._build_impl)
         self._jit_frame = jax.jit(self._frame_impl)
+        self._jit_restage = jax.jit(self._restage_impl)
         k = float(cfg.fwp_k)
         scfg = self.scfg
         self._jit_hyst = jax.jit(lambda ema, prev: fwp_lib.build_fwp_state_hysteresis(
@@ -238,6 +258,23 @@ class TemporalCacheManager:
             slot_dirty, act_scale, table_scale)
         return jnp.max(nd), jnp.sum(changed), v, staged, x_ref
 
+    def _restage_impl(self, params, x_new, v, staged, new_keep_idx,
+                      slot_idx, act_scale, table_scale):
+        """Per-level partial restage: re-project the ``slot_idx`` slot
+        ranges of the CHANGED levels from the current frame, addressed
+        through the NEW keep geometry (slot -> pixel via
+        ``new_keep_idx``), under the frozen act/table quant scales —
+        the same row-update path as the incremental frame, just with a
+        fresh slot->pixel map for the restaged ranges."""
+        tmp = MSDAValueCache(v=v, pix2slot=None, keep_idx=new_keep_idx,
+                             n_rows=self._n_rows,
+                             slot_windows=self._slot_windows,
+                             table_bytes=self._full_bytes, staged=staged,
+                             scale=table_scale)
+        upd, _ = update_value_cache_rows(params, self.plan, tmp, x_new,
+                                         slot_idx, act_scale=act_scale)
+        return upd.v, upd.staged
+
     # ---- host-side orchestration ------------------------------------------
     def _warm_fwp(self, batch: int) -> Optional[fwp_lib.FWPState]:
         """Warm-start keep state for fresh sessions: keep everything the
@@ -271,15 +308,121 @@ class TemporalCacheManager:
         self._cache_plan = self.plan
         self._geometry_stale = False
 
+    def _transition_levels(self) -> Optional[Tuple[int, ...]]:
+        """Which levels' keep geometry changed vs the cache's, or None
+        when a partial restage is not applicable (not compact, no
+        geometry to compare, nothing changed, or EVERY level changed —
+        then a full rebuild moves the same bytes with one build)."""
+        new, old = self.fwp, self._cache_fwp
+        if not self._compact or new is None or old is None \
+                or new.keep_idx is None or old.keep_idx is None:
+            return None
+        changed = []
+        for li, (h, w) in enumerate(self.plan.level_shapes):
+            s0, s1 = self._slot_offs[li], self._slot_offs[li + 1]
+            p0 = self._pix_starts[li]
+            if bool(jnp.any(new.keep_idx[:, s0:s1] != old.keep_idx[:, s0:s1])) \
+                    or bool(jnp.any(new.pix2slot[:, p0:p0 + h * w]
+                                    != old.pix2slot[:, p0:p0 + h * w])):
+                changed.append(li)
+        if not changed or len(changed) == len(self.plan.level_shapes):
+            return None
+        return tuple(changed)
+
+    def _partial_restage(self, x_new: jnp.ndarray,
+                         levels: Tuple[int, ...]) -> int:
+        """Restage only the changed levels' contiguous slot ranges.
+
+        Re-projects those ranges from the current frame through the NEW
+        keep geometry, swaps ``keep_idx``/``pix2slot`` (and the decode
+        staging's ``remap``) wholesale — they are whole-array int32
+        geometry, cheap next to the value rows — and refreshes the diff
+        reference for the changed levels' pixel ranges. Quant scales
+        stay FROZEN (same grid as the surrounding table, exactly like
+        the incremental row path). Returns the staged-bytes delta:
+        the restaged rows under the plan's lane layout plus the changed
+        levels' share of the pix2slot indirection."""
+        slot_np = np.concatenate([
+            np.arange(self._slot_offs[l], self._slot_offs[l + 1])
+            for l in levels]).astype(np.int32)
+        b = x_new.shape[0]
+        slot_idx = jnp.broadcast_to(jnp.asarray(slot_np)[None],
+                                    (b, len(slot_np)))
+        v, staged = self._jit_restage(
+            self.params, x_new, self.cache.v, self.cache.staged,
+            self.fwp.keep_idx, slot_idx, self.act_scale, self.cache.scale)
+        if staged is not None:
+            staged = dataclasses.replace(staged, remap=self.fwp.pix2slot)
+        self.cache = self.cache._replace(
+            v=v, staged=staged, keep_idx=self.fwp.keep_idx,
+            pix2slot=self.fwp.pix2slot)
+        x_ref = self.x_ref
+        probe = self._probe(x_new)
+        pix_restaged = 0
+        for l in levels:
+            h, w = self.plan.level_shapes[l]
+            p0 = self._pix_starts[l]
+            x_ref = x_ref.at[:, p0:p0 + h * w].set(probe[:, p0:p0 + h * w])
+            pix_restaged += h * w
+        self.x_ref = x_ref
+        self._cache_fwp = self.fwp
+        self._geometry_stale = False
+        return self.plan.table_bytes_for_rows(
+            len(slot_np), with_indirection=False) + pix_restaged * 4
+
+    def permute_slots(self, perm) -> None:
+        """Reorder the batch (session) slots of every per-slot array.
+
+        ``perm`` has gather semantics: new slot ``i`` takes the state
+        previously held at slot ``perm[i]`` (so ``perm`` must be a
+        permutation of ``range(batch)``). The streaming engine uses this
+        to place sessions whose reference points cluster on adjacent
+        batch slots, so their dirty-row scatters and decode staging
+        share windows. A pure state permutation — no values change, no
+        rebuild is triggered, and stepping after it is equivalent to
+        stepping the unpermuted manager with permuted frame rows."""
+        p = np.asarray(perm, np.int32)
+        if sorted(p.tolist()) != list(range(self.batch)):
+            raise ValueError(
+                f"permute_slots needs a permutation of range({self.batch}), "
+                f"got {p.tolist()}")
+        pj = jnp.asarray(p)
+        take = lambda a: None if a is None else jnp.take(a, pj, axis=0)
+        if self.cache is not None:
+            staged = self.cache.staged
+            if staged is not None:
+                staged = dataclasses.replace(
+                    staged, v=take(staged.v), remap=take(staged.remap),
+                    scale=take(staged.scale))
+            self.cache = self.cache._replace(
+                v=take(self.cache.v), pix2slot=take(self.cache.pix2slot),
+                keep_idx=take(self.cache.keep_idx), staged=staged,
+                scale=take(self.cache.scale))
+        self.x_ref = take(self.x_ref)
+        self.ema = take(self.ema)
+        if self.act_scale is not None and self.act_scale.ndim > 0 \
+                and self.act_scale.shape[0] == self.batch:
+            self.act_scale = take(self.act_scale)
+        for name in ("fwp", "_cache_fwp"):
+            st = getattr(self, name)
+            if st is not None:
+                setattr(self, name, fwp_lib.FWPState(
+                    keep_mask=take(st.keep_mask),
+                    keep_idx=take(st.keep_idx),
+                    pix2slot=take(st.pix2slot),
+                    freq=take(st.freq)))
+
     def step(self, x_new, force_full: bool = False
              ) -> Tuple[MSDAValueCache, dict]:
         """Ingest one frame's memory; returns (cache, frame stats).
 
         The cache is persistent: an incremental frame scatter-updates the
-        existing table (and its decode staging) in place; a full rebuild
-        happens only on the first frame, on keep-geometry transitions, on
-        ``force_full`` (session admission), or when the dirty-slot count
-        exceeds the static update budget."""
+        existing table (and its decode staging) in place; a keep-geometry
+        transition confined to a subset of levels restages only those
+        levels' contiguous slot ranges (mode ``partial``); a full rebuild
+        happens only on the first frame, on whole-geometry keep
+        transitions, on ``force_full`` (session admission), or when the
+        dirty-slot count exceeds the static update budget."""
         x_new = jnp.asarray(x_new)
         assert x_new.ndim == 3 and x_new.shape[1] == self.plan.n_in, \
             (x_new.shape, self.plan.n_in)
@@ -300,6 +443,20 @@ class TemporalCacheManager:
                 self.fwp = self.ema = None
         keep_transition = self._geometry_stale and self.cache is not None \
             and not plan_change
+        restaged_levels: Tuple[int, ...] = ()
+        partial_bytes = 0
+        if keep_transition and not force_full:
+            # per-level partial restage: each level's slots are ONE
+            # contiguous range of the compact table, so a transition that
+            # only moved some levels' keep sets restages those ranges
+            # instead of rebuilding the whole table. The restage swaps
+            # the geometry and re-projects the changed levels from this
+            # frame; the UNCHANGED levels' feature drift then flows
+            # through the ordinary incremental diff below.
+            partial = self._transition_levels()
+            if partial:
+                restaged_levels = partial
+                partial_bytes = self._partial_restage(x_new, partial)
         if self.cache is None or self._geometry_stale or force_full \
                 or plan_change:
             mode, reason = "rebuild", (
@@ -324,14 +481,16 @@ class TemporalCacheManager:
                 # budget, the table must be rebuilt wholesale
                 mode, reason = "rebuild", "dirty>budget"
                 self._full_build(x_new)
-                staged_bytes = self._full_bytes
+                staged_bytes = partial_bytes + self._full_bytes
             else:
-                mode, reason = "incremental", ""
+                mode = "partial" if restaged_levels else "incremental"
+                reason = "keep-transition" if restaged_levels else ""
                 self.cache = self.cache._replace(v=v, staged=staged)
                 self.x_ref = x_ref
-                staged_bytes = self._incr_bytes
+                staged_bytes = partial_bytes + self._incr_bytes
         self.frame_index += 1
         self.rebuild_frames += mode == "rebuild"
+        self.partial_frames += mode == "partial"
         self.staged_bytes_total += staged_bytes
         self.rebuild_bytes_total += self._full_bytes
         self.last_stats = {
@@ -344,6 +503,7 @@ class TemporalCacheManager:
             "rebuild_bytes": self._full_bytes,
             "n_dirty": n_dirty, "tiles_changed": tiles_hit,
             "keep_transition": bool(keep_transition),
+            "restaged_levels": restaged_levels,
             "update_rows": self.update_rows,
         }
         return self.cache, self.last_stats
@@ -404,7 +564,9 @@ class TemporalCacheManager:
             "frames": self.frame_index,
             "table_dtype": self.plan.table_dtype,
             "rebuild_frames": self.rebuild_frames,
-            "incremental_frames": self.frame_index - self.rebuild_frames,
+            "partial_frames": self.partial_frames,
+            "incremental_frames": self.frame_index - self.rebuild_frames
+            - self.partial_frames,
             "update_rows": self.update_rows,
             "n_slots": self.n_slots,
             "staged_bytes_total": self.staged_bytes_total,

@@ -1,0 +1,242 @@
+"""Cache-local query ordering (repro/msda/ordering.py) tests.
+
+The contract under test: ordering is a PURE permutation — permute the
+queries by reference point, sample, invert the permutation on the output
+— so the attention result is BIT-IDENTICAL to the unordered run for
+every backend that permutes (jnp_gather, pallas_fused, pallas_decode),
+and the raster-only windowed kernel is gated to the identity path
+(its per-tile windows derive from raster query position). Plus the
+policy plumbing: config field / env-var resolution, the plan's measured
+per-tile window accounting, and the monotone key/permutation math as a
+hypothesis property with fixed-seed fallbacks.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import given, settings, st
+
+from repro import msda
+from repro.core import nn
+from repro.core.msdeform_attn import MSDeformAttnConfig, init_msdeform_attn
+from repro.msda import ordering
+
+LEVELS = ((16, 20), (8, 10), (4, 5), (2, 3))
+N_IN = sum(h * w for h, w in LEVELS)
+B, D = 1, 64
+N_DEC_Q = 40
+RANGES = (6.0, 4.0, 3.0, 2.0)
+# backends that actually permute (not raster_only, see the module doc)
+PERMUTING_BACKENDS = ("jnp_gather", "pallas_fused", "pallas_decode")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = MSDeformAttnConfig(d_model=D, n_heads=2, range_narrow=RANGES)
+    key = jax.random.PRNGKey(3)
+    params = init_msdeform_attn(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, N_IN, D))
+    dq = jax.random.normal(jax.random.fold_in(key, 2), (B, N_DEC_Q, D))
+    drefs = jax.random.uniform(jax.random.fold_in(key, 3), (B, N_DEC_Q, 2),
+                               minval=0.05, maxval=0.95)
+    return cfg, params, dq, drefs, x
+
+
+def _fwp_state(cfg, params, x):
+    q = jax.random.normal(jax.random.PRNGKey(5), (B, N_IN, D))
+    refs = jnp.broadcast_to(
+        nn.reference_points_for_levels(LEVELS)[None], (B, N_IN, 2))
+    plan = msda.make_plan(cfg, LEVELS, backend="jnp_gather")
+    _, state = msda.msda_attention(params, plan, q, refs, x)
+    return state
+
+
+# --------------------------------------------------------------------------
+# permutation math: hypothesis property + fixed-seed fallback
+# --------------------------------------------------------------------------
+
+def _check_permutation(seed: int, n: int, method: str):
+    refs = jax.random.uniform(jax.random.PRNGKey(seed), (2, n, 2))
+    perm, inv = ordering.query_permutation(refs, LEVELS, method)
+    p, i = np.asarray(perm), np.asarray(inv)
+    for b in range(p.shape[0]):
+        # a true permutation of range(n), and inv really inverts it
+        assert sorted(p[b].tolist()) == list(range(n))
+        np.testing.assert_array_equal(p[b][i[b]], np.arange(n))
+    # permute-then-invert is the identity on any query-axis array
+    arr = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, n, 3, 5))
+    back = ordering.invert_queries(ordering.permute_queries(arr, perm), inv)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(arr))
+    # sort keys are non-decreasing along the permuted order
+    keys = np.asarray(ordering.query_sort_keys(refs, LEVELS, method))
+    for b in range(p.shape[0]):
+        assert (np.diff(keys[b][p[b]]) >= 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**16), st.integers(1, 300),
+       st.sampled_from(("raster", "zorder")))
+def test_permutation_property(seed, n, method):
+    _check_permutation(seed, n, method)
+
+
+@pytest.mark.parametrize("method", ("raster", "zorder"))
+@pytest.mark.parametrize("seed", (0, 7, 1234))
+def test_permutation_fixed_seeds(method, seed):
+    _check_permutation(seed, 64, method)
+
+
+def test_raster_keys_follow_dominant_level_raster_order():
+    h, w = LEVELS[ordering.dominant_level(LEVELS)]
+    refs = jnp.asarray([[[0.5 / w, 0.5 / h],      # pixel (0, 0)
+                         [1.5 / w, 0.5 / h],      # pixel (0, 1)
+                         [0.5 / w, 1.5 / h]]])    # pixel (1, 0)
+    keys = np.asarray(ordering.query_sort_keys(refs, LEVELS, "raster"))[0]
+    assert keys[0] < keys[1] < keys[2]
+    assert keys[2] - keys[0] == w                 # one full row apart
+
+
+def test_unknown_method_raises():
+    refs = jnp.zeros((1, 4, 2))
+    with pytest.raises(ValueError):
+        ordering.query_sort_keys(refs, LEVELS, "hilbert")
+    with pytest.raises(ValueError):
+        ordering.resolve_query_order(
+            dataclasses.replace(MSDeformAttnConfig(d_model=D, n_heads=2),
+                                query_order="hilbert"))
+
+
+# --------------------------------------------------------------------------
+# policy resolution: config field > env var > default
+# --------------------------------------------------------------------------
+
+def test_resolve_query_order_precedence(monkeypatch):
+    # the CI query-order leg exports REPRO_MSDA_QUERY_ORDER globally —
+    # start from a clean environment so the precedence chain is the one
+    # under test
+    monkeypatch.delenv("REPRO_MSDA_QUERY_ORDER", raising=False)
+    cfg = MSDeformAttnConfig(d_model=D, n_heads=2)
+    assert ordering.resolve_query_order(cfg) == "none"
+    monkeypatch.setenv("REPRO_MSDA_QUERY_ORDER", "zorder")
+    assert ordering.resolve_query_order(cfg) == "zorder"
+    cfg_r = dataclasses.replace(cfg, query_order="raster")
+    assert ordering.resolve_query_order(cfg_r) == "raster"
+    assert ordering.resolve_query_order(cfg_r, "none") == "none"
+    # the plan picks the env override up (and memoizes per resolved value)
+    plan = msda.make_plan(cfg, LEVELS, backend="jnp_gather")
+    assert plan.query_order == "zorder"
+    assert "order=zorder" in plan.describe()
+
+
+def test_plan_measured_tile_window_accounting():
+    cfg = MSDeformAttnConfig(d_model=D, n_heads=2, range_narrow=RANGES)
+    plan = msda.make_plan(cfg, LEVELS, backend="jnp_gather",
+                          n_queries=N_DEC_Q, n_consumers=6)
+    refs = jax.random.uniform(jax.random.PRNGKey(9), (B, N_DEC_Q, 2))
+    pm = plan.with_measured_tile_window(refs)
+    un_max, un_mean, od_max, od_mean = pm.measured_tilewin
+    assert 0 < od_mean <= un_mean and 0 < od_max <= un_max
+    assert "tilewin=" in pm.describe()
+    # ordering never widens the measured mean window, for either method
+    for method in ("raster", "zorder"):
+        un = ordering.tile_window_stats(
+            refs, LEVELS, RANGES, tile_q=plan.tile_q, lanes=D, itemsize=4)
+        od = ordering.tile_window_stats(
+            refs, LEVELS, RANGES, tile_q=plan.tile_q, lanes=D, itemsize=4,
+            order=method)
+        assert od["mean_bytes"] <= un["mean_bytes"]
+    # no range_narrow -> nothing to measure, plan unchanged
+    plan_nr = msda.make_plan(
+        dataclasses.replace(cfg, range_narrow=None), LEVELS,
+        backend="jnp_gather", n_queries=N_DEC_Q)
+    assert plan_nr.with_measured_tile_window(refs).measured_tilewin is None
+
+
+def test_make_plan_auto_uses_measured_window_bytes(monkeypatch):
+    """The auto policy's VMEM-fit check can use the measured (ordered)
+    per-tile window instead of the analytic worst case: a budget between
+    the two flips the auto pick only when the measurement is passed."""
+    cfg = MSDeformAttnConfig(d_model=D, n_heads=2, range_narrow=RANGES)
+    probe = msda.make_plan(cfg, LEVELS, backend="pallas_windowed",
+                           block_q=64)
+    assert probe.window_bytes is not None
+    measured = probe.window_bytes // 4
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", str(measured * 2))
+    # vmem_budget_bytes=1 knocks out the whole-table pallas_fused pick, so
+    # the windowed fit check decides
+    auto_analytic = msda.make_plan(cfg, LEVELS, backend="auto", block_q=64,
+                                   vmem_budget_bytes=1)
+    auto_measured = msda.make_plan(cfg, LEVELS, backend="auto", block_q=64,
+                                   vmem_budget_bytes=1,
+                                   measured_window_bytes=measured)
+    assert auto_analytic.backend != "pallas_windowed"
+    assert auto_measured.backend == "pallas_windowed"
+
+
+# --------------------------------------------------------------------------
+# THE parity contract: bit-identical output, every backend x fwp mode
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", ("raster", "zorder"))
+@pytest.mark.parametrize("fwp", ("off", "compact"))
+@pytest.mark.parametrize("backend", PERMUTING_BACKENDS)
+def test_ordering_is_bit_identical(setup, backend, fwp, order):
+    cfg, params, dq, drefs, x = setup
+    if fwp != "off":
+        cfg = dataclasses.replace(cfg, fwp_mode=fwp, fwp_k=1.0,
+                                  fwp_capacity=0.6)
+    state = _fwp_state(cfg, params, x) if fwp != "off" else None
+    outs = {}
+    for qorder in ("none", order):
+        plan = msda.make_plan(cfg, LEVELS, backend=backend,
+                              n_queries=N_DEC_Q, n_consumers=6,
+                              query_order=qorder)
+        assert plan.query_order == qorder
+        out, _ = msda.msda_attention(params, plan, dq, drefs, x,
+                                     state=state)
+        outs[qorder] = np.asarray(out)
+    np.testing.assert_array_equal(outs[order], outs["none"])
+
+
+def test_windowed_backend_gates_ordering_to_identity(setup):
+    """pallas_windowed is raster_only: requesting an order keeps the
+    plan-level policy but the attention pass must NOT permute (the kernel
+    derives per-tile windows from raster query position) — output equals
+    the unordered run exactly."""
+    cfg, params, _, _, x = setup
+    q = jax.random.normal(jax.random.PRNGKey(31), (B, N_IN, D))
+    refs = jnp.broadcast_to(
+        nn.reference_points_for_levels(LEVELS)[None], (B, N_IN, 2))
+    assert msda.backend_info("pallas_windowed").raster_only
+    outs = {}
+    for qorder in ("none", "zorder"):
+        plan = msda.make_plan(cfg, LEVELS, backend="pallas_windowed",
+                              block_q=64, query_order=qorder)
+        assert plan.query_order == qorder
+        out, _ = msda.msda_attention(params, plan, q, refs, x)
+        outs[qorder] = np.asarray(out)
+    np.testing.assert_array_equal(outs["zorder"], outs["none"])
+
+
+def test_decoder_bit_identical_across_layers(setup):
+    """End-to-end: the full decoder (per-layer refinement re-derives the
+    permutation from each layer's pre-refinement refs) is bit-identical
+    with ordering on vs off."""
+    cfg, params, _, _, x = setup
+    cfg = dataclasses.replace(cfg, fwp_mode="compact", fwp_k=1.0,
+                              fwp_capacity=0.6)
+    state = _fwp_state(cfg, params, x)
+    dcfg = msda.MSDADecoderConfig(n_layers=2, n_queries=N_DEC_Q, d_ffn=64)
+    dparams = msda.init_decoder(jax.random.PRNGKey(41), dcfg, cfg)
+    outs = {}
+    for qorder in ("none", "raster"):
+        plan = msda.make_plan(cfg, LEVELS, backend="pallas_decode",
+                              n_queries=dcfg.n_queries,
+                              n_consumers=dcfg.n_layers, query_order=qorder)
+        h, refs_out, _ = msda.decoder_apply(dparams, dcfg, plan, x, state)
+        outs[qorder] = (np.asarray(h), np.asarray(refs_out))
+    np.testing.assert_array_equal(outs["raster"][0], outs["none"][0])
+    np.testing.assert_array_equal(outs["raster"][1], outs["none"][1])

@@ -318,13 +318,166 @@ def test_streaming_engine_sessions_end_to_end():
             assert res["cls_probs"].shape == (dec_cfg.n_queries, 3)
             assert res["boxes"].shape == (dec_cfg.n_queries, 4)
             assert np.isfinite(res["boxes"]).all()
-            assert res["stream"]["mode"] in ("rebuild", "incremental")
+            assert res["stream"]["mode"] in ("rebuild", "incremental",
+                                             "partial")
     r = engine.report()
     assert r["frames"] == 4
     assert r["staged_bytes_total"] <= r["rebuild_bytes_total"]
     # freed slots are reusable
     s2 = engine.open_session()
     assert engine.sessions[s2].slot in (0, 1)
+
+
+# --------------------------------------------------------------------------
+# per-level partial restage + slot permutation (cache-local ordering)
+# --------------------------------------------------------------------------
+
+def _single_level_transition(mgr, key):
+    """Drive the EMA so the keep set flips ONLY inside level 0."""
+    freq = jnp.ones((2, N_IN))
+    h0w0 = LEVELS[0][0] * LEVELS[0][1]
+    flip = jnp.where(jax.random.uniform(key, (2, h0w0)) > 0.5, 10.0, 0.0)
+    mgr.observe(freq.at[:, :h0w0].set(flip))
+
+
+@pytest.mark.parametrize("backend", ("jnp_gather", "pallas_decode"))
+def test_partial_restage_matches_scratch_build(backend):
+    """A keep transition confined to one level restages ONLY that level's
+    contiguous slot range (mode ``partial``), and the resulting cache —
+    values, staged decode table AND swapped geometry — is bit-identical
+    to a from-scratch build of the frame under the new keep set."""
+    cfg = _cfg()
+    mgr, plan = _mgr(cfg, StreamConfig(tile_rows=2, delta_threshold=0.0,
+                                       update_frac=1.0), backend=backend)
+    key = jax.random.PRNGKey(31)
+    x0 = jax.random.normal(key, (2, N_IN, D))
+    mgr.step(x0)
+    _single_level_transition(mgr, jax.random.fold_in(key, 1))
+    assert mgr._geometry_stale
+    assert mgr._transition_levels() == (0,)
+    x1 = x0 + 0.05 * jnp.sign(x0)
+    cache, st = mgr.step(x1)
+    assert st["mode"] == "partial" and st["reason"] == "keep-transition"
+    assert st["restaged_levels"] == (0,)
+    ref = _scratch(mgr, plan, x1)
+    np.testing.assert_array_equal(np.asarray(cache.v), np.asarray(ref.v))
+    np.testing.assert_array_equal(np.asarray(cache.keep_idx),
+                                  np.asarray(ref.keep_idx))
+    np.testing.assert_array_equal(np.asarray(cache.pix2slot),
+                                  np.asarray(ref.pix2slot))
+    if backend == "pallas_decode":
+        np.testing.assert_array_equal(np.asarray(cache.staged.v),
+                                      np.asarray(ref.staged.v))
+        np.testing.assert_array_equal(np.asarray(cache.staged.remap),
+                                      np.asarray(ref.staged.remap))
+    assert mgr.report()["partial_frames"] == 1
+    # accounting: the partial frame staged level 0's slots + the
+    # incremental budget, not the whole table's indirection
+    assert st["staged_bytes"] == plan.table_bytes_for_rows(
+        mgr._slot_offs[1], with_indirection=False) \
+        + LEVELS[0][0] * LEVELS[0][1] * 4 + mgr._incr_bytes
+
+
+def test_whole_geometry_transition_still_rebuilds():
+    """When EVERY level's keep set moves, the partial path declines and
+    the frame full-rebuilds (same bytes, one build)."""
+    cfg = _cfg()
+    mgr, _ = _mgr(cfg, StreamConfig(tile_rows=2, delta_threshold=0.0,
+                                    update_frac=1.0))
+    key = jax.random.PRNGKey(32)
+    x0 = jax.random.normal(key, (2, N_IN, D))
+    mgr.step(x0)
+    flip = jnp.where(jax.random.uniform(jax.random.fold_in(key, 1),
+                                        (2, N_IN)) > 0.5, 10.0, 0.0)
+    mgr.observe(flip)
+    assert mgr._geometry_stale
+    assert mgr._transition_levels() is None
+    _, st = mgr.step(x0)
+    assert st["mode"] == "rebuild" and st["reason"] == "keep-transition"
+
+
+def test_permute_slots_is_state_permutation():
+    """permute_slots + step(permuted frames) == step(frames) + permute:
+    the manager's per-slot state is exchangeable, which is what lets the
+    engine place clustering sessions on adjacent slots without touching
+    numerics."""
+    cfg = _cfg()
+    mk = lambda: _mgr(cfg, StreamConfig(tile_rows=2, delta_threshold=1e-6,
+                                        update_frac=0.5),
+                      backend="pallas_decode")[0]
+    key = jax.random.PRNGKey(33)
+    x0 = jax.random.normal(key, (2, N_IN, D))
+    x1 = x0.at[:, 3:6].add(0.5)
+    m_a = mk()
+    m_a.step(x0)
+    c_a, st_a = m_a.step(x1)
+    m_b = mk()
+    m_b.step(x0)
+    m_b.permute_slots((1, 0))
+    c_b, st_b = m_b.step(x1[::-1])
+    assert st_a["mode"] == st_b["mode"] == "incremental"
+    np.testing.assert_array_equal(np.asarray(c_b.v), np.asarray(c_a.v)[::-1])
+    np.testing.assert_array_equal(np.asarray(c_b.staged.v),
+                                  np.asarray(c_a.staged.v)[::-1])
+    np.testing.assert_array_equal(np.asarray(m_b.x_ref),
+                                  np.asarray(m_a.x_ref)[::-1])
+    with pytest.raises(ValueError):
+        m_b.permute_slots((0, 0))                  # not a permutation
+    with pytest.raises(ValueError):
+        m_b.permute_slots((0, 1, 2))               # wrong batch
+
+
+def test_engine_reorder_sessions_never_drops_or_duplicates():
+    """reorder_sessions() reassigns sessions to adjacent slots by
+    reference-point cluster: the session set and the slot multiset are
+    preserved, free slots stay free, and every session keeps serving its
+    own stream afterwards."""
+    from repro.serve.engine import StreamingDetrEngine
+    cfg, dec_cfg, params = _decoder_setup()
+    engine = StreamingDetrEngine(
+        cfg, dec_cfg, params, LEVELS, max_sessions=3,
+        stream_cfg=StreamConfig(tile_rows=1, delta_threshold=1e-4,
+                                update_frac=0.5))
+    sids = [engine.open_session() for _ in range(3)]
+    scenes = {sid: drifting_scene(i + 1, LEVELS, D, 3)
+              for i, sid in enumerate(sids)}
+    for t in range(2):
+        for sid in sids:
+            engine.submit_frame(sid, scenes[sid][t][0])
+    engine.run_until_drained()
+    before = {s.sid: s.slot for s in engine.sessions.values()}
+    mapping = engine.reorder_sessions()
+    assert set(mapping) == set(before)                       # no session
+    #   dropped or invented
+    assert sorted(mapping.values()) == sorted(before.values())  # slots
+    #   conserved (free slots stay free)
+    # slot bookkeeping agrees between sessions dict and mapping
+    for sid, slot in mapping.items():
+        assert engine.sessions[sid].slot == slot
+    # sessions keep serving their own streams post-reorder
+    for sid in sids:
+        engine.submit_frame(sid, scenes[sid][2][0])
+    assert engine.step() == 3
+    for sid in sids:
+        sess = engine.sessions[sid]
+        assert len(sess.results) == 3
+        assert np.isfinite(sess.results[-1]["boxes"]).all()
+    # closing a moved session frees its CURRENT slot for reuse
+    freed = engine.close_session(sids[0]).slot
+    s_new = engine.open_session()
+    assert engine.sessions[s_new].slot == freed
+
+
+def test_engine_reorder_noop_cases():
+    """Reordering with < 2 placed sessions (or before any frame produced
+    a centroid) is the identity."""
+    from repro.serve.engine import StreamingDetrEngine
+    cfg, dec_cfg, params = _decoder_setup()
+    engine = StreamingDetrEngine(cfg, dec_cfg, params, LEVELS,
+                                 max_sessions=2)
+    assert engine.reorder_sessions() == {}
+    s0 = engine.open_session()
+    assert engine.reorder_sessions() == {s0: engine.sessions[s0].slot}
 
 
 # --------------------------------------------------------------------------
