@@ -300,6 +300,37 @@ def main() -> None:
                 f"`examples/detr_stream.py` (N sessions, batched slots, "
                 f"decoder-frequency EMA feedback).")
         parts.append("\n")
+    serve = bench.get("serve_sustained", {})
+    if "closed_loop" in serve:
+        cl, ol = serve["closed_loop"], serve["open_loop"]
+        w = serve.get("workload", {})
+        buckets = ", ".join(
+            f"{b['resolution']}px ({b['table_kb']} KB table)"
+            for b in serve.get("buckets", []))
+        parts.append(
+            f"\n**Sustained serving (AOT shape buckets + continuous "
+            f"batching + pipelined post-processing)** — the deployment "
+            f"harness (repro/serve/): each resolution bucket's detector "
+            f"forward is AOT-compiled at startup "
+            f"(`jax.jit(...).lower().compile()`; buckets: {buckets}), "
+            f"requests route to the smallest bucket they fit (pad up, "
+            f"reject oversized), micro-batches dispatch from per-bucket "
+            f"queues, and top-k decode + callbacks run on a worker thread "
+            f"while the device serves the next batch. On the "
+            f"{w.get('mix', 'mixed')} mixed-resolution load "
+            f"(closed loop, median of 3): "
+            f"{cl['sustained_us_per_request']/1000:.1f} ms/request vs "
+            f"{cl['single_bucket_sync_us_per_request']/1000:.1f} ms/request "
+            f"for the single-bucket synchronous baseline = "
+            f"**{cl['speedup']:.2f}x sustained throughput** "
+            f"(`msda_serve_sustained` vs `msda_serve_single_bucket_sync`, "
+            f"both under the CI regression gate), with ZERO recompiles "
+            f"after warmup (compile-count spy, tests/test_serve.py). Open "
+            f"loop at 0.9x measured capacity: "
+            f"{ol['rps_per_chip']} requests/s/chip, P50 {ol['p50_ms']} ms "
+            f"/ P99 {ol['p99_ms']} ms request latency (submit -> "
+            f"post-processing done). Driver: `examples/detr_serve.py "
+            f"--sustained`.\n")
     if "fig9_table1" in bench and "baseline" in bench.get("fig9_table1", {}):
         r = bench["fig9_table1"]
         parts.append(

@@ -323,6 +323,12 @@ def run(log=print) -> list[tuple[str, float, str]]:
                  _time(lambda: ops.flash_decode(qd, kd, vd, ok, chunk=256)),
                  "structural"))
 
+    # sustained-serving rows (bucketed+pipelined vs single-bucket sync);
+    # lazy import: serve_sustained lives beside this module and needs the
+    # repo root on the path (the run.py harness always provides it)
+    from benchmarks.serve_sustained import micro_rows as serve_micro
+    rows.extend(serve_micro(log=lambda *_: None))
+
     for name, t, d in rows:
         log(f"[micro] {name}: {t:.1f} us ({d})")
     return rows

@@ -19,7 +19,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig6,fig7a,fig7b,fig9,fmap_reuse,"
-                         "micro,decoder")
+                         "micro,decoder,serve")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write machine-readable rows "
                          "[{name, us_per_call, derived}, ...] to PATH "
@@ -154,6 +154,18 @@ def main() -> None:
                      f"{dcfg.decoder.n_queries} queries, shared ValueCache"))
         print(f"[decoder] toy synthetic-task AP with the decoder head: "
               f"{ap_dec:.3f} (with the full DEFA stack: {ap_defa:.3f})")
+
+    if want("serve"):
+        from benchmarks.serve_sustained import report as serve_report
+        t0 = time.perf_counter()
+        r = serve_report()
+        dt = (time.perf_counter() - t0) * 1e6
+        results["serve_sustained"] = r
+        cl, ol = r["closed_loop"], r["open_loop"]
+        rows.append(("serve_sustained_speedup", dt,
+                     f"{cl['speedup']:.2f}x vs single-bucket sync; "
+                     f"{ol['rps_per_chip']} req/s/chip, "
+                     f"P50 {ol['p50_ms']}ms P99 {ol['p99_ms']}ms"))
 
     if want("micro"):
         from benchmarks.microbench import run as micro_run

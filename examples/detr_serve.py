@@ -113,6 +113,34 @@ def serve_decoder_head(args) -> None:
           f"mean AP {np.mean(aps):.3f}")
 
 
+def serve_sustained(args) -> None:
+    """Sustained mixed-resolution load through the bucketed engine:
+    AOT shape buckets + continuous batching + pipelined post-processing
+    vs the single-bucket synchronous baseline (benchmarks/serve_sustained).
+    ``--dry-run`` routes a few mixed requests through every bucket and
+    checks the zero-recompile contract without timing anything."""
+    import json
+
+    from benchmarks.serve_sustained import report
+    r = report(dry=args.dry_run)
+    print("[serve/sustained] buckets: "
+          + ", ".join(f"{b['resolution']}px ({b['table_kb']}KB table)"
+                      for b in r["buckets"]))
+    if args.dry_run:
+        print("[serve/sustained] dry run ok "
+              f"({r['compiles']['sustained']} AOT compiles, 0 retraces)")
+        return
+    cl, ol = r["closed_loop"], r["open_loop"]
+    print(f"[serve/sustained] closed loop: "
+          f"{cl['sustained_us_per_request']:.0f} us/req vs "
+          f"{cl['single_bucket_sync_us_per_request']:.0f} us/req "
+          f"single-bucket sync = {cl['speedup']:.2f}x")
+    print(f"[serve/sustained] open loop @0.9x capacity: "
+          f"{ol['rps_per_chip']} req/s/chip, "
+          f"P50 {ol['p50_ms']} ms / P99 {ol['p99_ms']} ms")
+    print(json.dumps(r, indent=2, default=str))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batches", type=int, default=4)
@@ -123,8 +151,17 @@ def main():
     ap.add_argument("--decoder", action="store_true",
                     help="serve the decoder-head detector (shared "
                          "ValueCache, build-once sample-everywhere)")
+    ap.add_argument("--sustained", action="store_true",
+                    help="sustained mixed-resolution load: AOT buckets + "
+                         "continuous batching + pipelined postproc vs the "
+                         "single-bucket synchronous baseline")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="with --sustained: route a small mixed load, "
+                         "check zero recompiles, skip timing (CI smoke)")
     args = ap.parse_args()
-    if args.decoder:
+    if args.sustained:
+        serve_sustained(args)
+    elif args.decoder:
         serve_decoder_head(args)
     else:
         serve_encoder_head(args)

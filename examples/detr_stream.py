@@ -66,6 +66,11 @@ def main():
     ap.add_argument("--diff-stride", type=int, default=4,
                     help="probe every s-th feature channel when diffing "
                          "tiles (1 = exact)")
+    ap.add_argument("--churn", action="store_true",
+                    help="mid-stream session churn: one session leaves and "
+                         "a new one joins halfway — its slot is rebuilt "
+                         "from its own first frame (per-slot admission) "
+                         "while the others stay incremental")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny shapes / few layers (the CI smoke path)")
     args = ap.parse_args()
@@ -93,8 +98,21 @@ def main():
         engine.submit_frame(sid, scenes[sid][0][0])
     engine.step()
 
+    churn_at = args.frames // 2 \
+        if args.churn and args.sessions > 1 and args.frames > 2 else None
+    left = []
     t0 = time.time()
     for t in range(1, args.frames):
+        if t == churn_at:
+            old = sids.pop()
+            left.append(engine.close_session(old))
+            new = engine.open_session()
+            sids.append(new)
+            scenes[new] = drifting_scene(200 + new, levels, d, args.frames,
+                                         obj_rows=1, speed_rows=1)
+            print(f"[stream] churn: session {old} left after "
+                  f"{left[-1].frames_done} frames, session {new} joined — "
+                  "per-slot admission, neighbours stay incremental")
         for sid in sids:
             engine.submit_frame(sid, scenes[sid][t][0])
         engine.step()
@@ -104,7 +122,9 @@ def main():
               f"(rebuild would stage {st['rebuild_bytes']/1024:6.1f} KB), "
               f"dirty slots {st['n_dirty']}/{st['update_rows']}, "
               f"tiles {st['tiles_changed']}"
-              + (f" [{st['reason']}]" if st["reason"] else ""))
+              + (f" [{st['reason']}]" if st["reason"] else "")
+              + (f" [admitted slots {st['admitted_slots']}]"
+                 if st.get("admitted_slots") else ""))
     dt = time.time() - t0
 
     r = engine.report()

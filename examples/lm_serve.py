@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models.registry import get_api
-from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.lm import Request, ServeConfig, ServeEngine
 
 
 def main():

@@ -33,7 +33,6 @@ except ImportError:                        # pragma: no cover - env-dependent
 from repro.core.encoder import EncoderConfig, init_encoder, encoder_apply, encoder_logical_axes
 from repro.msda.decoder import (MSDADecoderConfig, decoder_apply,
                                 decoder_logical_axes, init_decoder)
-from repro.msda.plan import make_plan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,14 +99,16 @@ def decoder_plan(cfg: DetectorConfig, backend: Optional[str] = None):
     explicit (or config-level) request for one degrades to ``auto`` for
     the decoder (which may then pick the persistent decode kernel)."""
     from repro.msda import backend_info
+    from repro.msda.plan import plan_for
     assert cfg.decoder is not None, "decoder head required"
     dec_backend = backend or getattr(cfg.encoder.attn, "backend", None)
     if dec_backend is not None and dec_backend != "auto" \
             and backend_info(dec_backend).raster_only:
         dec_backend = "auto"
-    return make_plan(cfg.encoder.attn, cfg.level_shapes, backend=dec_backend,
-                     n_queries=cfg.decoder.n_queries,
-                     n_consumers=cfg.decoder.n_layers)
+    # memoized (plan_for): the serve engine resolves one plan per shape
+    # bucket and every forward of that bucket shares it
+    return plan_for(cfg.encoder.attn, cfg.level_shapes, dec_backend,
+                    cfg.decoder.n_queries, cfg.decoder.n_layers)
 
 
 def encoder_backend(backend: Optional[str]) -> Optional[str]:

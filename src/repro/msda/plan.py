@@ -575,8 +575,10 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
 
 def plan_for(cfg, level_shapes: Tuple[Tuple[int, int], ...],
              backend: Optional[str] = None,
-             n_queries: Optional[int] = None) -> MSDAPlan:
-    """Memoized make_plan for hot call sites (the compat shim).
+             n_queries: Optional[int] = None,
+             n_consumers: int = 1) -> MSDAPlan:
+    """Memoized make_plan for hot call sites (the compat shim and the
+    serve engine's per-bucket plans).
 
     The ``auto`` policy reads the env-overridable staging budget, the
     table dtype resolves through ``REPRO_MSDA_TABLE_DTYPE``, and the
@@ -585,14 +587,36 @@ def plan_for(cfg, level_shapes: Tuple[Tuple[int, int], ...],
     must not serve a stale plan."""
     from repro.msda import ordering as ordering_lib
     return _plan_for_cached(cfg, level_shapes, backend, n_queries,
-                            window_staging_budget(),
+                            n_consumers, window_staging_budget(),
                             resolve_table_dtype(cfg),
                             ordering_lib.resolve_query_order(cfg))
 
 
 @functools.lru_cache(maxsize=256)
-def _plan_for_cached(cfg, level_shapes, backend, n_queries,
+def _plan_for_cached(cfg, level_shapes, backend, n_queries, n_consumers,
                      _staging_budget: int, table_dtype: str,
                      query_order: str) -> MSDAPlan:
     return make_plan(cfg, level_shapes, backend=backend, n_queries=n_queries,
-                     table_dtype=table_dtype, query_order=query_order)
+                     n_consumers=n_consumers, table_dtype=table_dtype,
+                     query_order=query_order)
+
+
+def level_shapes_for_resolution(resolution: int,
+                                strides: Tuple[int, ...] = (4, 8, 16, 32)
+                                ) -> Tuple[Tuple[int, int], ...]:
+    """The square pyramid level shapes of one serving resolution bucket.
+
+    Mirrors ``DetectorConfig.level_shapes`` (img_size // stride per
+    level) but validates divisibility up front: a bucket resolution that
+    does not divide every stride would silently truncate the pyramid and
+    desynchronize the plan's geometry from the detector's."""
+    r = int(resolution)
+    if r <= 0:
+        raise ValueError(f"bucket resolution must be positive, got {r}")
+    bad = [s for s in strides if r % s]
+    if bad:
+        raise ValueError(
+            f"bucket resolution {r} is not divisible by pyramid "
+            f"stride(s) {bad}; serving buckets must be multiples of "
+            f"{max(strides)}")
+    return tuple((r // s, r // s) for s in strides)

@@ -1,1 +1,11 @@
-from repro.serve.engine import ServeEngine, Request, ServeConfig  # noqa: F401
+"""Serving subsystem: bucketed continuous batching for the DETR workload
+(``serve.engine``), the pipelined post-processing stage (``serve.postproc``),
+shape buckets + admission control (``serve.buckets``), and the quarantined
+seed-era LM token-decode engine (``serve.lm``)."""
+from repro.serve.buckets import (BucketRouter, ShapeBucket,  # noqa: F401
+                                 derive_buckets)
+from repro.serve.engine import (DetrRequest, DetrServeEngine,  # noqa: F401
+                                StreamingDetrEngine, StreamSession)
+from repro.serve.lm import Request, ServeConfig, ServeEngine  # noqa: F401
+from repro.serve.postproc import (PostprocWorker,  # noqa: F401
+                                  StarvationError, topk_detections)

@@ -1,228 +1,209 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching DETR serving over AOT-compiled shape buckets.
 
-vLLM-style slot model adapted to JAX static shapes: a fixed decode batch of
-`max_batch` slots over a ring-buffer KV/state cache. Requests are admitted
-into free slots via a single-request prefill whose cache slice is scattered
-into the batch cache; every engine step decodes ALL active slots one token
-(inactive slots run masked). Per-slot positions ride the (B,) `pos` vector
-the decode path takes natively.
+The serving analogue of the paper's "DEFA rivals GPUs" comparison, built
+the way MaxText's offline-inference harness serves LLMs:
 
-This is the serving analogue the paper's "DEFA rivals GPUs" comparison maps
-to: :class:`ServeEngine` serves the LM-family archs, and
-:class:`DetrServeEngine` serves the paper's own workload — batched DETR
-detection with the DEFA stack, where each forward builds ONE shared
-:class:`~repro.msda.MSDAValueCache` from the encoder memory and every
-decoder layer samples it (build-once, sample-everywhere; the driver is
-examples/detr_serve.py)."""
+  * **AOT shape buckets** — a small set of resolution/level-shape buckets
+    is derived from the detector config (``serve/buckets.py``) and each
+    bucket's forward is compiled at STARTUP via
+    ``jax.jit(...).lower().compile()``. Incoming images route to the
+    smallest bucket they fit (padding up); oversized images are rejected
+    at admission. After warmup nothing ever retraces — the engine carries
+    a compile-count spy (``compile_count``) that tests assert stays flat
+    under mixed load.
+  * **continuous batching** — requests queue per bucket; every
+    :meth:`DetrServeEngine.step` dispatches the deepest bucket's
+    micro-batch. Sessions of the streaming engine join/leave batch slots
+    between steps without recompiling (per-slot admission in
+    ``stream/temporal.py`` — no batch-wide rebuild storm).
+  * **pipelined post-processing** — top-k decode, box emission and
+    per-request callbacks run on a background worker thread
+    (``serve/postproc.py``): the device launches step N+1 while step N's
+    outputs are still being decoded on the host.
+
+Every forward builds ONE shared :class:`~repro.msda.MSDAValueCache` from
+the encoder memory and all decoder layers sample it (build-once,
+sample-everywhere). The seed-era token-decode engine lives on in
+``serve/lm.py``; drivers are examples/detr_serve.py (batch + sustained
+load) and examples/detr_stream.py (streaming sessions)."""
 from __future__ import annotations
 
 import dataclasses
-import functools
+import time
+import threading
 from collections import deque
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import nn
-from repro.models.common import ModelConfig
-from repro.models.registry import get_api
+from repro.serve.buckets import BucketRouter, ShapeBucket, derive_buckets
+from repro.serve.postproc import (PostprocWorker, StarvationError,
+                                  softmax_np, topk_detections)
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                    # (S_prompt,) int32
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-    # filled by the engine:
-    output: list = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-@dataclasses.dataclass(frozen=True)
-class ServeConfig:
-    max_batch: int = 4
-    cache_len: int = 256
-    greedy: bool = True
-    temperature: float = 1.0
-
-
-class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params: Any, serve_cfg: ServeConfig,
-                 rng: Optional[jax.Array] = None):
-        self.cfg = cfg
-        self.api = get_api(cfg)
-        self.params = params
-        self.scfg = serve_cfg
-        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
-        b = serve_cfg.max_batch
-        self.cache = self.api.init_cache(cfg, b, serve_cfg.cache_len)
-        self.pos = jnp.zeros((b,), jnp.int32)
-        self.last_tok = jnp.zeros((b,), jnp.int32)
-        self.active = np.zeros((b,), bool)
-        self.slot_req: list[Optional[Request]] = [None] * b
-        self.queue: deque[Request] = deque()
-        self.finished: list[Request] = []
-        self._decode = jax.jit(self._decode_impl)
-        self._prefill1 = jax.jit(self._prefill1_impl)
-
-    # --- jitted internals --------------------------------------------------
-    def _prefill1_impl(self, params, cache1, tokens1):
-        logits, cache1 = self.api.prefill(params, self.cfg, cache1,
-                                          {"tokens": tokens1})
-        return logits, cache1
-
-    def _decode_impl(self, params, cache, tokens, pos):
-        return self.api.decode_step(params, self.cfg, cache, tokens, pos)
-
-    # --- slot management ----------------------------------------------------
-    def submit(self, req: Request):
-        self.queue.append(req)
-
-    def _admit(self, slot: int, req: Request):
-        cfg, scfg = self.cfg, self.scfg
-        cache1 = self.api.init_cache(cfg, 1, scfg.cache_len)
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        logits, cache1 = self._prefill1(self.params, cache1, toks)
-        # scatter the single-request cache into batch slot `slot`
-        # (every stacked cache leaf is (n_layers, B, ...): dim 1 is batch)
-        self.cache = jax.tree.map(
-            lambda c, c1: c.at[:, slot].set(c1[:, 0]), self.cache, cache1)
-        first = int(jnp.argmax(logits, axis=-1)[0]) if scfg.greedy \
-            else self._sample(logits)[0]
-        req.output.append(first)
-        self.last_tok = self.last_tok.at[slot].set(first)
-        self.pos = self.pos.at[slot].set(len(req.prompt))
-        self.active[slot] = True
-        self.slot_req[slot] = req
-
-    def _sample(self, logits):
-        self.rng, k = jax.random.split(self.rng)
-        return np.asarray(jax.random.categorical(
-            k, logits / self.scfg.temperature, axis=-1))
-
-    # --- one engine step ----------------------------------------------------
-    def step(self) -> int:
-        """Admit waiting requests into free slots, then decode one token for
-        every active slot. Returns number of active slots."""
-        for slot in range(self.scfg.max_batch):
-            if not self.active[slot] and self.queue:
-                self._admit(slot, self.queue.popleft())
-        if not self.active.any():
-            return 0
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          self.last_tok, self.pos)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32) if self.scfg.greedy \
-            else jnp.asarray(self._sample(logits), jnp.int32)
-        self.pos = self.pos + jnp.asarray(self.active, jnp.int32)
-        self.last_tok = jnp.where(jnp.asarray(self.active), nxt, self.last_tok)
-        nxt_np = np.asarray(nxt)
-        for slot in range(self.scfg.max_batch):
-            req = self.slot_req[slot]
-            if req is None or not self.active[slot]:
-                continue
-            tok = int(nxt_np[slot])
-            req.output.append(tok)
-            hit_eos = req.eos_id is not None and tok == req.eos_id
-            if hit_eos or len(req.output) >= req.max_new_tokens:
-                req.done = True
-                self.finished.append(req)
-                self.active[slot] = False
-                self.slot_req[slot] = None
-        return int(self.active.sum())
-
-    def run_until_drained(self, max_steps: int = 10000) -> list[Request]:
-        for _ in range(max_steps):
-            self.step()
-            if not self.queue and not self.active.any():
-                break
-        return self.finished
-
-
-# --------------------------------------------------------------------------
-# DETR detection serving — the paper's workload behind the same slot model
-# --------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class DetrRequest:
     rid: int
-    image: np.ndarray                     # (3, S, S) float32
+    image: np.ndarray                     # (3, H, W) float32, H/W <= bucket
     # filled by the engine:
     cls_probs: Optional[np.ndarray] = None    # (Nq, C+1) softmax
     boxes: Optional[np.ndarray] = None        # (Nq, 4) cxcywh
+    detections: Optional[dict] = None         # top-k decode (postproc stage)
     done: bool = False
+    bucket: Optional[int] = None              # resolution routed to
+    error: Optional[str] = None               # admission rejection reason
+    callback: Optional[Callable] = None       # invoked on completion
+    t_submit: float = 0.0
+    t_done: float = 0.0
 
 
 class DetrServeEngine:
-    """Micro-batching DETR detection server.
+    """Bucketed continuous-batching DETR detection server.
 
-    Requests queue until ``max_batch`` images (or a flush) form one static
-    batch; one jitted forward serves them all. With a decoder-head config
-    the forward projects + FWP-compacts the value table ONCE into the
-    shared cache and all ``n_layers`` decoder layers sample it — the
-    decode plan's build-once accounting is surfaced by :meth:`describe`.
-    Short batches are padded to the static shape (padded lanes are
-    dropped, never returned)."""
+    ``resolutions`` selects the AOT shape buckets (default: one bucket at
+    ``cfg.img_size``). Each bucket's forward is compiled once at
+    construction for the static ``(max_batch, 3, r, r)`` shape; the model
+    params are resolution-independent, so every bucket serves the same
+    weights. ``submit`` routes (and may reject) immediately; ``step``
+    dispatches one micro-batch from the deepest bucket queue and hands
+    the device outputs to the post-processing stage, which runs on a
+    worker thread when ``pipeline_postproc`` is set (the default) — the
+    two modes share one decode path and are bit-identical."""
 
     def __init__(self, cfg, params, *, max_batch: int = 8,
-                 backend: Optional[str] = None):
-        from repro.core.detector import decoder_plan, detector_apply
-        from repro.msda import make_plan
+                 backend: Optional[str] = None,
+                 resolutions: Optional[tuple] = None,
+                 pipeline_postproc: bool = True, topk: int = 5):
+        from repro.core.detector import detector_apply
         self.cfg = cfg
         self.params = params
-        self.max_batch = max_batch
-        self.queue: deque[DetrRequest] = deque()
+        self.max_batch = int(max_batch)
+        self.backend = backend
+        self.topk = int(topk)
+        if resolutions is None:
+            resolutions = (cfg.img_size,)
+        self.buckets = derive_buckets(cfg, resolutions, backend=backend)
+        self.router = BucketRouter(self.buckets)
+        self.queues: dict[int, deque[DetrRequest]] = {
+            b.resolution: deque() for b in self.buckets}
         self.finished: list[DetrRequest] = []
-        self._fwd = jax.jit(lambda p, img: detector_apply(
-            p, cfg, img, backend=backend))
-        # same plan (and windowed->auto fallback) detector_apply resolves
-        self._plan = decoder_plan(cfg, backend) \
-            if getattr(cfg, "decoder", None) is not None \
-            else make_plan(cfg.encoder.attn, cfg.level_shapes,
-                           backend=backend)
+        self.rejected: list[DetrRequest] = []
+        self._lock = threading.Lock()
+        # compile-count spy: the increment executes at TRACE time only,
+        # so after the AOT warmup below it must never move again —
+        # tests/test_serve.py asserts zero recompiles under mixed load
+        self.compile_count = 0
+        self._compiled = {}
+        for b in self.buckets:
+            def fwd(p, img, _cfg=b.cfg):
+                self.compile_count += 1
+                return detector_apply(p, _cfg, img, backend=self.backend)
+            spec = jax.ShapeDtypeStruct(
+                (self.max_batch, 3, b.resolution, b.resolution), jnp.float32)
+            self._compiled[b.resolution] = \
+                jax.jit(fwd).lower(self.params, spec).compile()
+        self._post = PostprocWorker(self._complete,
+                                    pipelined=pipeline_postproc)
 
+    # ---- introspection -----------------------------------------------------
     def describe(self) -> str:
-        d = self._plan.describe()
-        if self._plan.backend == "pallas_decode":
-            # the serving-relevant consequence of the persistent decode
-            # plan: every request batch stages the compact table once and
-            # all decoder layers sample the staged block
-            d += " [persistent decode: table staged once per memory]"
-        return d
+        lines = []
+        for b in self.buckets:
+            d = b.plan.describe()
+            if b.plan.backend == "pallas_decode":
+                # the serving-relevant consequence of the persistent
+                # decode plan: every request batch stages the compact
+                # table once and all decoder layers sample the staged
+                # block
+                d += " [persistent decode: table staged once per memory]"
+            lines.append(f"bucket {b.resolution}px: {d}")
+        return "\n".join(lines)
 
-    def submit(self, req: DetrRequest):
-        self.queue.append(req)
+    def bucket_table(self) -> list:
+        return self.router.table()
 
+    def pending(self) -> int:
+        """Requests admitted but not yet dispatched to the device."""
+        return sum(len(q) for q in self.queues.values())
+
+    # ---- admission ---------------------------------------------------------
+    def submit(self, req: DetrRequest) -> bool:
+        """Route a request to its bucket queue; returns False (and records
+        the reason on ``req.error``) when admission control rejects it."""
+        req.t_submit = time.perf_counter()
+        bucket, reason = self.router.admit(req.image)
+        if bucket is None:
+            req.error = reason
+            with self._lock:
+                self.rejected.append(req)
+            return False
+        req.bucket = bucket.resolution
+        self.queues[bucket.resolution].append(req)
+        return True
+
+    # ---- one engine step ---------------------------------------------------
     def step(self) -> int:
-        """Serve one micro-batch (padded to the static batch). Returns the
-        number of requests completed this step."""
-        if not self.queue:
+        """Dispatch one micro-batch from the deepest bucket queue (padded
+        to the static batch; ties pick the cheaper/smaller bucket).
+        Returns the number of requests dispatched — completion happens in
+        the post-processing stage."""
+        res = max((r for r, q in self.queues.items() if q),
+                  key=lambda r: (len(self.queues[r]), -r), default=None)
+        if res is None:
             return 0
-        batch = [self.queue.popleft()
-                 for _ in range(min(self.max_batch, len(self.queue)))]
-        imgs = np.stack([r.image for r in batch])
-        pad = self.max_batch - len(batch)
-        if pad:
-            imgs = np.concatenate(
-                [imgs, np.zeros((pad,) + imgs.shape[1:], imgs.dtype)])
-        cls_logits, boxes, _ = self._fwd(self.params, jnp.asarray(imgs))
-        probs = np.asarray(jax.nn.softmax(cls_logits, axis=-1))
+        q = self.queues[res]
+        batch = [q.popleft() for _ in range(min(self.max_batch, len(q)))]
+        imgs = np.zeros((self.max_batch, 3, res, res), np.float32)
+        for i, req in enumerate(batch):
+            im = np.asarray(req.image, np.float32)
+            imgs[i, :, :im.shape[1], :im.shape[2]] = im     # pad up
+        cls_logits, boxes, _aux = self._compiled[res](self.params,
+                                                      jnp.asarray(imgs))
+        # hand the device arrays straight to the postproc stage: the
+        # worker's np.asarray blocks on the transfer while this thread is
+        # free to dispatch the next bucket's micro-batch
+        self._post.submit((batch, cls_logits, boxes))
+        return len(batch)
+
+    def _complete(self, item) -> None:
+        batch, cls_logits, boxes = item
+        probs = softmax_np(np.asarray(cls_logits))
         boxes = np.asarray(boxes)
         for i, req in enumerate(batch):
             req.cls_probs = probs[i]
             req.boxes = boxes[i]
+            req.detections = topk_detections(probs[i], boxes[i], self.topk)
+            req.t_done = time.perf_counter()
             req.done = True
-            self.finished.append(req)
-        return len(batch)
+            if req.callback is not None:
+                req.callback(req)
+            with self._lock:
+                self.finished.append(req)
 
-    def run_until_drained(self, max_steps: int = 10000) -> list[DetrRequest]:
-        for _ in range(max_steps):
-            if not self.queue:
-                break
+    def drain(self) -> None:
+        """Barrier on the post-processing stage only (no new dispatches)."""
+        self._post.drain()
+
+    def run_until_drained(self, max_steps: int = 10000
+                          ) -> list[DetrRequest]:
+        steps = 0
+        while self.pending() and steps < max_steps:
             self.step()
+            steps += 1
+        self._post.drain()
+        if self.pending():
+            raise StarvationError({
+                "engine": "DetrServeEngine", "steps": steps,
+                "queued": {r: len(q) for r, q in self.queues.items() if q},
+                "finished": len(self.finished),
+                "rejected": len(self.rejected)})
         return self.finished
+
+    def close(self) -> None:
+        self._post.close()
 
 
 # --------------------------------------------------------------------------
@@ -256,9 +237,15 @@ class StreamingDetrEngine:
     :meth:`step`, each session's next frame memory is stacked into the
     static batch (idle slots replay their diff reference, contributing
     zero dirty tiles), the manager applies ONE incremental update (or a
-    full rebuild — first frame, keep transition, admission, or
-    over-budget dirt), the decoder + heads run one jitted forward against
-    the shared cache, and the sampled frequencies feed back into the EMA.
+    full rebuild — first frame, keep transition, or over-budget dirt),
+    the decoder + heads run one jitted forward against the shared cache,
+    and the sampled frequencies feed back into the EMA.
+
+    Sessions join and leave slots BETWEEN steps without recompiling and
+    without disturbing their neighbours: admission schedules a per-slot
+    build in the manager (batch-1 build scattered into the slot's rows)
+    while every other session rides the ordinary incremental path — the
+    continuous-batching contract of the serve tentpole.
 
     Sessions submit encoder MEMORIES (N_in, D) — in a full pipeline the
     backbone+encoder run per frame upstream; the temporal reuse targets
@@ -340,8 +327,10 @@ class StreamingDetrEngine:
         sid = self._next_sid
         self._next_sid += 1
         self.sessions[sid] = StreamSession(sid=sid, slot=slot)
-        # warm-start the slot's EMA/keep rows; forces a full rebuild on
-        # the next step so the slot's table is built from its own frame
+        # warm-start the slot's EMA/keep rows and schedule a PER-SLOT
+        # admission build: the next step rebuilds only this slot's table
+        # rows from its own frame, other sessions ride the incremental
+        # path — joining never rebuild-storms the whole batch
         self.mgr.reset_slot(slot)
         return sid
 
@@ -464,9 +453,20 @@ class StreamingDetrEngine:
         return {s.sid: s.slot for s in self.sessions.values()}
 
     def run_until_drained(self, max_steps: int = 10000) -> None:
-        for _ in range(max_steps):
+        steps = 0
+        while any(s.queue for s in self.sessions.values()) \
+                and steps < max_steps:
             if self.step() == 0:
                 break
+            steps += 1
+        queued = {s.sid: len(s.queue)
+                  for s in self.sessions.values() if s.queue}
+        if queued:
+            raise StarvationError({
+                "engine": "StreamingDetrEngine", "steps": steps,
+                "queued": queued,
+                "frames_done": sum(s.frames_done
+                                   for s in self.sessions.values())})
 
     def report(self) -> dict:
         """The manager's cumulative rebuild-vs-incremental accounting."""

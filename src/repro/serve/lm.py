@@ -1,0 +1,136 @@
+"""Token-decode (LM) continuous-batching engine — the seed-era slot model.
+
+Quarantined from ``serve/engine.py`` so that module is one coherent DETR
+serving subsystem: this engine serves the LM-family archs behind the same
+vLLM-style slot model (fixed decode batch over ring caches, requests
+admitted into free slots via a batch-1 prefill scattered into the batch
+cache, every step decodes all active slots one token). Still used by
+``repro.launch.serve`` and ``examples/lm_serve.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+from repro.models.registry import get_api
+from repro.serve.postproc import StarvationError
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                    # (S_prompt,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 4
+    cache_len: int = 256
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, serve_cfg: ServeConfig,
+                 rng: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.api = get_api(cfg)
+        self.params = params
+        self.scfg = serve_cfg
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        b = serve_cfg.max_batch
+        self.cache = self.api.init_cache(cfg, b, serve_cfg.cache_len)
+        self.pos = jnp.zeros((b,), jnp.int32)
+        self.last_tok = jnp.zeros((b,), jnp.int32)
+        self.active = np.zeros((b,), bool)
+        self.slot_req: list[Optional[Request]] = [None] * b
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill1 = jax.jit(self._prefill1_impl)
+
+    # --- jitted internals --------------------------------------------------
+    def _prefill1_impl(self, params, cache1, tokens1):
+        logits, cache1 = self.api.prefill(params, self.cfg, cache1,
+                                          {"tokens": tokens1})
+        return logits, cache1
+
+    def _decode_impl(self, params, cache, tokens, pos):
+        return self.api.decode_step(params, self.cfg, cache, tokens, pos)
+
+    # --- slot management ----------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self, slot: int, req: Request):
+        cfg, scfg = self.cfg, self.scfg
+        cache1 = self.api.init_cache(cfg, 1, scfg.cache_len)
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, cache1 = self._prefill1(self.params, cache1, toks)
+        # scatter the single-request cache into batch slot `slot`
+        # (every stacked cache leaf is (n_layers, B, ...): dim 1 is batch)
+        self.cache = jax.tree.map(
+            lambda c, c1: c.at[:, slot].set(c1[:, 0]), self.cache, cache1)
+        first = int(jnp.argmax(logits, axis=-1)[0]) if scfg.greedy \
+            else self._sample(logits)[0]
+        req.output.append(first)
+        self.last_tok = self.last_tok.at[slot].set(first)
+        self.pos = self.pos.at[slot].set(len(req.prompt))
+        self.active[slot] = True
+        self.slot_req[slot] = req
+
+    def _sample(self, logits):
+        self.rng, k = jax.random.split(self.rng)
+        return np.asarray(jax.random.categorical(
+            k, logits / self.scfg.temperature, axis=-1))
+
+    # --- one engine step ----------------------------------------------------
+    def step(self) -> int:
+        """Admit waiting requests into free slots, then decode one token for
+        every active slot. Returns number of active slots."""
+        for slot in range(self.scfg.max_batch):
+            if not self.active[slot] and self.queue:
+                self._admit(slot, self.queue.popleft())
+        if not self.active.any():
+            return 0
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.last_tok, self.pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32) if self.scfg.greedy \
+            else jnp.asarray(self._sample(logits), jnp.int32)
+        self.pos = self.pos + jnp.asarray(self.active, jnp.int32)
+        self.last_tok = jnp.where(jnp.asarray(self.active), nxt, self.last_tok)
+        nxt_np = np.asarray(nxt)
+        for slot in range(self.scfg.max_batch):
+            req = self.slot_req[slot]
+            if req is None or not self.active[slot]:
+                continue
+            tok = int(nxt_np[slot])
+            req.output.append(tok)
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if hit_eos or len(req.output) >= req.max_new_tokens:
+                req.done = True
+                self.finished.append(req)
+                self.active[slot] = False
+                self.slot_req[slot] = None
+        return int(self.active.sum())
+
+    def run_until_drained(self, max_steps: int = 10000) -> list[Request]:
+        for step in range(max_steps):
+            self.step()
+            if not self.queue and not self.active.any():
+                return self.finished
+        raise StarvationError({
+            "engine": "ServeEngine", "steps": max_steps,
+            "queued": len(self.queue), "active": int(self.active.sum()),
+            "finished": len(self.finished)})

@@ -1,0 +1,125 @@
+"""Pipelined host-side post-processing + serving-loop starvation reports.
+
+The device can launch step N+1 while step N's outputs are still being
+decoded on the host — top-k decode, box emission and per-request
+callbacks are pure numpy work that would otherwise serialize with the
+next dispatch. :class:`PostprocWorker` is that overlap: the engine hands
+(requests, device arrays) to a queue, a daemon thread blocks on the
+device transfer (``np.asarray`` releases the GIL while XLA computes) and
+runs the decode, and the engine's main loop is already dispatching the
+next micro-batch. ``pipelined=False`` degrades to synchronous in-line
+processing through the SAME code path, so the two modes are bit-identical
+on identical inputs (tests/test_serve.py pins this).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class StarvationError(RuntimeError):
+    """``run_until_drained`` hit its step limit with work still queued.
+
+    The seed engines silently returned in this situation, dropping the
+    queued requests on the floor; every drain loop now raises this
+    instead. ``report`` carries the starvation snapshot (queue depths,
+    steps executed, completions) so callers can log or re-drain."""
+
+    def __init__(self, report: dict):
+        self.report = dict(report)
+        super().__init__(
+            "serving loop starved (work still queued at max_steps): "
+            + ", ".join(f"{k}={v}" for k, v in sorted(self.report.items())))
+
+
+def softmax_np(x: np.ndarray) -> np.ndarray:
+    """Float32 softmax over the last axis (host-side, no device round-trip)."""
+    x = np.asarray(x, np.float32)
+    x = x - x.max(axis=-1, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def topk_detections(cls_probs: np.ndarray, boxes: np.ndarray,
+                    k: int) -> dict:
+    """Top-k box emission from one request's (Nq, C+1) probs + (Nq, 4) boxes.
+
+    Score is each query's best FOREGROUND class probability (the last
+    column is background); ties resolve to the lower query index so the
+    emission is deterministic."""
+    fg = cls_probs[:, :-1]
+    labels = fg.argmax(axis=-1).astype(np.int32)
+    scores = fg.max(axis=-1).astype(np.float32)
+    k = min(int(k), scores.shape[0])
+    order = np.argsort(-scores, kind="stable")[:k]
+    return {"scores": scores[order], "labels": labels[order],
+            "boxes": np.asarray(boxes)[order],
+            "query": order.astype(np.int32)}
+
+
+_STOP = object()
+
+
+class PostprocWorker:
+    """Background post-processing stage fed by a queue.
+
+    ``process`` receives each submitted item; exceptions are captured and
+    re-raised from :meth:`drain`/:meth:`submit` on the caller's thread (a
+    crashed worker must fail the serving loop, not hang it). ``drain``
+    blocks until every submitted item has been processed — the engine's
+    ``run_until_drained`` barrier."""
+
+    def __init__(self, process: Callable, *, pipelined: bool = True,
+                 name: str = "serve-postproc"):
+        self._process = process
+        self.pipelined = bool(pipelined)
+        self._exc: Optional[BaseException] = None
+        self._q: queue.Queue = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+        if self.pipelined:
+            self._thread = threading.Thread(target=self._loop, name=name,
+                                            daemon=True)
+            self._thread.start()
+
+    def submit(self, item) -> None:
+        if self._exc is not None:
+            raise self._exc
+        if self.pipelined:
+            self._q.put(item)
+        else:
+            self._process(item)
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is _STOP:
+                    return
+                if self._exc is None:
+                    self._process(item)
+            except BaseException as e:          # noqa: BLE001 - re-raised
+                self._exc = e
+            finally:
+                self._q.task_done()
+
+    @property
+    def backlog(self) -> int:
+        """Items submitted but not yet fully processed."""
+        return int(self._q.unfinished_tasks) if self.pipelined else 0
+
+    def drain(self) -> None:
+        """Block until every submitted item is processed; re-raise any
+        worker exception on the calling thread."""
+        if self.pipelined:
+            self._q.join()
+        if self._exc is not None:
+            raise self._exc
+
+    def close(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._q.put(_STOP)
+            self._thread.join(timeout=5.0)
+            self._thread = None

@@ -128,6 +128,12 @@ class TemporalCacheManager:
         #   paths were traced against — ``step`` detects a mid-stream swap
         #   (``mgr.plan = other_plan``) and reconfigures + rebuilds
         self._geometry_stale = True                 # first frame: full build
+        self._pending_admit: set = set()            # slots scheduled for a
+        #   per-slot admission build on the next frame (reset_slot)
+        # trace-time spies: each jitted impl bumps its counter in the
+        # traced body, so the counts move ONLY on (re)compilation —
+        # tests assert session churn never retraces
+        self.trace_counts = {"build": 0, "frame": 0, "restage": 0}
         self.frame_index = 0
         self.rebuild_frames = 0
         self.partial_frames = 0                     # per-level restages
@@ -197,6 +203,7 @@ class TemporalCacheManager:
 
     # ---- jitted internals -------------------------------------------------
     def _build_impl(self, params, x_flat, fwp):
+        self.trace_counts["build"] += 1
         return build_value_cache(params, self.plan, x_flat,
                                  MSDAPipelineState(fwp=fwp))
 
@@ -252,6 +259,7 @@ class TemporalCacheManager:
         dirty count fits the budget, else it discards the result and
         rebuilds — a rare path by construction, and fusing diff+update
         into one program keeps the per-frame dispatch count at one."""
+        self.trace_counts["frame"] += 1
         changed, slot_dirty, nd = self._diff_impl(x_new, x_ref, keep_idx)
         v, staged, x_ref = self._update_impl(
             params, x_new, x_ref, v, staged, keep_idx, keep_mask, changed,
@@ -266,6 +274,7 @@ class TemporalCacheManager:
         ``new_keep_idx``), under the frozen act/table quant scales —
         the same row-update path as the incremental frame, just with a
         fresh slot->pixel map for the restaged ranges."""
+        self.trace_counts["restage"] += 1
         tmp = MSDAValueCache(v=v, pix2slot=None, keep_idx=new_keep_idx,
                              n_rows=self._n_rows,
                              slot_windows=self._slot_windows,
@@ -307,6 +316,7 @@ class TemporalCacheManager:
         self._cache_fwp = self.fwp
         self._cache_plan = self.plan
         self._geometry_stale = False
+        self._pending_admit.clear()    # a full build covers every slot
 
     def _transition_levels(self) -> Optional[Tuple[int, ...]]:
         """Which levels' keep geometry changed vs the cache's, or None
@@ -411,6 +421,9 @@ class TemporalCacheManager:
                     keep_idx=take(st.keep_idx),
                     pix2slot=take(st.pix2slot),
                     freq=take(st.freq)))
+        if self._pending_admit:
+            inv = {int(old): new for new, old in enumerate(p.tolist())}
+            self._pending_admit = {inv[s] for s in self._pending_admit}
 
     def step(self, x_new, force_full: bool = False
              ) -> Tuple[MSDAValueCache, dict]:
@@ -457,6 +470,18 @@ class TemporalCacheManager:
             if partial:
                 restaged_levels = partial
                 partial_bytes = self._partial_restage(x_new, partial)
+        admitted: Tuple[int, ...] = ()
+        admit_bytes = 0
+        if self._pending_admit and self.cache is not None \
+                and not self._geometry_stale and not force_full \
+                and not plan_change:
+            # per-slot session admission: rebuild ONLY the joining slots'
+            # rows from their own frames; the rest of the batch proceeds
+            # incrementally below (the admitted slots' diff reference was
+            # just refreshed, so they contribute zero dirty tiles)
+            admitted = tuple(sorted(self._pending_admit))
+            self._pending_admit.clear()
+            admit_bytes = self._admit_slots(x_new, admitted)
         if self.cache is None or self._geometry_stale or force_full \
                 or plan_change:
             mode, reason = "rebuild", (
@@ -481,13 +506,15 @@ class TemporalCacheManager:
                 # budget, the table must be rebuilt wholesale
                 mode, reason = "rebuild", "dirty>budget"
                 self._full_build(x_new)
-                staged_bytes = partial_bytes + self._full_bytes
+                staged_bytes = partial_bytes + admit_bytes \
+                    + self._full_bytes
             else:
                 mode = "partial" if restaged_levels else "incremental"
                 reason = "keep-transition" if restaged_levels else ""
                 self.cache = self.cache._replace(v=v, staged=staged)
                 self.x_ref = x_ref
-                staged_bytes = partial_bytes + self._incr_bytes
+                staged_bytes = partial_bytes + admit_bytes \
+                    + self._incr_bytes
         self.frame_index += 1
         self.rebuild_frames += mode == "rebuild"
         self.partial_frames += mode == "partial"
@@ -504,6 +531,7 @@ class TemporalCacheManager:
             "n_dirty": n_dirty, "tiles_changed": tiles_hit,
             "keep_transition": bool(keep_transition),
             "restaged_levels": restaged_levels,
+            "admitted_slots": admitted,
             "update_rows": self.update_rows,
         }
         return self.cache, self.last_stats
@@ -536,10 +564,71 @@ class TemporalCacheManager:
                 or bool(jnp.any(a.pix2slot != b.pix2slot))
         return bool(jnp.any(a.keep_mask != b.keep_mask))
 
+    def _admit_slots(self, x_new: jnp.ndarray, slots: Tuple[int, ...]
+                     ) -> int:
+        """Per-slot admission: build each admitted slot's table rows from
+        its OWN frame (a batch-1 build through the already-traced
+        ``_jit_build`` — batch 1 is one extra trace at most, shared by
+        every admission) and scatter them into this slot's rows of the
+        persistent cache, its decode staging, the diff reference and the
+        cache-geometry record. Every other slot's state is untouched, so
+        the rest of the batch rides the ordinary incremental path — a
+        session joining never rebuild-storms its neighbours. Returns the
+        staged-bytes delta (the admitted slots' share of a full build)."""
+        for slot in slots:
+            fwp1 = None
+            if self.fwp is not None:
+                f = self.fwp
+                fwp1 = fwp_lib.FWPState(
+                    keep_mask=f.keep_mask[slot:slot + 1],
+                    keep_idx=None if f.keep_idx is None
+                    else f.keep_idx[slot:slot + 1],
+                    pix2slot=None if f.pix2slot is None
+                    else f.pix2slot[slot:slot + 1],
+                    freq=f.freq[slot:slot + 1])
+            built = self._restore_meta(
+                self._jit_build(self.params, x_new[slot:slot + 1], fwp1))
+            c = self.cache
+            srow = lambda a, b: None if a is None else a.at[slot].set(b[0])
+            staged = c.staged
+            if staged is not None:
+                bs = built.staged
+                staged = dataclasses.replace(
+                    staged, v=staged.v.at[slot].set(bs.v[0]),
+                    remap=srow(staged.remap, bs.remap),
+                    scale=srow(staged.scale, bs.scale))
+            self.cache = c._replace(
+                v=c.v.at[slot].set(built.v[0]),
+                pix2slot=srow(c.pix2slot, built.pix2slot),
+                keep_idx=srow(c.keep_idx, built.keep_idx),
+                scale=srow(c.scale, built.scale), staged=staged)
+            self.x_ref = self.x_ref.at[slot].set(self._probe(x_new)[slot])
+            if self._cache_fwp is not None:
+                g, f = self._cache_fwp, self.fwp
+                self._cache_fwp = fwp_lib.FWPState(
+                    keep_mask=g.keep_mask.at[slot].set(f.keep_mask[slot]),
+                    keep_idx=None if g.keep_idx is None
+                    else g.keep_idx.at[slot].set(f.keep_idx[slot]),
+                    pix2slot=None if g.pix2slot is None
+                    else g.pix2slot.at[slot].set(f.pix2slot[slot]),
+                    freq=g.freq.at[slot].set(f.freq[slot]))
+        # accounting unit is per (batch, head-group) = per batch element:
+        # k admitted slots cost their k/batch share of a full build
+        return (self._full_bytes * len(slots) + self.batch - 1) \
+            // self.batch
+
     def reset_slot(self, slot: int) -> None:
         """Reset one batch slot for a newly admitted session: warm-start
-        its EMA/keep rows and force a full rebuild on the next frame."""
-        self._geometry_stale = True
+        its EMA/keep rows and schedule a PER-SLOT build on the next frame
+        (``_admit_slots``). Falls back to flagging a full rebuild before
+        the first frame (nothing to scatter into yet) and under frozen
+        per-tensor activation quantization (``act_scale``): the admitted
+        slot's build would re-derive the shared act grid, so exactness
+        requires rebuilding the whole batch against one fresh scale."""
+        if self.cache is None or self.act_scale is not None:
+            self._geometry_stale = True
+        else:
+            self._pending_admit.add(slot)
         if self.ema is None:
             return
         self.ema = self.ema.at[slot].set(1.0)

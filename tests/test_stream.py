@@ -569,30 +569,61 @@ def test_mid_stream_plan_swap_forces_full_rebuild():
     assert cache.v.dtype == jnp.int8
 
 
-def test_streaming_engine_admission_forces_rebuild():
-    """Admitting a session mid-stream resets its slot and rebuilds, so a
-    stale slot's table can never leak into the new session."""
+def test_streaming_engine_admission_is_slot_local():
+    """Admitting a session mid-stream rebuilds ONLY the joining slot's
+    rows — a batch-1 build scattered into the slot — while the running
+    session rides the ordinary incremental path (no batch-wide rebuild
+    storm), the admitted slot's table exactly matches a from-scratch
+    build of its own frame (no stale-slot leakage), and repeated churn
+    never retraces any compiled path."""
+    from repro.core import fwp as fwp_lib
     from repro.serve.engine import StreamingDetrEngine
     cfg, dec_cfg, params = _decoder_setup()
     engine = StreamingDetrEngine(
         cfg, dec_cfg, params, LEVELS, max_sessions=2,
         stream_cfg=StreamConfig(tile_rows=1, delta_threshold=1e-4,
                                 update_frac=0.9),
-        update_fwp=False)     # freeze the keep set: isolates the
-    #   admission-triggered rebuild from warm-up EMA transitions
+        update_fwp=False)     # freeze the keep set: isolates admission
+    #   from warm-up EMA transitions
+    mgr = engine.mgr
     s0 = engine.open_session()
     scene = drifting_scene(3, LEVELS, D, 3)
     engine.submit_frame(s0, scene[0][0])
     engine.step()
     engine.submit_frame(s0, scene[1][0])
     engine.step()
-    assert engine.mgr.last_stats["mode"] == "incremental"
-    s1 = engine.open_session()                     # admission
+    assert mgr.last_stats["mode"] == "incremental"
+    s1 = engine.open_session()                     # mid-stream admission
     engine.submit_frame(s0, scene[2][0])
     engine.submit_frame(s1, scene[0][0])
     engine.step()
-    st = engine.mgr.last_stats
-    assert st["mode"] == "rebuild" and st["keep_transition"], st
+    st = mgr.last_stats
+    assert st["mode"] == "incremental", st         # no rebuild storm
+    assert st["admitted_slots"] == (1,), st
+    assert mgr.rebuild_frames == 1                 # only the first frame
+    # the admitted slot's rows == a from-scratch build of its own frame
+    # under its slot's keep geometry
+    f = mgr.fwp
+    fwp1 = None if f is None else fwp_lib.FWPState(
+        keep_mask=f.keep_mask[1:2],
+        keep_idx=None if f.keep_idx is None else f.keep_idx[1:2],
+        pix2slot=None if f.pix2slot is None else f.pix2slot[1:2],
+        freq=f.freq[1:2])
+    ref = build_value_cache(mgr.params, mgr.plan,
+                            jnp.asarray(scene[0][0])[None],
+                            MSDAPipelineState(fwp=fwp1))
+    np.testing.assert_allclose(np.asarray(mgr.cache.v[1]),
+                               np.asarray(ref.v[0]), atol=1e-5)
     with pytest.raises(RuntimeError):
-        engine.open_session()
         engine.open_session()                      # only 2 slots
+    # churn again: close + rejoin retraces NOTHING (the batch-1 build was
+    # traced by the first admission) and stays slot-local
+    traces = dict(mgr.trace_counts)
+    engine.close_session(s1)
+    s2 = engine.open_session()
+    engine.submit_frame(s2, scene[1][0])
+    engine.step()
+    assert mgr.trace_counts == traces, (mgr.trace_counts, traces)
+    assert mgr.last_stats["admitted_slots"] == (1,)
+    assert mgr.last_stats["mode"] == "incremental"
+    assert mgr.rebuild_frames == 1

@@ -14,7 +14,7 @@ from repro.models.common import ModelConfig
 from repro.models.registry import get_api
 from repro.optim.adamw import OptConfig, adamw_init, adamw_update, lr_at
 from repro.optim.compress import dequantize_grad, quantize_grad
-from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.lm import Request, ServeConfig, ServeEngine
 from repro.train.loop import (
     FailureInjector, SimulatedNodeFailure, TrainLoopConfig, train_loop)
 from repro.train.step import build_train_step, make_train_state
