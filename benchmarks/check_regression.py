@@ -33,6 +33,46 @@ def _micro_rows(payload: dict) -> dict:
     return payload.get("results", {}).get("micro", {})
 
 
+class EmptyIntersectionError(ValueError):
+    """Baseline and current run share NO gated rows — a machine-speed
+    scale factor computed over nothing is meaningless (the old code path
+    would divide by nothing or silently scale by 1.0). The message
+    prints both row sets so the mismatch is diagnosable from CI logs."""
+
+    def __init__(self, base_rows, cur_rows, prefix: str):
+        self.base_rows = sorted(base_rows)
+        self.cur_rows = sorted(cur_rows)
+        self.prefix = prefix
+        super().__init__(
+            f"no shared {prefix!r} rows between baseline and current run; "
+            f"cannot derive a machine-speed scale factor.\n"
+            f"  baseline rows: {self.base_rows or '(none)'}\n"
+            f"  current rows:  {self.cur_rows or '(none)'}")
+
+
+def shared_row_scale(base: dict, cur: dict, prefix: str = "msda_") -> float:
+    """Median baseline/current per-call ratio over the shared gated rows.
+
+    The factor that maps THIS machine's timings onto the committed
+    baseline's machine speed — how a new benchmark row gets committed at
+    baseline scale (``--print-scale``). Raises
+    :class:`EmptyIntersectionError` when the intersection is empty
+    instead of guessing."""
+    def med(xs):
+        xs = sorted(xs)
+        n = len(xs)
+        return xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+
+    base_rows = {n for n in base if n.startswith(prefix)}
+    cur_rows = {n for n in cur if n.startswith(prefix)}
+    ratios = [float(base[n]["us_per_call"]) / float(cur[n]["us_per_call"])
+              for n in sorted(base_rows & cur_rows)
+              if float(cur[n]["us_per_call"]) > 0]
+    if not ratios:
+        raise EmptyIntersectionError(base_rows, cur_rows, prefix)
+    return float(med(ratios))
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="results/benchmarks.json")
@@ -41,12 +81,21 @@ def main() -> int:
                     help="fail when current > threshold * baseline")
     ap.add_argument("--prefix", default="msda_",
                     help="only rows with this prefix gate the build")
+    ap.add_argument("--print-scale", action="store_true",
+                    help="also print the median shared-row baseline/current "
+                         "scale factor (for committing new rows at the "
+                         "baseline's machine speed)")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
         base = _micro_rows(json.load(f))
     with open(args.current) as f:
         cur = _micro_rows(json.load(f))
+
+    if args.print_scale:
+        scale = shared_row_scale(base, cur, args.prefix)
+        print(f"[check] shared-row scale factor (baseline/current median): "
+              f"{scale:.4f}")
 
     failures = []
     missing_baseline = []

@@ -300,6 +300,9 @@ def main() -> None:
                 f"`examples/detr_stream.py` (N sessions, batched slots, "
                 f"decoder-frequency EMA feedback).")
         parts.append("\n")
+    auto_par = _autotune_paragraph(bench)
+    if auto_par:
+        parts.append(auto_par)
     serve = bench.get("serve_sustained", {})
     if "closed_loop" in serve:
         cl, ol = serve["closed_loop"], serve["open_loop"]
@@ -362,6 +365,111 @@ def main() -> None:
         f.write("".join(parts))
     print("wrote EXPERIMENTS.md",
           f"({len(base_rows)} baseline cells, {len(opt_rows)} optimized)")
+
+
+def _autotune_paragraph(bench: dict) -> str:
+    """Measured-vs-static budget story from results/autotune.json: the
+    per-platform calibration winners, plus the concrete plan delta the
+    measured budget buys on the paper 4-level shape."""
+    path = "results/autotune.json"
+    if not os.path.exists(path):
+        return ""
+    with open(path) as f:
+        table = json.load(f)
+    plats = table.get("platforms", {})
+    if not plats:
+        return ""
+    out = ["\n**Plan autotuning (measured vs static budgets)** — "
+           "`repro/msda/autotune.py` replaces three static planner guesses "
+           "with on-device measurements, persisted per platform in "
+           "`results/autotune.json` (committed fallback for CI; "
+           "`plan.describe()` reports the provenance as "
+           "`budget=measured|static`):\n"]
+    for plat, e in sorted(plats.items()):
+        mb = e.get("staging_budget_bytes", 0) / 2**20
+        stream = e.get("stream", {})
+        out.append(
+            f"\n- `{plat}`: staged-table budget **{mb:.0f} MB measured** "
+            f"(bandwidth-knee probe) vs the 4 MB static default "
+            f"({mb / 4:.0f}x); persistent decode sweep "
+            f"{'KEPT' if e.get('decode_sweep_beneficial') else 'VETOED'} "
+            f"(measured {e.get('decode_persistent_speedup', 0):.2f}x vs "
+            f"per-layer restaging, interpret-mode); streaming crossover "
+            f"`diff_channel_stride={stream.get('diff_channel_stride')}` / "
+            f"`update_frac={stream.get('update_frac')}`.\n")
+    delta = _paper_shape_budget_delta(plats)
+    if delta:
+        out.append(delta)
+    micro = bench.get("micro", {})
+    if "msda_autotune_load_plan" in micro:
+        us = micro["msda_autotune_load_plan"]["us_per_call"]
+        out.append(
+            f"\nStartup cost after the one-off calibration run: loading + "
+            f"applying the table and resolving an un-memoized auto plan "
+            f"measures {us / 1000:.1f} ms (`msda_autotune_load_plan`, under "
+            f"the CI regression gate); engines pay it once at "
+            f"construction via the load-only `msda.ensure_applied()`.\n")
+    return "".join(out)
+
+
+def _paper_shape_budget_delta(plats: dict) -> str:
+    """The measured budget's consequence on the paper 4-level pyramid —
+    best-effort (the doc generator must not die on an import problem)."""
+    try:
+        import jax
+
+        from repro.core.msdeform_attn import MSDeformAttnConfig
+        from repro.msda import plan as plan_lib
+
+        entry = plats.get(jax.default_backend())
+        if not entry:
+            return ""
+        paper_levels = ((100, 167), (50, 84), (25, 42), (13, 21))
+        cfg = MSDeformAttnConfig(d_model=256, n_heads=8,
+                                 range_narrow=(8.0, 6.0, 4.0, 3.0))
+        prev = plan_lib.tuned_entry()
+        try:
+            plan_lib.apply_tuned_plan_table(None)
+            p_stat = plan_lib.make_plan(cfg, paper_levels, backend="auto",
+                                        n_queries=300, n_consumers=6)
+            plan_lib.apply_tuned_plan_table(entry)
+            p_meas = plan_lib.make_plan(cfg, paper_levels, backend="auto",
+                                        n_queries=300, n_consumers=6)
+        finally:
+            plan_lib.apply_tuned_plan_table(prev)
+        staged_kb = p_meas.cache_table_bytes / 1024
+        meas_mb = p_meas.staging_budget_bytes // 2**20
+        stat_mb = plan_lib.DEFAULT_WINDOW_STAGING_BUDGET // 2**20
+        vmem_mb = p_meas.vmem_budget_bytes / 2**20
+        if p_stat.backend != p_meas.backend:
+            story = (
+                f"flips the auto decode plan from `{p_stat.backend}` to "
+                f"`{p_meas.backend}`: the {staged_kb:.0f} KB staged decode "
+                f"table clears the measured {meas_mb} MB ceiling but not "
+                f"the static {stat_mb} MB guess")
+        elif staged_kb * 1024 <= p_meas.staging_budget_bytes:
+            # the table fits the measured staging ceiling, so the staging
+            # budget is not what keeps the backend — the kernel VMEM
+            # budget binds first at this shape
+            story = (
+                f"keeps `{p_meas.backend}`: the {staged_kb:.0f} KB staged "
+                f"decode table clears the measured {meas_mb} MB staging "
+                f"ceiling (it missed the static {stat_mb} MB guess), but "
+                f"the {vmem_mb:.0f} MB kernel VMEM budget still binds "
+                f"first at this shape")
+        else:
+            story = (
+                f"keeps `{p_meas.backend}`: the {staged_kb:.0f} KB staged "
+                f"decode table exceeds even the measured {meas_mb} MB "
+                f"ceiling")
+        return (
+            f"\nOn the paper 4-level shape (100x167 pyramid, d_model=256, "
+            f"300 decode queries, 6 layers) the measured budget {story} — "
+            f"every later kernel improvement lands in production through "
+            f"the same measured gate instead of waiting for a hand-raised "
+            f"constant.\n")
+    except Exception:                       # noqa: BLE001 - doc generator
+        return ""
 
 
 HEADER = """# EXPERIMENTS — DEFA on TPU

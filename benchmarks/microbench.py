@@ -278,6 +278,36 @@ def _decode_launch_rows(attn_cfg, levels, memory, state, plan_p, dparams):
     ]
 
 
+def _autotune_rows() -> list[tuple[str, float, str]]:
+    """Startup cost of the measured-plan path: load the persisted
+    per-platform table, apply it, and resolve one auto plan against the
+    measured budgets — via make_plan, NOT the memoized plan_for, so the
+    row times a real resolution instead of a dict hit. This is what
+    every engine construction pays after the one-off calibration run."""
+    from repro import msda
+    from repro.core.msdeform_attn import MSDeformAttnConfig
+    from repro.msda import autotune
+    from repro.msda import plan as plan_lib
+
+    levels = ((16, 20), (8, 10), (4, 5), (2, 3))
+    cfg = MSDeformAttnConfig(d_model=64, n_heads=4,
+                             range_narrow=(6.0, 4.0, 3.0, 2.0))
+    prev = plan_lib.tuned_entry()
+
+    def load_apply_plan():
+        entry = autotune.plan_autotune(measure=False, warn_missing=False)
+        plan = msda.make_plan(cfg, levels, backend="auto", n_queries=64,
+                              n_consumers=6)
+        return entry, plan
+
+    t = _time(load_apply_plan)
+    _, plan = load_apply_plan()
+    plan_lib.apply_tuned_plan_table(prev)     # don't leak into later rows
+    return [("msda_autotune_load_plan", t,
+             f"load+apply plan table, un-memoized auto plan "
+             f"(budget={plan.budget_source})")]
+
+
 def run(log=print) -> list[tuple[str, float, str]]:
     rows = []
     key = jax.random.PRNGKey(0)
@@ -308,6 +338,7 @@ def run(log=print) -> list[tuple[str, float, str]]:
     rows.append(("msgs_unfused_jnp", t_uf, "materializing baseline"))
 
     rows.extend(_msda_backend_rows())
+    rows.extend(_autotune_rows())
 
     xm = jax.random.normal(key, (256, 256))
     wm = jax.random.normal(jax.random.fold_in(key, 3), (256, 256))

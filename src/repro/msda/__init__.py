@@ -35,9 +35,10 @@ Quickstart::
 """
 from repro.msda.attention import (msda_attention, msda_attention_cached,
                                   project_values)
+from repro.msda.autotune import ensure_applied, plan_autotune
 from repro.msda.backends import (BackendInfo, available_backends,
-                                 backend_info, get_backend,
-                                 register_backend)
+                                 backend_info, candidate_backends,
+                                 get_backend, register_backend)
 from repro.msda.cache import MSDAValueCache, build_value_cache
 from repro.msda.decoder import (MSDADecoderConfig, decoder_apply,
                                 decoder_logical_axes, init_decoder)
@@ -48,8 +49,11 @@ from repro.msda.ordering import (QUERY_ORDERS, invert_queries,
 from repro.msda.pipeline import MSDAPipelineState
 from repro.msda.plan import (DEFAULT_VMEM_BUDGET,
                              DEFAULT_WINDOW_STAGING_BUDGET, MSDAPlan,
-                             block_q_for_levels, lane_layout, make_plan,
-                             next_pow2, plan_for, resolve_table_dtype,
+                             apply_tuned_plan_table, block_q_for_levels,
+                             lane_layout, make_plan, next_pow2, plan_for,
+                             resolve_table_dtype, staging_budget_source,
+                             tuned_decode_sweep, tuned_entry,
+                             tuned_generation, tuned_stream_params,
                              window_staging_budget, windowed_eligible)
 from repro.msda.sampling import (SamplingPoints, corner_data,
                                  flat_gather_heads, generate_points,
@@ -57,8 +61,9 @@ from repro.msda.sampling import (SamplingPoints, corner_data,
 
 __all__ = [
     "msda_attention", "msda_attention_cached", "project_values",
-    "BackendInfo", "available_backends", "backend_info", "get_backend",
-    "register_backend",
+    "ensure_applied", "plan_autotune",
+    "BackendInfo", "available_backends", "backend_info",
+    "candidate_backends", "get_backend", "register_backend",
     "MSDAValueCache", "build_value_cache",
     "MSDADecoderConfig", "decoder_apply", "decoder_logical_axes",
     "init_decoder",
@@ -67,8 +72,10 @@ __all__ = [
     "query_permutation", "query_sort_keys", "resolve_query_order",
     "tile_window_stats",
     "DEFAULT_VMEM_BUDGET", "DEFAULT_WINDOW_STAGING_BUDGET", "MSDAPlan",
-    "block_q_for_levels", "lane_layout", "make_plan", "next_pow2",
-    "plan_for", "resolve_table_dtype", "window_staging_budget",
+    "apply_tuned_plan_table", "block_q_for_levels", "lane_layout",
+    "make_plan", "next_pow2", "plan_for", "resolve_table_dtype",
+    "staging_budget_source", "tuned_decode_sweep", "tuned_entry",
+    "tuned_generation", "tuned_stream_params", "window_staging_budget",
     "windowed_eligible",
     "SamplingPoints", "corner_data", "flat_gather_heads",
     "generate_points", "level_meta", "select_points",

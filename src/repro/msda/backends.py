@@ -100,6 +100,22 @@ def available_backends() -> List[str]:
     return sorted(_REGISTRY)
 
 
+def candidate_backends(*, decode_shaped: bool) -> List[str]:
+    """Registered backends eligible for one query geometry — the
+    autotuner's candidate set (and the planner's legal-choice universe):
+    decode-shaped launches exclude ``raster_only`` backends, raster
+    launches exclude ``decode_only`` ones."""
+    out = []
+    for name in available_backends():
+        info = _INFO[name]
+        if decode_shaped and info.raster_only:
+            continue
+        if not decode_shaped and info.decode_only:
+            continue
+        out.append(name)
+    return out
+
+
 # --------------------------------------------------------------------------
 # jnp_gather — pure-XLA flat gather (runs anywhere, autodiff-friendly)
 # --------------------------------------------------------------------------

@@ -45,12 +45,68 @@ DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
 
 #: Conservative default budget for the windowed kernel's co-resident staged
 #: window sum (all L level windows live in VMEM at once, next to the
-#: double-buffered point/output tiles). Override with the
-#: ``REPRO_MSDA_VMEM_BUDGET`` env var (bytes) once a real-TPU Mosaic run
-#: has calibrated what actually fits.
+#: double-buffered point/output tiles). Pin with the
+#: ``REPRO_MSDA_VMEM_BUDGET`` env var (bytes); the measured ceiling comes
+#: from the autotuner (:func:`repro.msda.autotune.plan_autotune`), which
+#: replaces this static guess when a per-platform table entry is applied.
 DEFAULT_WINDOW_STAGING_BUDGET = 4 * 1024 * 1024
 
 _LANE_WIDTH = 128
+
+# --------------------------------------------------------------------------
+# Measured plan table (written by repro.msda.autotune, read everywhere)
+# --------------------------------------------------------------------------
+# plan.py OWNS the applied-calibration state so stream/ and serve/ can
+# consult it through plain accessors without importing autotune (which
+# imports plan — the other direction would be a cycle). autotune.py is the
+# only writer; ``_TUNED_GENERATION`` bumps on every apply/clear so memo
+# keys built on the resolved values stay exact even if two different
+# tables happen to resolve the same budget.
+
+_TUNED: Optional[dict] = None
+_TUNED_GENERATION = 0
+
+
+def apply_tuned_plan_table(entry: Optional[dict]) -> None:
+    """Install (or with ``None`` clear) one platform's measured calibration
+    entry — ``staging_budget_bytes``, the streaming crossover under
+    ``stream``, and the ``decode_sweep_beneficial`` verdict. Every plan
+    resolved afterwards sees the measured values; ``plan_for``'s memo is
+    keyed on the resolved budget + provenance, so no stale plan survives
+    the switch."""
+    global _TUNED, _TUNED_GENERATION
+    _TUNED = dict(entry) if entry is not None else None
+    _TUNED_GENERATION += 1
+
+
+def tuned_entry() -> Optional[dict]:
+    """The currently applied autotune entry (None => static formulas)."""
+    return None if _TUNED is None else dict(_TUNED)
+
+
+def tuned_generation() -> int:
+    return _TUNED_GENERATION
+
+
+def tuned_stream_params() -> Optional[dict]:
+    """The measured streaming crossover ({diff_channel_stride,
+    update_frac}) of the applied entry, or None — consumed by
+    :func:`repro.stream.temporal.resolve_stream_config`."""
+    if _TUNED is None:
+        return None
+    s = _TUNED.get("stream")
+    return dict(s) if isinstance(s, dict) else None
+
+
+def tuned_decode_sweep() -> Optional[bool]:
+    """The measured verdict on whether the ``pallas_decode`` (query-tile x
+    layer) sweep actually spares the HBM->VMEM table refetch on this
+    platform. None => no measurement applied (the static assumption —
+    that it does — stands)."""
+    if _TUNED is None:
+        return None
+    v = _TUNED.get("decode_sweep_beneficial")
+    return None if v is None else bool(v)
 
 
 @functools.lru_cache(maxsize=16)
@@ -77,11 +133,34 @@ def _parse_budget_env(raw: str) -> int:
 
 
 def window_staging_budget() -> int:
-    """The windowed kernel's staged-window budget (env-overridable)."""
+    """The windowed kernel's staged-window budget.
+
+    Precedence: the ``REPRO_MSDA_VMEM_BUDGET`` env pin (an operator
+    override always wins — the documented way to pin static budgets) >
+    the applied autotune entry's measured ceiling > the conservative
+    static default."""
     env = os.environ.get("REPRO_MSDA_VMEM_BUDGET")
     if env:
         return _parse_budget_env(env)
+    if _TUNED is not None:
+        b = _TUNED.get("staging_budget_bytes")
+        if isinstance(b, int) and b > 0:
+            return b
     return DEFAULT_WINDOW_STAGING_BUDGET
+
+
+def staging_budget_source() -> str:
+    """Provenance of :func:`window_staging_budget`'s current answer:
+    ``"measured"`` when an autotune entry supplies it, else ``"static"``
+    (the default constant, or an explicit env pin — a pin is an
+    operator's static decision even when a table is applied)."""
+    if os.environ.get("REPRO_MSDA_VMEM_BUDGET"):
+        return "static"
+    if _TUNED is not None and isinstance(
+            _TUNED.get("staging_budget_bytes"), int) \
+            and _TUNED["staging_budget_bytes"] > 0:
+        return "measured"
+    return "static"
 
 
 def next_pow2(n: int) -> int:
@@ -226,6 +305,13 @@ class MSDAPlan:
     #   (with_measured_tile_window): (unordered max, unordered mean,
     #   ordered max, ordered mean) — the ordered/unordered ratio is the
     #   quantity query ordering improves; surfaced by describe()
+    staging_budget_bytes: int = DEFAULT_WINDOW_STAGING_BUDGET
+    #   the staged-window budget the auto policy's windowed/decode gates
+    #   were evaluated against — resolved ONCE at make_plan (env pin >
+    #   applied autotune entry > static default), never re-read later
+    budget_source: str = "static"   # provenance of staging_budget_bytes:
+    #   "measured" (autotune table) | "static" (default or env pin) —
+    #   describe()'s ``budget=`` tag, and part of plan_for's memo key
 
     @property
     def quantized_table(self) -> bool:
@@ -372,7 +458,9 @@ class MSDAPlan:
                 f"lanes={self.lane_layout}x{self.head_pack}, "
                 f"tdtype={self.table_dtype}, "
                 f"table={self.value_table_bytes/1024:.0f}KB/"
-                f"{self.vmem_budget_bytes/1024:.0f}KB{win}{q}, "
+                f"{self.vmem_budget_bytes/1024:.0f}KB, "
+                f"budget={self.budget_source}"
+                f"({self.staging_budget_bytes/1024:.0f}KB){win}{q}, "
                 f"n_in={self.n_in})")
 
 
@@ -385,7 +473,9 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
               stream_update_rows: Optional[int] = None,
               table_dtype: Optional[str] = None,
               query_order: Optional[str] = None,
-              measured_window_bytes: Optional[int] = None) -> MSDAPlan:
+              measured_window_bytes: Optional[int] = None,
+              staging_budget_bytes: Optional[int] = None,
+              budget_source: Optional[str] = None) -> MSDAPlan:
     """Resolve the static plan.
 
     Backend precedence: explicit ``backend`` arg > ``cfg.backend`` >
@@ -395,9 +485,17 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
     kernel when range-narrowing bounds the window AND the worst-case
     co-resident staged window sum — ``max(window_bytes,
     window_bytes_compact)``, since block 1 of a compact chain stages the
-    dense windows — fits the staging budget (env-overridable
-    ``REPRO_MSDA_VMEM_BUDGET``, default ``DEFAULT_WINDOW_STAGING_BUDGET``);
-    else the jnp gather.
+    dense windows — fits the staging budget; else the jnp gather.
+
+    ``staging_budget_bytes`` / ``budget_source``: the staged-window budget
+    the windowed/decode gates evaluate against, and its provenance
+    (``"measured"`` | ``"static"``). Both default to the process-wide
+    resolution (``REPRO_MSDA_VMEM_BUDGET`` env pin > applied autotune
+    entry > ``DEFAULT_WINDOW_STAGING_BUDGET``) — resolved ONCE here and
+    recorded on the plan, so every gate below and every later consumer
+    sees the same number (no double read racing a mid-process env or
+    table change). ``plan_for`` passes the exact values it keyed its
+    memo on.
 
     ``n_queries``: the query count for decode-shaped workloads (learned
     queries, Nq != N_in). It (a) keeps ``auto`` from planning the windowed
@@ -406,8 +504,11 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
     launches are a different tiling regime than N_in≈20k encoder launches
     — and (c) lets ``auto`` plan the persistent-cache decode kernel
     (``pallas_decode``) when the once-staged compact table plus one
-    layer's operand blocks fit both the VMEM budget and the
-    ``REPRO_MSDA_VMEM_BUDGET`` staging budget.
+    layer's operand blocks fit both the VMEM budget and the staging
+    budget — unless an applied autotune entry measured the (query-tile x
+    layer) sweep as NOT sparing the table refetch on this platform
+    (``tuned_decode_sweep() is False``), in which case ``auto`` falls
+    back to the per-layer fused kernel.
 
     ``n_consumers``: how many attention layers will sample ONE built value
     cache (decoder: n_layers). Accounting only — surfaced by
@@ -440,6 +541,10 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
     from repro.msda import ordering as ordering_lib
 
     level_shapes = tuple((int(h), int(w)) for h, w in level_shapes)
+    if staging_budget_bytes is None:
+        staging_budget_bytes = window_staging_budget()
+    if budget_source is None:
+        budget_source = staging_budget_source()
     _, n_in = fwp_lib.level_starts(level_shapes)
     layout, pack = lane_layout(cfg.n_heads, cfg.head_dim)
     itemsize = jnp.dtype(cfg.dtype).itemsize
@@ -506,14 +611,18 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
 
     if requested == "auto":
         if decode_shaped:
-            # Persistent decode gate (extends the REPRO_MSDA_VMEM_BUDGET
-            # gate): the once-staged compact table + one layer's operand
-            # blocks must co-reside in the staging slab AND fit the
-            # kernel's VMEM budget. When they do, the decode kernel is
-            # strictly better than re-staging the table per layer.
+            # Persistent decode gate (extends the staging-budget gate):
+            # the once-staged compact table + one layer's operand blocks
+            # must co-reside in the staging slab AND fit the kernel's
+            # VMEM budget. When they do, the decode kernel is better than
+            # re-staging the table per layer — the static assumption the
+            # autotuner checks: a measured verdict that the (query-tile x
+            # layer) sweep does NOT spare the refetch on this platform
+            # vetoes it.
             staged_decode = cache_bytes + decode_operand_bytes
             if staged_decode <= min(vmem_budget_bytes,
-                                    window_staging_budget()):
+                                    staging_budget_bytes) \
+                    and tuned_decode_sweep() is not False:
                 requested = "pallas_decode"
             elif table_bytes <= vmem_budget_bytes:
                 requested = "pallas_fused"
@@ -534,7 +643,7 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
                 # the static worst case and the measured figure
                 staged = min(staged, int(measured_window_bytes))
             windowed_fits = staged is not None \
-                and staged <= window_staging_budget()
+                and staged <= staging_budget_bytes
             if table_bytes <= vmem_budget_bytes:
                 requested = "pallas_fused"
             elif windowed_eligible(cfg) and windowed_fits:
@@ -570,7 +679,9 @@ def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,
                     n_queries=n_queries, n_consumers=n_consumers,
                     decode_operand_bytes=decode_operand_bytes,
                     stream_update_rows=stream_update_rows,
-                    table_dtype=tdtype, query_order=qorder)
+                    table_dtype=tdtype, query_order=qorder,
+                    staging_budget_bytes=staging_budget_bytes,
+                    budget_source=budget_source)
 
 
 def plan_for(cfg, level_shapes: Tuple[Tuple[int, int], ...],
@@ -580,25 +691,34 @@ def plan_for(cfg, level_shapes: Tuple[Tuple[int, int], ...],
     """Memoized make_plan for hot call sites (the compat shim and the
     serve engine's per-bucket plans).
 
-    The ``auto`` policy reads the env-overridable staging budget, the
-    table dtype resolves through ``REPRO_MSDA_TABLE_DTYPE``, and the
-    query order resolves through ``REPRO_MSDA_QUERY_ORDER``, so all
-    three are part of the memo key — changing any env var mid-process
-    must not serve a stale plan."""
+    The memo is keyed on RESOLVED values, never raw env strings or table
+    identity: the staging budget (env pin > applied autotune entry >
+    static default) plus its provenance and the tuned-table generation,
+    the table dtype (``REPRO_MSDA_TABLE_DTYPE``), the query order
+    (``REPRO_MSDA_QUERY_ORDER``), and the decode-sweep verdict. Changing
+    any env var — or applying/clearing an autotune table — mid-process
+    must not serve a stale plan; every resolved value is then PASSED
+    INTO make_plan rather than re-read there, so the plan built on a
+    cache miss is exactly the plan the key promised (no double-read race
+    against a concurrent env/table change)."""
     from repro.msda import ordering as ordering_lib
     return _plan_for_cached(cfg, level_shapes, backend, n_queries,
                             n_consumers, window_staging_budget(),
+                            staging_budget_source(), tuned_generation(),
                             resolve_table_dtype(cfg),
                             ordering_lib.resolve_query_order(cfg))
 
 
 @functools.lru_cache(maxsize=256)
 def _plan_for_cached(cfg, level_shapes, backend, n_queries, n_consumers,
-                     _staging_budget: int, table_dtype: str,
+                     staging_budget: int, budget_source: str,
+                     _tuned_gen: int, table_dtype: str,
                      query_order: str) -> MSDAPlan:
     return make_plan(cfg, level_shapes, backend=backend, n_queries=n_queries,
                      n_consumers=n_consumers, table_dtype=table_dtype,
-                     query_order=query_order)
+                     query_order=query_order,
+                     staging_budget_bytes=staging_budget,
+                     budget_source=budget_source)
 
 
 def level_shapes_for_resolution(resolution: int,

@@ -111,5 +111,7 @@ class BucketRouter:
                 "n_in": b.n_in,
                 "backend": b.plan.backend,
                 "table_kb": round(b.plan.value_table_bytes / 1024, 1),
+                "budget_kb": round(b.plan.staging_budget_bytes / 1024, 1),
+                "budget_source": b.plan.budget_source,
             })
         return out

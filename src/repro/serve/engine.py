@@ -78,6 +78,10 @@ class DetrServeEngine:
                  resolutions: Optional[tuple] = None,
                  pipeline_postproc: bool = True, topk: int = 5):
         from repro.core.detector import detector_apply
+        from repro.msda.autotune import ensure_applied
+        ensure_applied()   # load-only: the committed/measured plan table,
+        #   so bucket derivation below sees the tuned budgets (never
+        #   raises, never times anything)
         self.cfg = cfg
         self.params = params
         self.max_batch = int(max_batch)
@@ -203,7 +207,16 @@ class DetrServeEngine:
         return self.finished
 
     def close(self) -> None:
+        """Shut down the post-processing worker (joins its thread);
+        idempotent, and ``submit``/``step`` pipelining into the worker
+        raises once closed."""
         self._post.close()
+
+    def __enter__(self) -> "DetrServeEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
 
 # --------------------------------------------------------------------------
@@ -257,14 +270,17 @@ class StreamingDetrEngine:
                  backend: Optional[str] = None, stream_cfg=None,
                  update_fwp: bool = True):
         from repro.msda import MSDAPlan, backend_info, make_plan  # noqa: F401
-        from repro.stream import (StreamConfig, TemporalCacheManager,
-                                  stream_update_cap)
+        from repro.msda.autotune import ensure_applied
+        from repro.stream import (TemporalCacheManager,
+                                  resolve_stream_config, stream_update_cap)
+        ensure_applied()   # load-only tuned plan table: budgets for the
+        #   plan below, measured stream crossover for the default scfg
         self.attn_cfg = attn_cfg
         self.dec_cfg = decoder_cfg
         self.params = params
         self.max_sessions = int(max_sessions)
         self._update_fwp = bool(update_fwp) and attn_cfg.fwp_mode != "off"
-        scfg = stream_cfg if stream_cfg is not None else StreamConfig()
+        scfg = resolve_stream_config(stream_cfg)
         if backend is not None and backend != "auto" \
                 and backend_info(backend).raster_only:
             backend = "auto"             # same fallback as decoder_plan
@@ -297,15 +313,19 @@ class StreamingDetrEngine:
     def capacity_estimate(self, budget_bytes: Optional[int] = None) -> dict:
         """Sessions-per-chip estimate: how many concurrent streams'
         persistent value tables fit one staging budget (default the
-        REPRO_MSDA_VMEM_BUDGET window budget, 4 MB), per table dtype.
-        Each session's cost is its full table (rows x lanes x itemsize,
-        + the int8 scale row, + the pix2slot indirection when compact) —
-        the thing a slot holds resident between frames. The f32-vs-int8
-        rows are the serving story of the int8 table: ~4x more sessions
-        per chip at the same budget."""
-        from repro.msda import window_staging_budget
+        resolved window budget — env pin, else the autotuner's MEASURED
+        ceiling when a tuned table is applied, else the 4 MB static
+        formula; ``budget_source`` records which), per table dtype. Each
+        session's cost is its full table (rows x lanes x itemsize, + the
+        int8 scale row, + the pix2slot indirection when compact) — the
+        thing a slot holds resident between frames. The f32-vs-int8 rows
+        are the serving story of the int8 table: ~4x more sessions per
+        chip at the same budget."""
+        from repro.msda import staging_budget_source, window_staging_budget
+        source = "caller"
         if budget_bytes is None:
             budget_bytes = window_staging_budget()
+            source = staging_budget_source()
         per_dtype = {}
         for d in ("float32", "int8"):
             p = dataclasses.replace(self.plan, table_dtype=d)
@@ -314,6 +334,7 @@ class StreamingDetrEngine:
             per_dtype[d] = {"bytes_per_session": per,
                             "sessions": budget_bytes // per}
         return {"budget_bytes": budget_bytes,
+                "budget_source": source,
                 "table_dtype": self.plan.table_dtype,
                 "rows_per_session": self.mgr._n_rows,
                 "per_dtype": per_dtype}

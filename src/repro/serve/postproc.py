@@ -70,13 +70,20 @@ class PostprocWorker:
     re-raised from :meth:`drain`/:meth:`submit` on the caller's thread (a
     crashed worker must fail the serving loop, not hang it). ``drain``
     blocks until every submitted item has been processed — the engine's
-    ``run_until_drained`` barrier."""
+    ``run_until_drained`` barrier.
+
+    Lifecycle: :meth:`close` (idempotent; also the context-manager exit)
+    drains the queue's pending items, stops and JOINS the thread — the
+    daemon thread never outlives a closed engine — and every later
+    ``submit`` raises immediately instead of enqueueing into a dead
+    queue."""
 
     def __init__(self, process: Callable, *, pipelined: bool = True,
                  name: str = "serve-postproc"):
         self._process = process
         self.pipelined = bool(pipelined)
         self._exc: Optional[BaseException] = None
+        self._stopped = False
         self._q: queue.Queue = queue.Queue()
         self._thread: Optional[threading.Thread] = None
         if self.pipelined:
@@ -85,6 +92,10 @@ class PostprocWorker:
             self._thread.start()
 
     def submit(self, item) -> None:
+        if self._stopped:
+            raise RuntimeError(
+                "PostprocWorker is closed; submit after close() would "
+                "enqueue into a dead queue")
         if self._exc is not None:
             raise self._exc
         if self.pipelined:
@@ -119,7 +130,18 @@ class PostprocWorker:
             raise self._exc
 
     def close(self) -> None:
+        """Stop accepting work and join the thread (idempotent). Items
+        already submitted are still processed — the queue is FIFO and the
+        stop sentinel goes in last — so close() is also a drain barrier
+        for the pipelined path."""
+        self._stopped = True
         if self._thread is not None and self._thread.is_alive():
             self._q.put(_STOP)
             self._thread.join(timeout=5.0)
-            self._thread = None
+        self._thread = None
+
+    def __enter__(self) -> "PostprocWorker":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

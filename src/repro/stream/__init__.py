@@ -16,11 +16,12 @@ video sessions onto the manager's batch slots; the driver is
 """
 from repro.stream.synthetic import drifting_scene
 from repro.stream.temporal import (StreamConfig, TemporalCacheManager,
-                                   plan_slot_count, stream_update_cap)
+                                   plan_slot_count, resolve_stream_config,
+                                   stream_update_cap)
 from repro.stream.tiles import TileGeometry, changed_tiles, tile_geometry
 
 __all__ = [
     "StreamConfig", "TemporalCacheManager", "plan_slot_count",
-    "stream_update_cap",
+    "resolve_stream_config", "stream_update_cap",
     "TileGeometry", "changed_tiles", "tile_geometry", "drifting_scene",
 ]

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fwp as fwp_lib
+from repro.msda import plan as plan_lib
 from repro.msda.cache import (MSDAValueCache, build_value_cache,
                               cache_act_scale, update_value_cache_rows)
 from repro.msda.pipeline import MSDAPipelineState
@@ -77,6 +78,24 @@ class StreamConfig:
     #   re-projection itself always reads the FULL current features, so a
     #   probed diff only delays a sub-probe change, never corrupts rows
     #   it does update
+
+
+def resolve_stream_config(scfg: Optional[StreamConfig] = None) -> StreamConfig:
+    """The effective streaming knobs. An explicit config always wins,
+    untouched. With no config, the defaults — overlaid with the
+    autotuner's measured diff-vs-reprojection crossover
+    (``diff_channel_stride`` / ``update_frac``) whenever a tuned plan
+    table is applied (see :mod:`repro.msda.autotune`): "no config" means
+    "measured best", not "hardcoded guess"."""
+    if scfg is not None:
+        return scfg
+    tuned = plan_lib.tuned_stream_params()
+    if not tuned:
+        return StreamConfig()
+    return dataclasses.replace(
+        StreamConfig(),
+        diff_channel_stride=int(tuned["diff_channel_stride"]),
+        update_frac=float(tuned["update_frac"]))
 
 
 def plan_slot_count(plan) -> int:
@@ -107,7 +126,8 @@ class TemporalCacheManager:
     over arrays, so nothing retraces frame to frame."""
 
     def __init__(self, plan, value_params: dict,
-                 scfg: StreamConfig = StreamConfig(), *, batch: int = 1):
+                 scfg: Optional[StreamConfig] = None, *, batch: int = 1):
+        scfg = resolve_stream_config(scfg)
         if scfg.diff_channel_stride < 1:
             raise ValueError("diff_channel_stride must be >= 1")
         self.params = value_params

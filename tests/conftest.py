@@ -37,3 +37,23 @@ except ImportError:
             return lambda *a, **k: None
 
     st = _StubStrategies()
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _isolate_tuned_plan_table():
+    """Serve engines call ``autotune.ensure_applied()`` at construction,
+    which applies the committed tuned plan table process-globally — a
+    measured staging budget would then leak into every later test's
+    ``backend="auto"`` planning. Restore the untuned state (and the
+    once-per-process ensure guard) around every test so only tests that
+    explicitly opt in see tuned plans."""
+    from repro.msda import autotune, plan as plan_lib
+    prev_entry = plan_lib.tuned_entry()
+    prev_gen = plan_lib.tuned_generation()
+    prev_tried = autotune._ENSURE_TRIED
+    yield
+    if plan_lib.tuned_generation() != prev_gen:
+        plan_lib.apply_tuned_plan_table(prev_entry)
+    autotune._ENSURE_TRIED = prev_tried

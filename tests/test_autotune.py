@@ -1,0 +1,278 @@
+"""Measured-plan autotuner: persistence round-trip, corrupt-table
+fallback, the committed-table CI path, and the plan-memo staleness
+regressions (env flips and tuned-table apply/clear mid-process) the
+measured table would otherwise trip over."""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import msda
+from repro.msda import autotune
+from repro.msda import plan as plan_lib
+
+CFG = autotune._default_cfg()
+LEVELS = autotune.CALIB_LEVELS
+
+
+def _entry(budget=12 * 2**20, stride=2, frac=0.5, beneficial=True):
+    """A structurally valid platform entry with distinctive values."""
+    return {"provenance": "measured", "platform": autotune.platform_key(),
+            "staging_budget_bytes": int(budget),
+            "decode_sweep_beneficial": bool(beneficial),
+            "decode_persistent_speedup": 1.0,
+            "stream": {"diff_channel_stride": int(stride),
+                       "update_frac": float(frac)}}
+
+
+# --------------------------------------------------------------------------
+# Persistence round-trip
+# --------------------------------------------------------------------------
+
+def test_round_trip_identical_plan(tmp_path):
+    """persist -> reload -> the applied entry and the resolved plan are
+    identical to the in-process originals."""
+    path = str(tmp_path / "autotune.json")
+    entry = _entry(budget=12 * 2**20)
+    autotune.save_entry(entry, path)
+
+    loaded = autotune.plan_autotune(measure=False, cache_path=path)
+    assert loaded == entry
+    plan_a = plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6)
+    assert plan_a.staging_budget_bytes == 12 * 2**20
+    assert plan_a.budget_source == "measured"
+    assert "budget=measured" in plan_a.describe()
+
+    # clear, reload from disk: bit-identical plan resolution
+    plan_lib.apply_tuned_plan_table(None)
+    reloaded = autotune.plan_autotune(measure=False, cache_path=path)
+    assert reloaded == entry
+    plan_b = plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6)
+    assert plan_b == plan_a
+
+
+def test_save_entry_merges_platforms(tmp_path):
+    """Writing one platform's entry never clobbers another's row."""
+    path = str(tmp_path / "autotune.json")
+    other = dict(_entry(budget=2**20), platform="tpu")
+    autotune.save_entry(other, path, platform="tpu")
+    autotune.save_entry(_entry(budget=12 * 2**20), path)
+    table = autotune.load_table(path)
+    assert set(table["platforms"]) == {"tpu", autotune.platform_key()}
+    assert table["platforms"]["tpu"]["staging_budget_bytes"] == 2**20
+
+
+# --------------------------------------------------------------------------
+# Corrupted / partial tables fall back to the static formulas
+# --------------------------------------------------------------------------
+
+def test_corrupt_table_warns_and_falls_back(tmp_path):
+    path = tmp_path / "autotune.json"
+    path.write_text("{not json at all")
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        got = autotune.plan_autotune(measure=False, cache_path=str(path),
+                                     warn_missing=False)
+    assert got is None
+    plan = plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6)
+    assert plan.budget_source == "static"
+    assert plan.staging_budget_bytes == plan_lib.DEFAULT_WINDOW_STAGING_BUDGET
+
+
+def test_wrong_schema_warns_and_falls_back(tmp_path):
+    path = tmp_path / "autotune.json"
+    path.write_text(json.dumps({"schema": 999, "platforms": {}}))
+    with pytest.warns(RuntimeWarning, match="schema"):
+        assert autotune.load_table(str(path)) is None
+
+
+def test_partial_entry_warns_and_falls_back(tmp_path):
+    """A truncated/hand-mangled entry (missing the stream block) fails
+    closed to the static formulas with a warning — never a crash."""
+    path = tmp_path / "autotune.json"
+    bad = _entry()
+    del bad["stream"]
+    path.write_text(json.dumps(
+        {"schema": autotune.SCHEMA_VERSION,
+         "platforms": {autotune.platform_key(): bad}}))
+    with pytest.warns(RuntimeWarning, match="partial/invalid"):
+        got = autotune.plan_autotune(measure=False, cache_path=str(path),
+                                     warn_missing=False)
+    assert got is None
+    assert plan_lib.tuned_entry() is None
+
+
+def test_missing_table_is_silent():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert autotune.load_table("/nonexistent/autotune.json") is None
+
+
+def test_valid_entry_rejects_partials():
+    assert autotune.valid_entry(_entry())
+    for mutate in (
+        lambda e: e.pop("staging_budget_bytes"),
+        lambda e: e.update(staging_budget_bytes=0),
+        lambda e: e.pop("decode_sweep_beneficial"),
+        lambda e: e.pop("stream"),
+        lambda e: e["stream"].update(diff_channel_stride=0),
+        lambda e: e["stream"].update(update_frac=0.0),
+        lambda e: e["stream"].update(update_frac=1.5),
+    ):
+        e = _entry()
+        mutate(e)
+        assert not autotune.valid_entry(e), e
+
+
+# --------------------------------------------------------------------------
+# Committed-table CI path (no timing runs)
+# --------------------------------------------------------------------------
+
+def test_committed_table_no_measure():
+    """The repo's committed results/autotune.json serves this platform
+    without any timing: measured provenance end-to-end."""
+    entry = autotune.plan_autotune(measure=False)
+    assert entry is not None, (
+        "no committed autotune entry for platform "
+        f"{autotune.platform_key()!r} in results/autotune.json")
+    plan = plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6)
+    assert plan.budget_source == "measured"
+    assert "budget=measured" in plan.describe()
+
+
+def test_committed_table_check_cli():
+    """The CI leg verbatim: --no-measure --check exits 0 (provenance +
+    tuned-vs-static bit-identity)."""
+    assert autotune.main(["--no-measure", "--check"]) == 0
+
+
+def test_ensure_applied_is_load_only_and_once():
+    autotune._ENSURE_TRIED = False
+    got = autotune.ensure_applied()
+    assert got == plan_lib.tuned_entry()
+    # second call is a no-op returning the applied entry (or None)
+    assert autotune.ensure_applied() == got
+
+
+def test_ensure_applied_never_raises(tmp_path):
+    autotune._ENSURE_TRIED = False
+    plan_lib.apply_tuned_plan_table(None)
+    bad = tmp_path / "autotune.json"
+    bad.write_text("garbage{")
+    assert autotune.ensure_applied(cache_path=str(bad)) is None
+    assert plan_lib.tuned_entry() is None
+
+
+# --------------------------------------------------------------------------
+# Satellite regression: plan_for memo staleness on mid-process changes
+# --------------------------------------------------------------------------
+
+def test_plan_for_env_budget_flip(monkeypatch):
+    plan0 = plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6)
+    assert plan0.staging_budget_bytes == \
+        plan_lib.DEFAULT_WINDOW_STAGING_BUDGET
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", "1024")
+    plan1 = plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6)
+    assert plan1.staging_budget_bytes == 1024
+    assert plan1 != plan0
+    monkeypatch.delenv("REPRO_MSDA_VMEM_BUDGET")
+    assert plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6) == plan0
+
+
+def test_plan_for_env_table_dtype_flip(monkeypatch):
+    plan0 = plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6)
+    assert plan0.table_dtype == "float32"
+    monkeypatch.setenv("REPRO_MSDA_TABLE_DTYPE", "int8")
+    plan1 = plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6)
+    assert plan1.table_dtype == "int8"
+    assert plan1 != plan0
+
+
+def test_plan_for_env_query_order_flip(monkeypatch):
+    plan0 = plan_lib.plan_for(CFG, LEVELS, None)
+    assert plan0.query_order == "none"
+    monkeypatch.setenv("REPRO_MSDA_QUERY_ORDER", "zorder")
+    plan1 = plan_lib.plan_for(CFG, LEVELS, None)
+    assert plan1.query_order == "zorder"
+    assert plan1 != plan0
+
+
+def test_plan_for_tuned_table_flip():
+    """Applying/clearing a tuned table mid-process must never serve a
+    stale memoized plan — the measured-table analogue of the env bug."""
+    plan0 = plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6)
+    assert plan0.budget_source == "static"
+    plan_lib.apply_tuned_plan_table(_entry(budget=24 * 2**20))
+    plan1 = plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6)
+    assert plan1.staging_budget_bytes == 24 * 2**20
+    assert plan1.budget_source == "measured"
+    plan_lib.apply_tuned_plan_table(None)
+    assert plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6) == plan0
+
+
+def test_env_pin_beats_tuned_table(monkeypatch):
+    """REPRO_MSDA_VMEM_BUDGET is the documented operator override: it
+    wins over an applied measured entry and reports static provenance."""
+    plan_lib.apply_tuned_plan_table(_entry(budget=24 * 2**20))
+    monkeypatch.setenv("REPRO_MSDA_VMEM_BUDGET", str(2 * 2**20))
+    plan = plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6)
+    assert plan.staging_budget_bytes == 2 * 2**20
+    assert plan.budget_source == "static"
+
+
+# --------------------------------------------------------------------------
+# Tuned knobs reach the streaming config
+# --------------------------------------------------------------------------
+
+def test_resolve_stream_config_consumes_tuned_table():
+    from repro.stream import StreamConfig, resolve_stream_config
+    base = resolve_stream_config(None)
+    assert (base.diff_channel_stride, base.update_frac) == (1, 0.25)
+    plan_lib.apply_tuned_plan_table(_entry(stride=2, frac=0.5))
+    tuned = resolve_stream_config(None)
+    assert (tuned.diff_channel_stride, tuned.update_frac) == (2, 0.5)
+    # an explicit config always wins untouched
+    mine = StreamConfig(diff_channel_stride=4)
+    assert resolve_stream_config(mine) is mine
+    plan_lib.apply_tuned_plan_table(None)
+    again = resolve_stream_config(None)
+    assert (again.diff_channel_stride, again.update_frac) == (1, 0.25)
+
+
+def test_decode_sweep_veto_gates_auto():
+    """A measured decode-sweep loss flips the auto policy's decode gate
+    to per-layer restaging; numerics are untouched (backend choice only)."""
+    plan_yes = plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6)
+    assert plan_yes.backend == "pallas_decode"
+    plan_lib.apply_tuned_plan_table(_entry(beneficial=False))
+    plan_no = plan_lib.plan_for(CFG, LEVELS, "auto", 64, 6)
+    assert plan_no.backend != "pallas_decode"
+
+
+# --------------------------------------------------------------------------
+# Tuned-vs-static bit-identity (tuning changes choice, never numerics)
+# --------------------------------------------------------------------------
+
+def test_tuned_vs_static_bit_identity():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import nn
+    from repro.core.msdeform_attn import init_msdeform_attn
+
+    plan_lib.apply_tuned_plan_table(_entry(budget=24 * 2**20))
+    tuned_plan = msda.make_plan(CFG, LEVELS, backend="auto")
+    key = jax.random.PRNGKey(5)
+    params = init_msdeform_attn(key, CFG)
+    n_in = tuned_plan.n_in
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, n_in, CFG.d_model))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (1, n_in, CFG.d_model))
+    refs = jnp.broadcast_to(
+        nn.reference_points_for_levels(LEVELS)[None], (1, n_in, 2))
+    out_tuned, _ = msda.msda_attention(params, tuned_plan, q, refs, x)
+
+    plan_lib.apply_tuned_plan_table(None)
+    static_plan = msda.make_plan(CFG, LEVELS, backend=tuned_plan.backend)
+    assert static_plan.budget_source == "static"
+    out_static, _ = msda.msda_attention(params, static_plan, q, refs, x)
+    np.testing.assert_array_equal(np.asarray(out_tuned),
+                                  np.asarray(out_static))

@@ -1,0 +1,55 @@
+"""benchmarks/check_regression.py — shared-row machine-speed scale
+factor, including the empty-intersection guard (the old path could
+divide by nothing or silently scale by 1.0)."""
+import pytest
+
+from benchmarks.check_regression import (EmptyIntersectionError,
+                                         shared_row_scale)
+
+
+def _rows(**us):
+    return {name: {"us_per_call": v} for name, v in us.items()}
+
+
+def test_scale_is_median_of_shared_ratios():
+    base = _rows(msda_a=100.0, msda_b=200.0, msda_c=300.0)
+    cur = _rows(msda_a=50.0, msda_b=100.0, msda_c=600.0)
+    # ratios: 2.0, 2.0, 0.5 -> median 2.0
+    assert shared_row_scale(base, cur) == pytest.approx(2.0)
+
+
+def test_scale_even_count_averages_middle_pair():
+    base = _rows(msda_a=100.0, msda_b=400.0)
+    cur = _rows(msda_a=100.0, msda_b=100.0)
+    assert shared_row_scale(base, cur) == pytest.approx(2.5)
+
+
+def test_scale_ignores_non_prefixed_and_extra_rows():
+    base = _rows(msda_a=100.0, other=1.0, msda_only_base=5.0)
+    cur = _rows(msda_a=50.0, other=99.0, msda_only_cur=7.0)
+    assert shared_row_scale(base, cur) == pytest.approx(2.0)
+
+
+def test_empty_intersection_fails_loudly():
+    base = _rows(msda_old=100.0, unrelated=1.0)
+    cur = _rows(msda_new=50.0)
+    with pytest.raises(EmptyIntersectionError) as ei:
+        shared_row_scale(base, cur)
+    msg = str(ei.value)
+    # both row sets are printed so the mismatch is diagnosable from logs
+    assert "msda_old" in msg and "msda_new" in msg
+    assert ei.value.base_rows == ["msda_old"]
+    assert ei.value.cur_rows == ["msda_new"]
+
+
+def test_no_gated_rows_at_all_fails_loudly():
+    with pytest.raises(EmptyIntersectionError, match="no shared"):
+        shared_row_scale({}, {})
+
+
+def test_zero_time_rows_do_not_divide_by_zero():
+    base = _rows(msda_a=100.0, msda_b=200.0)
+    cur = _rows(msda_a=0.0, msda_b=100.0)
+    assert shared_row_scale(base, cur) == pytest.approx(2.0)
+    with pytest.raises(EmptyIntersectionError):
+        shared_row_scale(_rows(msda_a=100.0), _rows(msda_a=0.0))

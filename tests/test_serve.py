@@ -270,3 +270,122 @@ def test_starvation_error_is_runtime_error_with_report():
     err = StarvationError({"queued": 3})
     assert isinstance(err, RuntimeError)
     assert err.report == {"queued": 3} and "queued=3" in str(err)
+
+
+# --------------------------------------------------------------------------
+# worker / engine lifecycle (close joins the thread, submit-after-close)
+# --------------------------------------------------------------------------
+
+def test_postproc_worker_close_joins_and_rejects_submit():
+    seen = []
+    w = PostprocWorker(seen.append, pipelined=True)
+    for i in range(3):
+        w.submit(i)
+    w.close()
+    # FIFO queue + trailing stop sentinel: close() drained the backlog
+    assert seen == [0, 1, 2]
+    assert w._thread is None
+    with pytest.raises(RuntimeError, match="closed"):
+        w.submit(3)
+    assert seen == [0, 1, 2]
+    w.close()                                     # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        w.submit(4)
+
+
+def test_postproc_worker_sync_mode_close_rejects_submit():
+    seen = []
+    w = PostprocWorker(seen.append, pipelined=False)
+    w.submit(0)
+    w.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        w.submit(1)
+    assert seen == [0]
+
+
+def test_postproc_worker_context_manager():
+    seen = []
+    with PostprocWorker(seen.append, pipelined=True) as w:
+        w.submit("a")
+    assert seen == ["a"] and w._thread is None
+    with pytest.raises(RuntimeError, match="closed"):
+        w.submit("b")
+
+
+def test_postproc_worker_submit_after_crash_raises():
+    def boom(item):
+        raise ValueError("decode failed")
+    w = PostprocWorker(boom, pipelined=True)
+    w.submit(("x",))
+    with pytest.raises(ValueError, match="decode failed"):
+        w.drain()
+    # the crash surfaces on submit too — never enqueue after a dead loop
+    with pytest.raises(ValueError, match="decode failed"):
+        w.submit(("y",))
+    w.close()
+
+
+def test_engine_close_joins_worker_thread():
+    cfg = _tiny_cfg()
+    engine = DetrServeEngine(cfg, _params(cfg), max_batch=2,
+                             resolutions=(32,))
+    thread = engine._post._thread
+    assert thread is not None and thread.is_alive()
+    engine.submit(DetrRequest(rid=0, image=_images(1, 32)[0]))
+    engine.step()
+    engine.close()
+    assert not thread.is_alive()                 # daemon joined, not leaked
+    assert engine._post._thread is None
+    assert [r.rid for r in engine.finished] == [0]   # close drained postproc
+    with pytest.raises(RuntimeError, match="closed"):
+        engine._post.submit(("dead",))
+    engine.close()                               # idempotent
+
+
+def test_engine_context_manager_closes_worker():
+    cfg = _tiny_cfg()
+    with DetrServeEngine(cfg, _params(cfg), max_batch=2,
+                         resolutions=(32,)) as engine:
+        engine.submit(DetrRequest(rid=0, image=_images(1, 32)[0]))
+        done = engine.run_until_drained()
+        assert [r.rid for r in done] == [0]
+    assert engine._post._thread is None
+
+
+# --------------------------------------------------------------------------
+# tuned-budget provenance on the serving surfaces
+# --------------------------------------------------------------------------
+
+def test_bucket_table_reports_budget_provenance():
+    cfg = _tiny_cfg()
+    router = BucketRouter(derive_buckets(cfg, (32,)))
+    (row,) = router.table()
+    assert row["budget_kb"] > 0
+    assert row["budget_source"] in ("static", "measured")
+
+
+def test_streaming_capacity_estimate_reports_budget_source():
+    from repro.msda import plan as plan_lib
+    from repro.serve.engine import StreamingDetrEngine
+    levels = ((8, 10), (4, 5), (2, 3))
+    attn = MSDeformAttnConfig(d_model=32, n_heads=4, fwp_mode="compact",
+                              fwp_k=1.0, fwp_capacity=0.6,
+                              range_narrow=(4.0, 3.0, 2.0))
+    dec = msda.MSDADecoderConfig(n_layers=2, n_queries=8, d_ffn=32)
+    key = jax.random.PRNGKey(3)
+    d = attn.d_model
+    params = {
+        "decoder": msda.init_decoder(key, dec, attn),
+        "cls_head": {"w": jnp.zeros((d, 3)), "b": jnp.zeros((3,))},
+        "box_head": {"w": jnp.zeros((d, 4)), "b": jnp.zeros((4,))},
+    }
+    engine = StreamingDetrEngine(attn, dec, params, levels, max_sessions=1,
+                                 update_fwp=False)
+    est = engine.capacity_estimate()
+    # the engine's ensure_applied() loaded the committed table, so the
+    # default budget is the measured one (static only without a table)
+    assert est["budget_source"] == ("measured" if plan_lib.tuned_entry()
+                                    else "static")
+    assert est["budget_bytes"] == plan_lib.window_staging_budget()
+    assert engine.capacity_estimate(budget_bytes=1 << 20)["budget_source"] \
+        == "caller"
