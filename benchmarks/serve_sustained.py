@@ -116,7 +116,46 @@ def _open_loop(engine, images, rps: float) -> dict:
     }
 
 
-def report(dry: bool = False, log=print) -> dict:
+def _obs_overhead(engine_us: float, n: int = 2000) -> dict:
+    """Deterministic per-request instrumentation cost.
+
+    A wall-clock A/B of two short engine runs is dominated by device and
+    scheduler noise, so the tracked figure is the measured cost of the
+    per-request instrumentation calls themselves (the counter bumps,
+    gauge sets, histogram observes, and span start/ends a request incurs
+    on the serve path), expressed as a fraction of the measured
+    us/request."""
+    from repro.obs import Observability
+    obs = Observability.create()
+    c = obs.metrics.counter("bench_requests_total", "bench")
+    g = obs.metrics.gauge("bench_queue_depth", "bench")
+    h = obs.metrics.histogram("bench_latency_seconds", "bench")
+    t0 = time.perf_counter()
+    for i in range(n):
+        c.inc(bucket="32", outcome="completed")
+        g.set(1.0, bucket="32")
+        for name in ("queue", "device", "postproc"):
+            obs.tracer.end(obs.tracer.start(name, rid=i))
+        h.observe(1e-3, bucket="32")
+        h.observe(1e-3, span="device")
+    per_req_us = (time.perf_counter() - t0) / n * 1e6
+    obs.close()
+    return {
+        "instrumentation_us_per_request": round(per_req_us, 2),
+        "fraction_of_request": round(per_req_us / engine_us, 4),
+    }
+
+
+def _write_prom(engine, path) -> None:
+    """Dump the engine's registry in Prometheus text format (CI smoke)."""
+    if path:
+        from repro.obs import prometheus_text
+        with open(path, "w") as f:
+            f.write(prometheus_text(engine.obs.metrics))
+
+
+def report(dry: bool = False, log=print,
+           prom_path: str | None = None) -> dict:
     cfg, params = _setup()
     sustained, baseline = _engines(cfg, params)
     n = 2 * sum(MIX) if dry else N_REQUESTS
@@ -139,7 +178,9 @@ def report(dry: bool = False, log=print) -> dict:
         log(f"[serve] dry run ok: {n} mixed requests through "
             f"{len(sustained.buckets)} buckets, "
             f"{sustained.compile_count} compiles")
+        _write_prom(sustained, prom_path)
         sustained.close()
+        baseline.close()
         return out
     sus_us = _closed_loop_us(sustained, images)
     base_us = _closed_loop_us(baseline, images)
@@ -159,12 +200,41 @@ def report(dry: bool = False, log=print) -> dict:
     probe = _open_loop(sustained, images, 0.9 * rps_closed)
     out["open_loop"] = _open_loop(sustained, images, 0.9 * probe["rps"])
     out["open_loop"]["capacity_rps"] = probe["rps"]
+    # per-span latency breakdown over everything the sustained engine
+    # served (closed-loop reps + both open-loop passes)
+    out["spans"] = sustained.obs.tracer.span_stats()
+    # instrumented-vs-uninstrumented: wall delta of a closed-loop drain
+    # on an engine with the Null obs stack, plus the deterministic
+    # per-request instrumentation call cost (the gated <1% figure)
+    from repro.obs import Observability
+    from repro.serve.engine import DetrServeEngine
+    dark = DetrServeEngine(cfg, params, max_batch=MAX_BATCH,
+                           backend="jnp_gather", resolutions=RESOLUTIONS,
+                           pipeline_postproc=True,
+                           obs=Observability.disabled())
+    dark_us = _closed_loop_us(dark, images)
+    dark.close()
+    out["observability"] = dict(_obs_overhead(sus_us),
+                                uninstrumented_us_per_request=round(dark_us, 1),
+                                wall_delta_pct=round(
+                                    (sus_us - dark_us) / dark_us * 100, 2))
+    span_line = ", ".join(
+        f"{name} P50 {st['p50_ms']}ms/P99 {st['p99_ms']}ms"
+        for name, st in sorted(out["spans"].items())
+        if name in ("queue", "device", "postproc", "callback"))
+    log(f"[serve] spans: {span_line}")
+    log(f"[serve] obs overhead: "
+        f"{out['observability']['instrumentation_us_per_request']} us/req "
+        f"({100 * out['observability']['fraction_of_request']:.2f}% of "
+        f"request)")
     log(f"[serve] sustained {sus_us:.0f} us/req vs single-bucket sync "
         f"{base_us:.0f} us/req ({base_us / sus_us:.2f}x); open loop "
         f"{out['open_loop']['rps_per_chip']} req/s/chip, "
         f"P50 {out['open_loop']['p50_ms']} ms / "
         f"P99 {out['open_loop']['p99_ms']} ms")
+    _write_prom(sustained, prom_path)
     sustained.close()
+    baseline.close()
     return out
 
 
@@ -182,6 +252,7 @@ def micro_rows(log=print) -> list:
          "postproc, us/request"),
     ]
     sustained.close()
+    baseline.close()
     for name, t, d in rows:
         log(f"[serve] {name}: {t:.1f} us ({d})")
     return rows

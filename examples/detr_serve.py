@@ -50,7 +50,7 @@ def serve_encoder_head(args) -> None:
     jax.block_until_ready(fwd(params, img))          # warm compile
 
     total = 0
-    t0 = time.time()
+    t0 = time.perf_counter()
     aps = []
     for i in range(args.batches):
         img, _, _, gt = synth_detection_batch(
@@ -64,7 +64,7 @@ def serve_encoder_head(args) -> None:
         fwp = [float(b["fwp_keep_frac"]) for b in aux["blocks"][:-1]]
         print(f"batch {i}: PAP kept {np.mean(keep):.1%} of sampling points, "
               f"FWP kept {np.mean(fwp):.1%} of pixels, AP={aps[-1]:.3f}")
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"\n[serve] {total} images in {dt:.2f}s = {total/dt:.2f} img/s "
           f"(CPU; TPU projection comes from the dry-run roofline), "
           f"mean AP {np.mean(aps):.3f}")
@@ -93,9 +93,9 @@ def serve_decoder_head(args) -> None:
             engine.submit(DetrRequest(rid=rid, image=np.asarray(img[b])))
             rid += 1
     engine.step()                                    # warm compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     done = engine.run_until_drained()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
 
     # per-batch AP from the completed requests (submit order == rid order;
     # eval_detection_ap softmaxes its logits input, so feed log(probs))
@@ -122,7 +122,7 @@ def serve_sustained(args) -> None:
     import json
 
     from benchmarks.serve_sustained import report
-    r = report(dry=args.dry_run)
+    r = report(dry=args.dry_run, prom_path=args.obs_prom)
     print("[serve/sustained] buckets: "
           + ", ".join(f"{b['resolution']}px ({b['table_kb']}KB table)"
                       for b in r["buckets"]))
@@ -158,6 +158,11 @@ def main():
     ap.add_argument("--dry-run", action="store_true",
                     help="with --sustained: route a small mixed load, "
                          "check zero recompiles, skip timing (CI smoke)")
+    ap.add_argument("--obs-prom", default=None, metavar="PATH",
+                    help="with --sustained: write the engine's metrics "
+                         "registry in Prometheus text format to PATH "
+                         "(JSONL trace export is driven by the "
+                         "REPRO_OBS_JSONL env var)")
     args = ap.parse_args()
     if args.sustained:
         serve_sustained(args)

@@ -101,7 +101,7 @@ def main():
     churn_at = args.frames // 2 \
         if args.churn and args.sessions > 1 and args.frames > 2 else None
     left = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for t in range(1, args.frames):
         if t == churn_at:
             old = sids.pop()
@@ -125,7 +125,7 @@ def main():
               + (f" [{st['reason']}]" if st["reason"] else "")
               + (f" [admitted slots {st['admitted_slots']}]"
                  if st.get("admitted_slots") else ""))
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
 
     r = engine.report()
     served = (args.frames - 1) * args.sessions

@@ -33,7 +33,7 @@ def main():
         engine.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
                                                          plen),
                               max_new_tokens=int(rng.integers(8, 24))))
-    t0 = time.time()
+    t0 = time.perf_counter()
     steps = 0
     while engine.queue or engine.active.any() or steps == 0:
         n_active = engine.step()
@@ -43,7 +43,7 @@ def main():
                   f"{len(engine.queue)} queued, {len(engine.finished)} done")
         if steps > 500:
             break
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     toks = sum(len(r.output) for r in engine.finished)
     print(f"\n[lm-serve] {len(engine.finished)}/{args.requests} requests, "
           f"{toks} tokens, {steps} engine steps, {toks/dt:.1f} tok/s")

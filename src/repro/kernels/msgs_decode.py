@@ -125,6 +125,13 @@ def stage_decode_table(v: jnp.ndarray,
     layout and staged next to the codes (one f32 row per group). Call
     through the module attribute (``msgs_decode.stage_decode_table``) so
     the staging-spy tests can count stagings per memory."""
+    # trace-time staging event (process-wide registry): counts persistent
+    # decode staging layouts created, not per-execution traffic
+    from repro.obs.metrics import default_registry
+    default_registry().counter(
+        "msda_decode_stage_traces_total",
+        "stage_decode_table tracings (persistent decode stagings)"
+    ).inc(head_pack=str(head_pack))
     b, n_rows, h, dh = v.shape
     g = head_pack if (head_pack > 1 and h % head_pack == 0) else 1
     vp = v.reshape(b, n_rows, h // g, g, dh)

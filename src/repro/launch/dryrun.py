@@ -116,22 +116,22 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
 def _run_cell_inner(arch, cfg, shape, mesh, tag, path, verbose) -> dict:
     import dataclasses as dc
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     cell_real = build_cell(arch, cfg, shape, mesh)
     compiled_real = _compile(cell_real, mesh)
-    t_real = time.time() - t0
+    t_real = time.perf_counter() - t0
     result = summarize(compiled_real, cell_real.meta)
     result["raw_cost_uncorrected"] = dict(result["cost"])
 
     # --- two-point scan-cost correction ---------------------------------
-    t0 = time.time()
+    t0 = time.perf_counter()
     cfg1 = dc.replace(cfg, attn_impl="dense", grad_accum=1, scan_unroll=1)
     cfg2 = dc.replace(cfg, attn_impl="dense", grad_accum=1, scan_unroll=2)
     cell1 = build_cell(arch, cfg1, shape, mesh)
     cell2 = build_cell(arch, cfg2, shape, mesh)
     s1 = summarize(_compile(cell1, mesh), cell1.meta)
     s2 = summarize(_compile(cell2, mesh), cell2.meta)
-    t_cost = time.time() - t0
+    t_cost = time.perf_counter() - t0
 
     nl = cfg.n_layers
     corr = {}
@@ -183,13 +183,13 @@ def run_detr_cell(name: str, shape_kind: str, mesh_kind: str, out_dir: str,
         cell = build_banded_detr_cell(name, mesh)
     else:
         cell = build_detr_cell(name, shape_kind, mesh)
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                           out_shardings=cell.out_shardings).lower(*cell.in_sds)
         compiled = lowered.compile()
     result = summarize(compiled, cell.meta)
-    result["timings"] = {"total_s": time.time() - t0}
+    result["timings"] = {"total_s": time.perf_counter() - t0}
     rf = result["roofline"]
     print(f"[dryrun] {tag}: OK dom={rf['dominant']} "
           f"coll={rf['t_collective_s']*1e3:.2f}ms mem={rf['t_memory_s']*1e3:.2f}ms")

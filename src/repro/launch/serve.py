@@ -36,14 +36,14 @@ def main() -> None:
                          ServeConfig(max_batch=args.max_batch,
                                      cache_len=args.cache_len))
     rng = np.random.default_rng(0)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(args.requests):
         plen = int(rng.integers(4, 24))
         engine.submit(Request(rid=i,
                               prompt=rng.integers(0, cfg.vocab_size, plen),
                               max_new_tokens=args.max_new))
     done = engine.run_until_drained()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     total_toks = sum(len(r.output) for r in done)
     print(f"[serve] {len(done)} requests, {total_toks} tokens in {dt:.2f}s "
           f"({total_toks/dt:.1f} tok/s with continuous batching)")

@@ -108,6 +108,15 @@ def build_value_cache(params: dict, plan, x_flat: jnp.ndarray,
     Called ONCE per memory; every sampler (encoder block body, all decoder
     layers) then consumes the result through
     :func:`repro.msda.attention.msda_attention_cached`."""
+    # trace-time staging event on the process-wide registry: inside jit
+    # this body runs once per compilation, so a flat counter after warmup
+    # pins "no path is rebuilding/retracing the cache" globally —
+    # complementing each engine's per-registry msda_compiles_total spy
+    from repro.obs.metrics import default_registry
+    default_registry().counter(
+        "msda_cache_build_traces_total",
+        "build_value_cache tracings/eager builds (process-wide)"
+    ).inc(backend=plan.backend, table_dtype=plan.table_dtype)
     cfg = plan.cfg
     fwp_state = getattr(state, "fwp", None)
     v, pix2slot, n_rows = project_values(params, cfg, x_flat, fwp_state)

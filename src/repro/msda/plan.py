@@ -399,8 +399,64 @@ class MSDAPlan:
             self, measured_tilewin=(un["max_bytes"], int(un["mean_bytes"]),
                                     od["max_bytes"], int(od["mean_bytes"])))
 
+    def snapshot(self) -> dict:
+        """Structured twin of :meth:`describe`: every static decision
+        and staged-bytes figure as plain JSON-able values.
+
+        ``describe()`` is a *formatter* over this dict; exporters,
+        ``make_experiments_md`` and the obs dashboard consume the dict
+        directly — no string parsing.  ``decode`` / ``stream`` are
+        ``None`` unless the plan has those consumers."""
+        snap = {
+            "backend": self.backend,
+            "block_q": self.block_q,
+            "block_q_levels": list(self.block_q_levels),
+            "tile_q": self.tile_q,
+            "lane_layout": self.lane_layout,
+            "head_pack": self.head_pack,
+            "table_dtype": self.table_dtype,
+            "quantized_table": self.quantized_table,
+            "value_table_bytes": self.value_table_bytes,
+            "vmem_budget_bytes": self.vmem_budget_bytes,
+            "fits_vmem": self.fits_vmem,
+            "staging_budget_bytes": self.staging_budget_bytes,
+            "budget_source": self.budget_source,
+            "window_bytes": self.window_bytes,
+            "window_bytes_compact": self.window_bytes_compact,
+            "query_order": self.query_order,
+            "measured_tilewin": (list(self.measured_tilewin)
+                                 if self.measured_tilewin is not None
+                                 else None),
+            "n_in": self.n_in,
+            "level_shapes": [list(s) for s in self.level_shapes],
+            "decode": None,
+            "stream": None,
+        }
+        if self.decode_shaped:
+            cb = self.cache_table_bytes
+            snap["decode"] = {
+                "n_queries": self.n_queries,
+                "n_consumers": self.n_consumers,
+                "cache_table_bytes": cb,
+                # staging the cache once vs rebuilding per consumer layer
+                "rebuild_bytes": self.n_consumers * cb,
+                "decode_operand_bytes": self.decode_operand_bytes,
+            }
+        if self.stream_update_rows is not None:
+            snap["stream"] = {
+                "update_rows": self.stream_update_rows,
+                # incremental frame update: at most update_rows table rows
+                # re-staged (no pix2slot restage between keep transitions)
+                # vs a full per-frame cache rebuild
+                "update_bytes": self.table_bytes_for_rows(
+                    self.stream_update_rows, with_indirection=False),
+                "rebuild_bytes": self.cache_table_bytes,
+            }
+        return snap
+
     def describe(self) -> str:
-        """One-line human summary of every static decision.
+        """One-line human summary of every static decision — a pure
+        formatter over :meth:`snapshot`.
 
         ``win=`` reports the windowed kernel's staged-VMEM accounting:
         the dense per-step window, plus (when FWP-compact is on) the
@@ -408,60 +464,57 @@ class MSDAPlan:
         plans report ``q=decode(Nq)`` and the build-once value-cache
         accounting: staging the cache ONCE vs. rebuilding it for each of
         the ``n_consumers`` layers."""
+        s = self.snapshot()
         win = ""
-        if self.window_bytes is not None:
-            win = f", win={self.window_bytes/1024:.0f}KB"
-            if self.window_bytes_compact is not None:
-                win += f"(compact {self.window_bytes_compact/1024:.0f}KB)"
-        if self.query_order != "none":
-            win += f", order={self.query_order}"
-        if self.measured_tilewin is not None:
+        if s["window_bytes"] is not None:
+            win = f", win={s['window_bytes']/1024:.0f}KB"
+            if s["window_bytes_compact"] is not None:
+                win += f"(compact {s['window_bytes_compact']/1024:.0f}KB)"
+        if s["query_order"] != "none":
+            win += f", order={s['query_order']}"
+        if s["measured_tilewin"] is not None:
             # measured per-tile staged window (with_measured_tile_window):
             # unordered -> ordered, max and mean over query tiles
-            umax, umean, omax, omean = self.measured_tilewin
+            umax, umean, omax, omean = s["measured_tilewin"]
             win += (f", tilewin={umax/1024:.0f}->{omax/1024:.0f}KB max / "
                     f"{umean/1024:.0f}->{omean/1024:.0f}KB mean "
                     f"({umean/max(omean, 1):.1f}x)")
         q = ""
-        if self.decode_shaped:
-            cb = self.cache_table_bytes
-            q = (f", q=decode({self.n_queries}), "
+        if s["decode"] is not None:
+            d = s["decode"]
+            cb = d["cache_table_bytes"]
+            q = (f", q=decode({d['n_queries']}), "
                  f"cache={cb/1024:.0f}KB build-once")
-            if self.n_consumers > 1:
-                q += (f" (vs {self.n_consumers}-layer rebuild "
-                      f"{self.n_consumers*cb/1024:.0f}KB, "
-                      f"{float(self.n_consumers):.1f}x)")
-            if self.backend == "pallas_decode" \
-                    and self.decode_operand_bytes is not None:
+            if d["n_consumers"] > 1:
+                q += (f" (vs {d['n_consumers']}-layer rebuild "
+                      f"{d['rebuild_bytes']/1024:.0f}KB, "
+                      f"{float(d['n_consumers']):.1f}x)")
+            if s["backend"] == "pallas_decode" \
+                    and d["decode_operand_bytes"] is not None:
                 # persistent decode staging: the table is staged ONCE per
                 # (batch, head-group) per memory; only the stacked
                 # per-layer operands scale with the layer count — vs. the
                 # n_consumers x table restage a per-layer fused launch pays
-                ob = self.decode_operand_bytes
+                ob = d["decode_operand_bytes"]
                 q += (f", staged=1x{cb/1024:.0f}KB table + "
-                      f"{self.n_consumers}x{ob/1024:.0f}KB operands "
-                      f"(vs {self.n_consumers}x table restage "
-                      f"{self.n_consumers*cb/1024:.0f}KB)")
-        if self.stream_update_rows is not None:
-            # temporal (frame-to-frame) reuse accounting: an incremental
-            # frame update re-projects/re-stages at most stream_update_rows
-            # table rows (no pix2slot restage — the keep geometry is fixed
-            # between keep transitions) vs a full per-frame cache rebuild
-            ub = self.table_bytes_for_rows(self.stream_update_rows,
-                                           with_indirection=False)
-            cb = self.cache_table_bytes
-            q += (f", stream<={self.stream_update_rows}rows/frame "
-                  f"({ub/1024:.0f}KB vs {cb/1024:.0f}KB rebuild, "
-                  f"{cb/max(ub, 1):.1f}x)")
-        return (f"MSDAPlan(backend={self.backend}, block_q={self.block_q}, "
-                f"block_q_levels={self.block_q_levels}, "
-                f"lanes={self.lane_layout}x{self.head_pack}, "
-                f"tdtype={self.table_dtype}, "
-                f"table={self.value_table_bytes/1024:.0f}KB/"
-                f"{self.vmem_budget_bytes/1024:.0f}KB, "
-                f"budget={self.budget_source}"
-                f"({self.staging_budget_bytes/1024:.0f}KB){win}{q}, "
-                f"n_in={self.n_in})")
+                      f"{d['n_consumers']}x{ob/1024:.0f}KB operands "
+                      f"(vs {d['n_consumers']}x table restage "
+                      f"{d['rebuild_bytes']/1024:.0f}KB)")
+        if s["stream"] is not None:
+            st = s["stream"]
+            q += (f", stream<={st['update_rows']}rows/frame "
+                  f"({st['update_bytes']/1024:.0f}KB vs "
+                  f"{st['rebuild_bytes']/1024:.0f}KB rebuild, "
+                  f"{st['rebuild_bytes']/max(st['update_bytes'], 1):.1f}x)")
+        return (f"MSDAPlan(backend={s['backend']}, block_q={s['block_q']}, "
+                f"block_q_levels={tuple(s['block_q_levels'])}, "
+                f"lanes={s['lane_layout']}x{s['head_pack']}, "
+                f"tdtype={s['table_dtype']}, "
+                f"table={s['value_table_bytes']/1024:.0f}KB/"
+                f"{s['vmem_budget_bytes']/1024:.0f}KB, "
+                f"budget={s['budget_source']}"
+                f"({s['staging_budget_bytes']/1024:.0f}KB){win}{q}, "
+                f"n_in={s['n_in']})")
 
 
 def make_plan(cfg, level_shapes: Sequence[Tuple[int, int]], *,

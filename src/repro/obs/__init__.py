@@ -1,0 +1,42 @@
+"""Unified observability layer: metrics, request tracing, exporters.
+
+Everything in this package is host-side Python — no jax imports on the
+hot path, nothing traced.  Engines bump counters / open spans strictly
+outside jit, so instrumentation can never introduce a retrace; the only
+sanctioned in-trace touch point is a *trace-time* counter bump (the
+compile-spy pattern), which executes once per compilation and costs
+zero per executed step.
+"""
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullRegistry,
+    default_registry,
+)
+from repro.obs.trace import NullTracer, Span, Tracer
+from repro.obs.obs import Observability
+from repro.obs.export import (
+    json_snapshot,
+    parse_prometheus_text,
+    prometheus_text,
+    write_json_snapshot,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NullRegistry",
+    "NullTracer",
+    "Observability",
+    "Span",
+    "Tracer",
+    "default_registry",
+    "json_snapshot",
+    "parse_prometheus_text",
+    "prometheus_text",
+    "write_json_snapshot",
+]

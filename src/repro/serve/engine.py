@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import nn
+from repro.obs import Observability
 from repro.serve.buckets import BucketRouter, ShapeBucket, derive_buckets
 from repro.serve.postproc import (PostprocWorker, StarvationError,
                                   softmax_np, topk_detections)
@@ -58,6 +59,8 @@ class DetrRequest:
     callback: Optional[Callable] = None       # invoked on completion
     t_submit: float = 0.0
     t_done: float = 0.0
+    span_queue: Optional[str] = None          # open "queue" span id — the
+    #   request context that carries the trace across the worker thread
 
 
 class DetrServeEngine:
@@ -76,7 +79,8 @@ class DetrServeEngine:
     def __init__(self, cfg, params, *, max_batch: int = 8,
                  backend: Optional[str] = None,
                  resolutions: Optional[tuple] = None,
-                 pipeline_postproc: bool = True, topk: int = 5):
+                 pipeline_postproc: bool = True, topk: int = 5,
+                 obs: Optional[Observability] = None):
         from repro.core.detector import detector_apply
         from repro.msda.autotune import ensure_applied
         ensure_applied()   # load-only: the committed/measured plan table,
@@ -87,30 +91,66 @@ class DetrServeEngine:
         self.max_batch = int(max_batch)
         self.backend = backend
         self.topk = int(topk)
+        # per-engine observability: own registry (counters are exact for
+        # THIS engine) + tracer; Observability.disabled() is the zero-cost
+        # uninstrumented mode the overhead benchmark compares against.
+        # Everything below touches it strictly outside jit, except the
+        # compile counter, whose bump runs at TRACE time by design.
+        self.obs = obs if obs is not None else Observability.default()
+        m = self.obs.metrics
+        self._m_compiles = m.counter(
+            "msda_compiles_total",
+            "detector forward tracings per bucket (trace-time spy: flat "
+            "after AOT warmup = zero retraces)")
+        self._m_requests = m.counter(
+            "serve_requests_total", "requests by bucket and outcome")
+        self._m_qdepth = m.gauge(
+            "serve_queue_depth", "admitted requests waiting per bucket")
+        self._m_backlog = m.gauge(
+            "serve_postproc_backlog", "batches queued to the postproc worker")
+        self._m_latency = m.histogram(
+            "serve_request_latency_seconds",
+            "submit-to-callback latency per completed request")
+        self._m_span = m.histogram(
+            "serve_span_seconds", "per-stage latency (label span=)")
+        self._m_staged = m.counter(
+            "staged_bytes_total",
+            "bytes staged to device per the plan's static accounting")
         if resolutions is None:
             resolutions = (cfg.img_size,)
         self.buckets = derive_buckets(cfg, resolutions, backend=backend)
         self.router = BucketRouter(self.buckets)
+        self._bucket_by_res = {b.resolution: b for b in self.buckets}
         self.queues: dict[int, deque[DetrRequest]] = {
             b.resolution: deque() for b in self.buckets}
         self.finished: list[DetrRequest] = []
         self.rejected: list[DetrRequest] = []
         self._lock = threading.Lock()
-        # compile-count spy: the increment executes at TRACE time only,
-        # so after the AOT warmup below it must never move again —
-        # tests/test_serve.py asserts zero recompiles under mixed load
-        self.compile_count = 0
         self._compiled = {}
         for b in self.buckets:
-            def fwd(p, img, _cfg=b.cfg):
-                self.compile_count += 1
+            # compile-count spy: the increment executes at TRACE time
+            # only, so after the AOT warmup below it must never move
+            # again — tests/test_serve.py asserts zero recompiles under
+            # mixed load against this registry counter
+            def fwd(p, img, _cfg=b.cfg, _res=b.resolution):
+                self._m_compiles.inc(bucket=str(_res))
                 return detector_apply(p, _cfg, img, backend=self.backend)
             spec = jax.ShapeDtypeStruct(
                 (self.max_batch, 3, b.resolution, b.resolution), jnp.float32)
             self._compiled[b.resolution] = \
                 jax.jit(fwd).lower(self.params, spec).compile()
+            self.obs.tracer.event("plan", engine="DetrServeEngine",
+                                  bucket=b.resolution,
+                                  plan=b.plan.snapshot())
         self._post = PostprocWorker(self._complete,
-                                    pipelined=pipeline_postproc)
+                                    pipelined=pipeline_postproc,
+                                    obs=self.obs)
+
+    @property
+    def compile_count(self) -> int:
+        """Total detector tracings across buckets — the zero-retrace spy,
+        now a view over the ``msda_compiles_total`` registry counter."""
+        return int(self._m_compiles.total())
 
     # ---- introspection -----------------------------------------------------
     def describe(self) -> str:
@@ -141,11 +181,19 @@ class DetrServeEngine:
         bucket, reason = self.router.admit(req.image)
         if bucket is None:
             req.error = reason
+            self._m_requests.inc(bucket="none", outcome="rejected")
             with self._lock:
                 self.rejected.append(req)
             return False
-        req.bucket = bucket.resolution
-        self.queues[bucket.resolution].append(req)
+        res = bucket.resolution
+        req.bucket = res
+        # the "queue" span opens here and is closed by step() at dispatch;
+        # its id rides on the request (the cross-thread trace context)
+        req.span_queue = self.obs.tracer.start("queue", rid=req.rid,
+                                               t=req.t_submit, bucket=res)
+        self._m_requests.inc(bucket=str(res), outcome="admitted")
+        self.queues[res].append(req)
+        self._m_qdepth.set(len(self.queues[res]), bucket=str(res))
         return True
 
     # ---- one engine step ---------------------------------------------------
@@ -160,22 +208,41 @@ class DetrServeEngine:
             return 0
         q = self.queues[res]
         batch = [q.popleft() for _ in range(min(self.max_batch, len(q)))]
+        tr = self.obs.tracer
+        self._m_qdepth.set(len(q), bucket=str(res))
+        for req in batch:
+            if req.span_queue:
+                sp = tr.end(req.span_queue)
+                req.span_queue = None
+                self._m_span.observe(sp.duration_s, span="queue")
         imgs = np.zeros((self.max_batch, 3, res, res), np.float32)
         for i, req in enumerate(batch):
             im = np.asarray(req.image, np.float32)
             imgs[i, :, :im.shape[1], :im.shape[2]] = im     # pad up
+        # the "device" span opens at dispatch and is closed by the
+        # postproc stage once the transfer completes (worker thread)
+        dev_span = tr.start("device", bucket=res, n=len(batch))
         cls_logits, boxes, _aux = self._compiled[res](self.params,
                                                       jnp.asarray(imgs))
+        # build-once value cache per dispatched memory (static accounting)
+        self._m_staged.inc(
+            self._bucket_by_res[res].plan.cache_table_bytes, mode="build")
         # hand the device arrays straight to the postproc stage: the
         # worker's np.asarray blocks on the transfer while this thread is
         # free to dispatch the next bucket's micro-batch
-        self._post.submit((batch, cls_logits, boxes))
+        self._post.submit((batch, cls_logits, boxes, dev_span))
+        self._m_backlog.set(self._post.backlog)
         return len(batch)
 
     def _complete(self, item) -> None:
-        batch, cls_logits, boxes = item
+        batch, cls_logits, boxes, dev_span = item
+        tr = self.obs.tracer
         probs = softmax_np(np.asarray(cls_logits))
         boxes = np.asarray(boxes)
+        if dev_span:
+            sp = tr.end(dev_span)    # after np.asarray: transfer included
+            self._m_span.observe(sp.duration_s, span="device")
+        post_span = tr.start("postproc", n=len(batch))
         for i, req in enumerate(batch):
             req.cls_probs = probs[i]
             req.boxes = boxes[i]
@@ -183,9 +250,16 @@ class DetrServeEngine:
             req.t_done = time.perf_counter()
             req.done = True
             if req.callback is not None:
-                req.callback(req)
+                with tr.span("callback", rid=req.rid):
+                    req.callback(req)
+            self._m_latency.observe(req.t_done - req.t_submit,
+                                    bucket=str(req.bucket))
+            self._m_requests.inc(bucket=str(req.bucket), outcome="completed")
             with self._lock:
                 self.finished.append(req)
+        if post_span:
+            sp = tr.end(post_span)
+            self._m_span.observe(sp.duration_s, span="postproc")
 
     def drain(self) -> None:
         """Barrier on the post-processing stage only (no new dispatches)."""
@@ -199,18 +273,27 @@ class DetrServeEngine:
             steps += 1
         self._post.drain()
         if self.pending():
+            now = time.perf_counter()
             raise StarvationError({
                 "engine": "DetrServeEngine", "steps": steps,
                 "queued": {r: len(q) for r, q in self.queues.items() if q},
+                # per-bucket age of the head (oldest) queued request,
+                # from the same perf_counter timeline as the queue spans
+                "oldest_age_s": {r: round(now - q[0].t_submit, 6)
+                                 for r, q in self.queues.items() if q},
                 "finished": len(self.finished),
                 "rejected": len(self.rejected)})
+        self.obs.flush_metrics()
         return self.finished
 
     def close(self) -> None:
         """Shut down the post-processing worker (joins its thread);
         idempotent, and ``submit``/``step`` pipelining into the worker
-        raises once closed."""
+        raises once closed. Flushes a final metrics snapshot into the
+        JSONL event log (when one is attached) and closes the sink."""
         self._post.close()
+        self.obs.flush_metrics()
+        self.obs.close()
 
     def __enter__(self) -> "DetrServeEngine":
         return self
@@ -237,6 +320,8 @@ class StreamSession:
     queue: deque = dataclasses.field(default_factory=deque)
     results: list = dataclasses.field(default_factory=list)
     frames_done: int = 0
+    t_queue: deque = dataclasses.field(default_factory=deque)  # submit
+    #   times (perf_counter) parallel to ``queue`` — starvation ages
 
 
 class StreamingDetrEngine:
@@ -268,7 +353,8 @@ class StreamingDetrEngine:
     def __init__(self, attn_cfg, decoder_cfg, params: dict,
                  level_shapes, *, max_sessions: int = 2,
                  backend: Optional[str] = None, stream_cfg=None,
-                 update_fwp: bool = True):
+                 update_fwp: bool = True,
+                 obs: Optional[Observability] = None):
         from repro.msda import MSDAPlan, backend_info, make_plan  # noqa: F401
         from repro.msda.autotune import ensure_applied
         from repro.stream import (TemporalCacheManager,
@@ -290,9 +376,18 @@ class StreamingDetrEngine:
         self.plan = dataclasses.replace(
             plan, stream_update_rows=stream_update_cap(plan,
                                                        scfg.update_frac))
+        # engine and manager share ONE bundle: the manager's frame/staged
+        # counters and the engine's spans land in the same registry/log
+        self.obs = obs if obs is not None else Observability.default()
+        self._m_span = self.obs.metrics.histogram(
+            "stream_span_seconds", "per-stage frame latency (label span=)")
+        self._m_frame_latency = self.obs.metrics.histogram(
+            "stream_frame_latency_seconds", "full step latency per frame")
+        self.obs.tracer.event("plan", engine="StreamingDetrEngine",
+                              plan=self.plan.snapshot())
         self.mgr = TemporalCacheManager(
             self.plan, params["decoder"]["value"], scfg,
-            batch=self.max_sessions)
+            batch=self.max_sessions, obs=self.obs)
         self.sessions: dict[int, StreamSession] = {}
         self._free_slots = list(range(self.max_sessions))
         self._next_sid = 0
@@ -363,7 +458,9 @@ class StreamingDetrEngine:
 
     def submit_frame(self, sid: int, memory: np.ndarray) -> None:
         """Queue one frame's encoder memory (N_in, D) for session sid."""
-        self.sessions[sid].queue.append(np.asarray(memory))
+        sess = self.sessions[sid]
+        sess.queue.append(np.asarray(memory))
+        sess.t_queue.append(time.perf_counter())
 
     # ---- jitted forward ----------------------------------------------------
     def _fwd_impl(self, params, memory, v, staged, pix2slot, keep_idx,
@@ -392,20 +489,25 @@ class StreamingDetrEngine:
         pending = {s.slot: s for s in self.sessions.values() if s.queue}
         if not pending:
             return 0
+        t_step0 = time.perf_counter()
+        tr = self.obs.tracer
         d = self.attn_cfg.d_model
-        rows = []
-        for slot in range(self.max_sessions):
-            if slot in pending:
-                rows.append(jnp.asarray(pending[slot].queue.popleft()))
-            elif self._last_memory is not None:
-                # idle slot: replay its last memory — zero dirty tiles,
-                # zero incremental work attributed to it
-                rows.append(self._last_memory[slot])
-            else:
-                rows.append(jnp.zeros((self.plan.n_in, d)))
-        memory = jnp.stack(rows)
+        with tr.span("frame_in", n=len(pending)) as _:
+            rows = []
+            for slot in range(self.max_sessions):
+                if slot in pending:
+                    rows.append(jnp.asarray(pending[slot].queue.popleft()))
+                    pending[slot].t_queue.popleft()
+                elif self._last_memory is not None:
+                    # idle slot: replay its last memory — zero dirty
+                    # tiles, zero incremental work attributed to it
+                    rows.append(self._last_memory[slot])
+                else:
+                    rows.append(jnp.zeros((self.plan.n_in, d)))
+            memory = jnp.stack(rows)
         self._last_memory = memory
         cache, fstats = self.mgr.step(memory)
+        dec_span = tr.start("decode", n=len(pending))
         cls_logits, boxes, freq = self._fwd(
             self.params, memory, cache.v, cache.staged, cache.pix2slot,
             cache.keep_idx, cache.scale)
@@ -413,6 +515,10 @@ class StreamingDetrEngine:
             self.mgr.observe(freq)
         probs = np.asarray(jax.nn.softmax(cls_logits, axis=-1))
         boxes = np.asarray(boxes)
+        if dec_span:
+            sp = tr.end(dec_span)    # after np.asarray: compute included
+            self._m_span.observe(sp.duration_s, span="decode")
+        self._m_frame_latency.observe(time.perf_counter() - t_step0)
         for slot, sess in pending.items():
             sess.results.append({
                 "frame": sess.frames_done,
@@ -483,11 +589,18 @@ class StreamingDetrEngine:
         queued = {s.sid: len(s.queue)
                   for s in self.sessions.values() if s.queue}
         if queued:
+            now = time.perf_counter()
             raise StarvationError({
                 "engine": "StreamingDetrEngine", "steps": steps,
                 "queued": queued,
+                # per-session age of the oldest queued frame (same
+                # perf_counter timeline the frame spans use)
+                "oldest_age_s": {s.sid: round(now - s.t_queue[0], 6)
+                                 for s in self.sessions.values()
+                                 if s.t_queue},
                 "frames_done": sum(s.frames_done
                                    for s in self.sessions.values())})
+        self.obs.flush_metrics()
 
     def report(self) -> dict:
         """The manager's cumulative rebuild-vs-incremental accounting."""

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Callable, Optional
 
 import numpy as np
@@ -26,13 +27,26 @@ class StarvationError(RuntimeError):
     The seed engines silently returned in this situation, dropping the
     queued requests on the floor; every drain loop now raises this
     instead. ``report`` carries the starvation snapshot (queue depths,
-    steps executed, completions) so callers can log or re-drain."""
+    steps executed, completions) so callers can log or re-drain. The
+    engines stamp it with wall/monotonic timestamps and, when they track
+    per-request submit times (span data), a per-queue ``oldest_age_s``
+    map — the message calls out the most-starved request's age."""
 
     def __init__(self, report: dict):
         self.report = dict(report)
-        super().__init__(
-            "serving loop starved (work still queued at max_steps): "
-            + ", ".join(f"{k}={v}" for k, v in sorted(self.report.items())))
+        # wall clock for log correlation, perf_counter for span math —
+        # the same monotonic timeline the queue spans are recorded on
+        self.report.setdefault("wall_time", time.time())
+        self.report.setdefault("t_monotonic", time.perf_counter())
+        msg = ("serving loop starved (work still queued at max_steps): "
+               + ", ".join(f"{k}={v}"
+                           for k, v in sorted(self.report.items())))
+        ages = self.report.get("oldest_age_s") or {}
+        if ages:
+            worst = max(ages, key=lambda k: ages[k])
+            msg += (f"; most-starved request (queue {worst}) has waited "
+                    f"{ages[worst]:.3f}s")
+        super().__init__(msg)
 
 
 def softmax_np(x: np.ndarray) -> np.ndarray:
@@ -79,13 +93,21 @@ class PostprocWorker:
     queue."""
 
     def __init__(self, process: Callable, *, pipelined: bool = True,
-                 name: str = "serve-postproc"):
+                 name: str = "serve-postproc", obs=None):
         self._process = process
         self.pipelined = bool(pipelined)
         self._exc: Optional[BaseException] = None
         self._stopped = False
         self._q: queue.Queue = queue.Queue()
         self._thread: Optional[threading.Thread] = None
+        if obs is None:
+            from repro.obs import Observability
+            obs = Observability.disabled()
+        self.obs = obs
+        self._m_items = obs.metrics.counter(
+            "serve_postproc_items_total", "batches handed to the worker")
+        self._m_backlog = obs.metrics.gauge(
+            "serve_postproc_backlog", "batches queued to the postproc worker")
         if self.pipelined:
             self._thread = threading.Thread(target=self._loop, name=name,
                                             daemon=True)
@@ -98,8 +120,10 @@ class PostprocWorker:
                 "enqueue into a dead queue")
         if self._exc is not None:
             raise self._exc
+        self._m_items.inc()
         if self.pipelined:
             self._q.put(item)
+            self._m_backlog.set(self.backlog)
         else:
             self._process(item)
 
@@ -115,6 +139,7 @@ class PostprocWorker:
                 self._exc = e
             finally:
                 self._q.task_done()
+                self._m_backlog.set(self.backlog)
 
     @property
     def backlog(self) -> int:

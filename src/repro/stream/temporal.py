@@ -44,7 +44,9 @@ across keep transitions in tests/test_stream.py).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 from typing import Optional, Tuple
 
 import jax
@@ -56,6 +58,7 @@ from repro.msda import plan as plan_lib
 from repro.msda.cache import (MSDAValueCache, build_value_cache,
                               cache_act_scale, update_value_cache_rows)
 from repro.msda.pipeline import MSDAPipelineState
+from repro.obs import Observability
 from repro.stream.tiles import TileGeometry, changed_tiles, tile_geometry
 
 
@@ -126,13 +129,35 @@ class TemporalCacheManager:
     over arrays, so nothing retraces frame to frame."""
 
     def __init__(self, plan, value_params: dict,
-                 scfg: Optional[StreamConfig] = None, *, batch: int = 1):
+                 scfg: Optional[StreamConfig] = None, *, batch: int = 1,
+                 obs: Optional[Observability] = None):
         scfg = resolve_stream_config(scfg)
         if scfg.diff_channel_stride < 1:
             raise ValueError("diff_channel_stride must be >= 1")
         self.params = value_params
         self.scfg = scfg
         self.batch = int(batch)
+        # unified telemetry: standalone managers get their own enabled
+        # registry (the trace_counts view below must count for real);
+        # the streaming engine passes its bundle in so manager counters
+        # and engine spans share one registry/event log
+        self.obs = obs if obs is not None else Observability.default(
+            capacity=1024)
+        m = self.obs.metrics
+        self._m_traces = m.counter(
+            "msda_traces_total",
+            "jitted-path tracings by fn (trace-time spies: flat after "
+            "warmup = session churn never retraces)")
+        self._m_frames = m.counter(
+            "stream_frames_total", "frames by update mode")
+        self._m_rebuilds = m.counter(
+            "stream_rebuilds_total", "full rebuilds by reason")
+        self._m_staged = m.counter(
+            "staged_bytes_total", "bytes actually staged, by update mode")
+        self._m_dirty = m.gauge(
+            "stream_dirty_slots", "dirty slot count of the last frame")
+        self._m_span = m.histogram(
+            "stream_span_seconds", "per-stage frame latency (label span=)")
 
         # ---- mutable stream state (host-held, arrays on device) ----------
         self.cache: Optional[MSDAValueCache] = None
@@ -150,10 +175,6 @@ class TemporalCacheManager:
         self._geometry_stale = True                 # first frame: full build
         self._pending_admit: set = set()            # slots scheduled for a
         #   per-slot admission build on the next frame (reset_slot)
-        # trace-time spies: each jitted impl bumps its counter in the
-        # traced body, so the counts move ONLY on (re)compilation —
-        # tests assert session churn never retraces
-        self.trace_counts = {"build": 0, "frame": 0, "restage": 0}
         self.frame_index = 0
         self.rebuild_frames = 0
         self.partial_frames = 0                     # per-level restages
@@ -162,6 +183,23 @@ class TemporalCacheManager:
         self.last_stats: Optional[dict] = None
 
         self._reconfigure(plan)
+
+    @contextlib.contextmanager
+    def _timed_span(self, name: str, **attrs):
+        """Trace span + ``stream_span_seconds{span=name}`` histogram."""
+        t0 = time.perf_counter()
+        with self.obs.tracer.span(name, **attrs):
+            yield
+        self._m_span.observe(time.perf_counter() - t0, span=name)
+
+    @property
+    def trace_counts(self) -> dict:
+        """Trace-time spies: each jitted impl bumps ``msda_traces_total``
+        in its traced body, so the counts move ONLY on (re)compilation —
+        tests assert session churn never retraces. A dict view over the
+        registry counter (the same numbers production scrapes)."""
+        return {k: int(self._m_traces.value(fn=k))
+                for k in ("build", "frame", "restage")}
 
     def _reconfigure(self, plan) -> None:
         """(Re-)derive every plan-dependent static AND re-jit the compiled
@@ -223,7 +261,7 @@ class TemporalCacheManager:
 
     # ---- jitted internals -------------------------------------------------
     def _build_impl(self, params, x_flat, fwp):
-        self.trace_counts["build"] += 1
+        self._m_traces.inc(fn="build")
         return build_value_cache(params, self.plan, x_flat,
                                  MSDAPipelineState(fwp=fwp))
 
@@ -279,7 +317,7 @@ class TemporalCacheManager:
         dirty count fits the budget, else it discards the result and
         rebuilds — a rare path by construction, and fusing diff+update
         into one program keeps the per-frame dispatch count at one."""
-        self.trace_counts["frame"] += 1
+        self._m_traces.inc(fn="frame")
         changed, slot_dirty, nd = self._diff_impl(x_new, x_ref, keep_idx)
         v, staged, x_ref = self._update_impl(
             params, x_new, x_ref, v, staged, keep_idx, keep_mask, changed,
@@ -294,7 +332,7 @@ class TemporalCacheManager:
         ``new_keep_idx``), under the frozen act/table quant scales —
         the same row-update path as the incremental frame, just with a
         fresh slot->pixel map for the restaged ranges."""
-        self.trace_counts["restage"] += 1
+        self._m_traces.inc(fn="restage")
         tmp = MSDAValueCache(v=v, pix2slot=None, keep_idx=new_keep_idx,
                              n_rows=self._n_rows,
                              slot_windows=self._slot_windows,
@@ -489,7 +527,9 @@ class TemporalCacheManager:
             partial = self._transition_levels()
             if partial:
                 restaged_levels = partial
-                partial_bytes = self._partial_restage(x_new, partial)
+                with self._timed_span("scatter", kind="partial-restage",
+                                          levels=partial):
+                    partial_bytes = self._partial_restage(x_new, partial)
         admitted: Tuple[int, ...] = ()
         admit_bytes = 0
         if self._pending_admit and self.cache is not None \
@@ -501,31 +541,36 @@ class TemporalCacheManager:
             # just refreshed, so they contribute zero dirty tiles)
             admitted = tuple(sorted(self._pending_admit))
             self._pending_admit.clear()
-            admit_bytes = self._admit_slots(x_new, admitted)
+            with self._timed_span("scatter", kind="admission",
+                                      slots=admitted):
+                admit_bytes = self._admit_slots(x_new, admitted)
         if self.cache is None or self._geometry_stale or force_full \
                 or plan_change:
             mode, reason = "rebuild", (
                 "first-frame" if self.cache is None else
                 "plan-change" if plan_change else
                 "keep-transition" if keep_transition else "forced")
-            self._full_build(x_new)
+            with self._timed_span("rebuild", reason=reason):
+                self._full_build(x_new)
             staged_bytes = self._full_bytes
         else:
             keep_idx = self.cache.keep_idx if self._compact else None
             keep_mask = None
             if self.plan.cfg.fwp_mode == "mask":
                 keep_mask = self.fwp.keep_mask
-            nd, tiles, v, staged, x_ref = self._jit_frame(
-                self.params, x_new, self.x_ref, self.cache.v,
-                self.cache.staged, keep_idx, keep_mask, self.act_scale,
-                self.cache.scale)
-            n_dirty = int(nd)
-            tiles_hit = int(tiles)
+            with self._timed_span("diff"):
+                nd, tiles, v, staged, x_ref = self._jit_frame(
+                    self.params, x_new, self.x_ref, self.cache.v,
+                    self.cache.staged, keep_idx, keep_mask, self.act_scale,
+                    self.cache.scale)
+                n_dirty = int(nd)
+                tiles_hit = int(tiles)
             if n_dirty > self.update_rows:
                 # speculative update discarded: dirt exceeds the static
                 # budget, the table must be rebuilt wholesale
                 mode, reason = "rebuild", "dirty>budget"
-                self._full_build(x_new)
+                with self._timed_span("rebuild", reason=reason):
+                    self._full_build(x_new)
                 staged_bytes = partial_bytes + admit_bytes \
                     + self._full_bytes
             else:
@@ -554,6 +599,12 @@ class TemporalCacheManager:
             "admitted_slots": admitted,
             "update_rows": self.update_rows,
         }
+        # unified metrics mirror of last_stats (host-side, outside jit)
+        self._m_frames.inc(mode=mode)
+        self._m_staged.inc(staged_bytes, mode=mode)
+        if mode == "rebuild":
+            self._m_rebuilds.inc(reason=reason)
+        self._m_dirty.set(n_dirty)
         return self.cache, self.last_stats
 
     def observe(self, freq: jnp.ndarray) -> bool:

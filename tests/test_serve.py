@@ -132,6 +132,11 @@ def test_aot_buckets_zero_recompiles_under_mixed_load():
     engine = DetrServeEngine(cfg, _params(cfg), max_batch=2,
                              resolutions=(32, 64))
     assert engine.compile_count == len(engine.buckets) == 2
+    # compile_count is a view over the registry counter: one labelled
+    # series per bucket, each bumped exactly once at trace time
+    m = engine.obs.metrics.get("msda_compiles_total")
+    assert m.total() == 2
+    assert m.value(bucket="32") == 1 and m.value(bucket="64") == 1
     imgs32, imgs64 = _images(3, 32), _images(2, 64)
     rid = 0
     for im in list(imgs32) + list(imgs64):
@@ -145,6 +150,7 @@ def test_aot_buckets_zero_recompiles_under_mixed_load():
     done = engine.run_until_drained()
     assert len(done) == rid
     assert engine.compile_count == 2, "mixed load recompiled"
+    assert engine.obs.metrics.get("msda_compiles_total").total() == 2
     assert sorted(r.rid for r in done) == list(range(rid))
     for r in done:
         assert r.cls_probs.shape == (8, cfg.n_classes + 1)
@@ -269,7 +275,17 @@ def test_starvation_error_is_runtime_error_with_report():
     from repro.serve.lm import ServeEngine  # noqa: F401 — import side check
     err = StarvationError({"queued": 3})
     assert isinstance(err, RuntimeError)
-    assert err.report == {"queued": 3} and "queued=3" in str(err)
+    assert err.report["queued"] == 3 and "queued=3" in str(err)
+    # the report is stamped (wall clock for logs, perf_counter to line up
+    # with span data) unless the caller already supplied the keys
+    assert err.report["wall_time"] > 0
+    assert err.report["t_monotonic"] > 0
+
+
+def test_starvation_error_reports_most_starved_age():
+    err = StarvationError({"queued": {32: 3, 64: 1},
+                           "oldest_age_s": {32: 1.25, 64: 0.5}})
+    assert "most-starved request (queue 32) has waited 1.250s" in str(err)
 
 
 # --------------------------------------------------------------------------
